@@ -1,0 +1,123 @@
+"""Roofline derivation from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape × mesh) cell, from the trip-count-corrected HLO stats:
+
+  compute    = flops_per_chip / 197 TF/s            (bf16 MXU peak)
+  memory     = hbm_bytes_per_chip / 819 GB/s
+  collective = wire_bytes_per_chip / 50 GB/s        (per-spec formula)
+               [refined column: DCN bytes at 6.25 GB/s/chip = 25 GB/s
+                per host NIC / 4 chips — the multi-lane resource]
+
+  MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N·B (decode);
+                N_active for MoE.  ratio = MODEL_FLOPS / HLO_FLOPS
+                exposes remat/causal-masking/capacity waste.
+
+  bottleneck = argmax(term); roofline fraction = compute / max(terms)
+               (≈ achievable MFU fraction under perfect overlap).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
+           [--csv out.csv] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.configs import all_archs, cells, resolve, SHAPES
+
+RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN_PER_CHIP = 25e9 / 4
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = resolve(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 tok/seq
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> dict | None:
+    p = RUNS / mesh / f"{arch}__{shape}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def terms(r: dict) -> dict:
+    st = r["hlo_stats"]
+    compute = st["flops"] / PEAK
+    memory = st["bytes"] / HBM
+    coll = (st["ici_wire"] + st["dcn_wire"]) / ICI        # per-spec formula
+    coll_refined = st["ici_wire"] / ICI + st["dcn_wire"] / DCN_PER_CHIP
+    mf = model_flops(r["arch"], r["shape"])
+    hlo_total = st["flops"] * r["chips"]
+    out = {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "collective_refined_s": coll_refined,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "dcn_frac": st["dcn_wire"] / max(st["ici_wire"] + st["dcn_wire"], 1),
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: out[k])
+    out["bottleneck"] = dom.replace("_s", "")
+    out["roofline_fraction"] = compute / max(out[dom], 1e-12)
+    # MFU if the step ran exactly at the dominant term's duration
+    out["model_mfu_bound"] = mf / (r["chips"] * PEAK * max(out[dom], 1e-12))
+    return out
+
+
+def build_table(mesh: str) -> list[dict]:
+    rows = []
+    for a in all_archs():
+        for s in cells(a):
+            r = load_cell(a, s, mesh)
+            if r is None:
+                continue
+            t = terms(r)
+            t.update(arch=a, shape=s, mesh=r["mesh"], chips=r["chips"])
+            rows.append(t)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--csv", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = build_table(args.mesh)
+    if not rows:
+        print("no dry-run artifacts; run: python -m repro.launch.dryrun --all")
+        return 1
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "roofline_fraction", "useful_ratio",
+           "model_mfu_bound", "dcn_frac"]
+    lines = [",".join(hdr)]
+    for t in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(",".join(
+            f"{t[h]:.4g}" if isinstance(t[h], float) else str(t[h])
+            for h in hdr))
+    out = "\n".join(lines)
+    print(out)
+    if args.csv:
+        pathlib.Path(args.csv).write_text(out + "\n")
+    if args.md:
+        print("\n| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for ln in lines[1:]:
+            print("| " + " | ".join(ln.split(",")) + " |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

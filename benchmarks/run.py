@@ -1,0 +1,43 @@
+"""Benchmark entry point: one function per paper table + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper tables run on an
+8-device CPU mesh in a subprocess so this process keeps one device), then
+the roofline table derived from the multi-pod dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-tables] [--skip-roofline]
+"""
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+    rc = 0
+
+    if not args.skip_tables:
+        print("== paper-table benchmarks (8-device CPU mesh, subprocess) ==")
+        env = dict(os.environ)
+        root = pathlib.Path(__file__).resolve().parents[1]
+        env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.paper_tables"],
+            text=True, env=env, cwd=root, timeout=3600)
+        rc |= r.returncode
+
+    if not args.skip_roofline:
+        from benchmarks import roofline
+        for mesh in ("single", "multi"):
+            print(f"\n== roofline ({mesh}-pod dry-run) ==")
+            code = roofline.main(["--mesh", mesh])
+            rc |= 0 if code in (0, 1) else code
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

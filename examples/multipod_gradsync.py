@@ -1,0 +1,93 @@
+"""Gradient sync through the paper's decomposition, end to end.
+
+    PYTHONPATH=src python examples/multipod_gradsync.py
+
+Trains a reduced model for a few steps on a 2-pod debug mesh with each
+grad-sync backend and shows (a) identical losses for native vs lane
+(bitwise-equivalent reductions), (b) the int8-compressed DCN hop's loss
+staying within noise, and (c) the per-strategy collective mix counted
+from the lowered HLO — the dry-run methodology applied to the technique
+itself.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import pathlib                                                 # noqa: E402
+import sys                                                     # noqa: E402
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+from jax.sharding import PartitionSpec as P, NamedSharding     # noqa: E402
+
+from repro.configs import resolve                              # noqa: E402
+from repro.core import LaneTopology                            # noqa: E402
+from repro.models import init_model                            # noqa: E402
+from repro.models.transformer import loss_fn                   # noqa: E402
+from repro.optim import grad_sync                              # noqa: E402
+from repro.launch.hlo_stats import analyze                     # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    cfg = resolve("llama3.2-3b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (16, 32)).astype(np.int32)
+    labels = np.roll(toks, -1, axis=1)
+
+    bspec = P(("pod", "data"), None)
+    tok_arr = jax.device_put(toks, NamedSharding(mesh, bspec))
+    lab_arr = jax.device_put(labels, NamedSharding(mesh, bspec))
+    pspecs = jax.tree.map(lambda _: P(), params)
+
+    def make(strategy):
+        def per_replica(p, t, l):
+            loss, g = jax.value_and_grad(
+                lambda pp: loss_fn(pp, cfg, t, l))(p)
+            g = grad_sync(g, topo, strategy)
+            if strategy == "lane_zero1":
+                g = g[0]     # sharded flat bucket
+            return jax.lax.pmean(loss, ("pod", "data")), g
+        return jax.jit(jax.shard_map(
+            per_replica, mesh=mesh, in_specs=(pspecs, bspec, bspec),
+            out_specs=(P(), None if strategy == "lane_zero1" else pspecs),
+            check_vma=False))
+
+    results = {}
+    for strat in ("native", "lane", "lane_int8"):
+        f = make(strat)
+        lowered = f.lower(params, tok_arr, lab_arr)
+        stats = analyze(lowered.compile().as_text(), pod_size=4)
+        loss, grads = f(params, tok_arr, lab_arr)
+        gn = float(jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                for g in jax.tree.leaves(grads))))
+        results[strat] = (float(loss), gn, stats)
+        kinds = {k: v["count"] for k, v in stats["coll"].items()}
+        print(f"{strat:10s} loss={float(loss):.4f} |grad|={gn:.5f} "
+              f"colls={kinds} dcn_wire={stats['dcn_wire']/1e6:.2f}MB "
+              f"ici_wire={stats['ici_wire']/1e6:.2f}MB")
+
+    l0, g0, _ = results["native"]
+    l1, g1, _ = results["lane"]
+    assert abs(g0 - g1) / g0 < 1e-5, "lane must equal native"
+    _, gq, _ = results["lane_int8"]
+    print(f"\nint8 DCN hop grad-norm deviation: {abs(gq-g0)/g0:.2%} "
+          f"(compression error, bounded by tests)")
+    dn = results["native"][2]["dcn_wire"]
+    dl = results["lane"][2]["dcn_wire"]
+    dq = results["lane_int8"][2]["dcn_wire"]
+    print(f"DCN wire bytes  native={dn/1e6:.2f}MB  lane={dl/1e6:.2f}MB  "
+          f"lane_int8={dq/1e6:.2f}MB")
+    print("full-lane property: the lane strategies stripe the cross-pod "
+          "payload 1/n per chip; int8 additionally halves DCN bytes 4x")
+
+
+if __name__ == "__main__":
+    main()

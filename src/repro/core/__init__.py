@@ -1,0 +1,27 @@
+"""repro.core — the paper's contribution: multi-lane collective decomposition.
+
+Träff 2019, "Decomposing Collectives for Exploiting Multi-lane
+Communication", transplanted to TPU meshes: nodecomm = intra-pod axes,
+lanecomm = cross-pod axis.  See DESIGN.md §2 for the mapping.
+"""
+from .lane import LaneTopology, PRODUCTION, SINGLE_POD
+from .collectives import (
+    allreduce_lane, reduce_scatter_lane, allgather_lane, bcast_lane,
+    alltoall_lane, reduce_lane, gather_lane, scatter_lane,
+    native_allreduce, native_allgather, native_reduce_scatter,
+    native_alltoall,
+)
+from .pipeline import pipelined_bcast_lane, pipeline_steps
+from .costmodel import CollectiveCost, mockup_cost, klane_time, HW
+from .guidelines import check_guideline, GuidelineResult, time_fn
+
+__all__ = [
+    "LaneTopology", "PRODUCTION", "SINGLE_POD",
+    "allreduce_lane", "reduce_scatter_lane", "allgather_lane", "bcast_lane",
+    "alltoall_lane", "reduce_lane", "gather_lane", "scatter_lane",
+    "native_allreduce", "native_allgather", "native_reduce_scatter",
+    "native_alltoall",
+    "pipelined_bcast_lane", "pipeline_steps",
+    "CollectiveCost", "mockup_cost", "klane_time", "HW",
+    "check_guideline", "GuidelineResult", "time_fn",
+]

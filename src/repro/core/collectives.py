@@ -1,0 +1,368 @@
+"""Full-lane collective mock-ups (paper §3, Listings 1-6), for TPU meshes.
+
+Every function here is the JAX/shard_map transplant of one of the paper's
+performance-guideline implementations: the payload is split evenly over the
+*node*-level processes, the inter-node part runs as n concurrent collectives
+over the *lane* communicators (each carrying 1/n of the payload — the
+"full-lane" property), and node-level collectives split/reassemble.
+
+They must be called **inside** ``jax.shard_map`` (or any context where the
+mesh axes named by the :class:`~repro.core.lane.LaneTopology` are bound) and
+operate on the per-device local shard.  The leading dimension of ``x`` plays
+the role of the MPI element count ``c``.
+
+SPMD adaptations (documented per function; see DESIGN.md §2):
+
+* MPI's rooted collectives (bcast/gather/scatter/reduce) have no exact SPMD
+  twin — every device runs the same program.  Roots are expressed with
+  masks/selects; where MPI would send nothing, XLA still moves a masked
+  operand (the paper makes the mirror-image observation that MPI lacks
+  "restricted" collectives, §3.1).  The cost model in
+  :mod:`repro.core.costmodel` accounts for both the ideal (paper) and the
+  SPMD-emulated volumes.
+* MPI derived-datatype zero-copy reassembly becomes *layout choice*: each
+  composition below is ordered so the result lands in global-rank-major
+  order without a transpose wherever possible; where the paper itself needs
+  a pre-permutation (reduce_scatter_block, Listing 5) we need the same
+  transpose and say so.
+* Multi-axis node communicators ((data, model) inside a pod) use
+  per-axis sequential collectives — the TPU-native per-torus-dimension
+  form.  Sequential RS/AG over (A, B) compose to the product collective
+  with row-major block order, matching ``LaneTopology.node_rank``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .lane import LaneTopology
+
+__all__ = [
+    "allreduce_lane", "reduce_scatter_lane", "allgather_lane", "bcast_lane",
+    "alltoall_lane", "reduce_lane", "gather_lane", "scatter_lane",
+    "native_allreduce", "native_allgather", "native_reduce_scatter",
+    "native_alltoall",
+]
+
+
+# --------------------------------------------------------------------------
+# helpers: sequential per-axis reduce-scatter / all-gather (exact inverses)
+# --------------------------------------------------------------------------
+
+def _rs_seq(x, axes: Sequence[str]):
+    """Reduce-scatter over each axis in order; leading dim shrinks by n."""
+    for a in axes:
+        sz = lax.axis_size(a)
+        if x.shape[0] % sz:
+            raise ValueError(
+                f"leading dim {x.shape[0]} not divisible by axis {a!r} size {sz}")
+        x = lax.psum_scatter(x, a, scatter_dimension=0, tiled=True)
+    return x
+
+
+def _ag_seq(x, axes: Sequence[str]):
+    """All-gather over each axis in *reverse* order — inverse of _rs_seq."""
+    for a in reversed(tuple(axes)):
+        x = lax.all_gather(x, a, axis=0, tiled=True)
+    return x
+
+
+def _a2a_flip(x, axes: Sequence[str], first_dim: int):
+    """Product all-to-all over several axes.
+
+    ``x`` must carry one explicit *destination* dimension per axis, in axis
+    order, starting at ``first_dim`` (each of size = that axis).  Each
+    per-axis a2a (split == concat dim, untiled) flips that dimension's
+    meaning from destination-rank to source-rank.  Composing per axis keeps
+    the dims separated, so no source/destination interleaving can occur
+    (a sequential *tiled* composition would nest the second split inside the
+    first axis' source chunks — wrong).
+    """
+    for idx, a in enumerate(axes):
+        d = first_dim + idx
+        x = lax.all_to_all(x, a, split_axis=d, concat_axis=d)
+    return x
+
+
+def _node_sizes(topo: LaneTopology) -> tuple[int, ...]:
+    return tuple(lax.axis_size(a) for a in topo.node_axes)
+
+
+def _unravel(rank: int, sizes: Sequence[int]) -> tuple[int, ...]:
+    out = []
+    for s in reversed(tuple(sizes)):
+        out.append(rank % s)
+        rank //= s
+    return tuple(reversed(out))
+
+
+def _n(topo: LaneTopology) -> int:
+    return topo.n()
+
+
+# --------------------------------------------------------------------------
+# Allreduce (paper Listing 4):  RS(node) ∘ AR(lane) ∘ AG(node)
+# --------------------------------------------------------------------------
+
+def allreduce_lane(x, topo: LaneTopology):
+    """Full-lane allreduce.
+
+    ReduceScatter on the node level leaves each chip with c/n partial sums;
+    the n concurrent lane-level allreduces each move only c/n over the
+    inter-node fabric (every NIC busy, total in/out per node = c — the
+    full-lane property); AllGather on the node level reassembles.
+
+    Works on any dtype with '+'; commutative reduction only, like the paper.
+    Leading dim must be divisible by n.
+    """
+    lead = x.shape[0]
+    r = _rs_seq(x, topo.node_axes)
+    r = lax.psum(r, topo.lane_axis)
+    out = _ag_seq(r, topo.node_axes)
+    assert out.shape[0] == lead
+    return out
+
+
+def native_allreduce(x, topo: LaneTopology):
+    """The 'native library' comparator: one-shot psum over all axes."""
+    return lax.psum(x, (topo.lane_axis, *topo.node_axes))
+
+
+# --------------------------------------------------------------------------
+# Reduce_scatter_block (paper Listing 5):  permute ∘ RS(node) ∘ RS(lane)
+# --------------------------------------------------------------------------
+
+def reduce_scatter_lane(x, topo: LaneTopology):
+    """Full-lane reduce-scatter-block.
+
+    Input: p·m leading elements = p blocks of m rows, block g destined for
+    global rank g (= lane_rank·n + node_rank, paper's consecutive ranking).
+    Output: this chip's block of m rows, fully reduced.
+
+    The paper must pre-permute blocks into lanecomm process order with a
+    derived-datatype self-copy (Listing 5 / [18]); the same reorder appears
+    here as the (N, n) → (n, N) transpose — not zero-copy, exactly as in
+    the paper.
+    """
+    n, N = _n(topo), topo.N()
+    p = n * N
+    if x.shape[0] % p:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by p={p}")
+    m = x.shape[0] // p
+    xb = x.reshape(N, n, m, *x.shape[1:])
+    xb = jnp.swapaxes(xb, 0, 1)                     # the Listing-5 permute
+    xb = xb.reshape(n * N * m, *x.shape[1:])
+    r = _rs_seq(xb, topo.node_axes)                 # stripe node_rank: (N*m, ...)
+    r = lax.psum_scatter(r, topo.lane_axis, scatter_dimension=0, tiled=True)
+    return r                                        # (m, ...): own block
+
+
+def native_reduce_scatter(x, topo: LaneTopology):
+    """One-shot comparator: RS over the product communicator.
+
+    Sequential tiled psum_scatter over (lane, node...) delivers block
+    lane-major = global-rank order directly.
+    """
+    x = lax.psum_scatter(x, topo.lane_axis, scatter_dimension=0, tiled=True)
+    return _rs_seq(x, topo.node_axes)
+
+
+# --------------------------------------------------------------------------
+# Allgather (paper Listing 3):  AG(lane) ∘ AG(node)  [+ rank-order fixup]
+# --------------------------------------------------------------------------
+
+def allgather_lane(x, topo: LaneTopology, *, reorder: bool = True):
+    """Full-lane allgather.
+
+    Each chip first allgathers its own m-row block over its lane (n
+    concurrent lane collectives, (N-1)·m per chip inter-node — full-lane),
+    then the node level replicates.  The natural output order is
+    node-major [i][j]; ``reorder=True`` transposes to global-rank order
+    [j][i].  ``reorder=False`` is the zero-copy variant for consumers that
+    are order-agnostic or layout-adapted (the framework's FSDP weight
+    layout is defined lane-major so this transpose never materializes —
+    the JAX analogue of the paper's derived-datatype tiling).
+    """
+    m = x.shape[0]
+    n, N = _n(topo), topo.N()
+    y = lax.all_gather(x, topo.lane_axis, axis=0, tiled=True)   # (N*m, ...)
+    z = _ag_seq(y, topo.node_axes)                               # (n*N*m, ...)
+    if reorder:
+        z = z.reshape(n, N, m, *x.shape[1:])
+        z = jnp.swapaxes(z, 0, 1).reshape(n * N * m, *x.shape[1:])
+    return z
+
+
+def native_allgather(x, topo: LaneTopology):
+    """One-shot comparator in global-rank order: AG(node) ∘ AG(lane).
+
+    Note this is the *redundant* composition the paper attributes to
+    Kühnemann et al. [12] when used as a mock-up (every lane carries the
+    full node block); as a native baseline it stands in for the library's
+    internal algorithm.
+    """
+    y = _ag_seq(x, topo.node_axes)
+    return lax.all_gather(y, topo.lane_axis, axis=0, tiled=True)
+
+
+# --------------------------------------------------------------------------
+# Broadcast (paper Listing 1):  Scatter(node) ∘ Bcast(lane) ∘ AG(node)
+# --------------------------------------------------------------------------
+
+def bcast_lane(x, topo: LaneTopology, *, root_lane: int = 0,
+               root_node: int = 0, root_replicated: bool = True):
+    """Full-lane broadcast of the root chip's buffer to every chip.
+
+    root = (root_lane, root_node) in (lane_rank, node_rank) coordinates.
+
+    * Scatter(node): if ``root_replicated`` (the buffer is already
+      node-replicated on the root node — the common weight-sync case) the
+      scatter is a free local stripe slice, the zero-copy ideal.  Otherwise
+      an all-to-all emulates MPI_Scatterv (SPMD upper bound, see module
+      docstring).
+    * Bcast(lane): n concurrent lane broadcasts of c/n each — masked psum
+      (reduce+bcast; 2·(N-1)/N·c/n wire bytes vs the ideal c/n; the
+      pipelined §5 construction in :mod:`repro.core.pipeline` closes this
+      gap for large c).
+    * AllGather(node) reassembles; stripes were cut in node-rank order so
+      the result needs no reorder (zero-copy).
+    """
+    n = _n(topo)
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by n={n}")
+    m = x.shape[0] // n
+    node_rank = topo.node_rank()
+    if root_replicated:
+        stripe = lax.dynamic_slice_in_dim(x, node_rank * m, m, axis=0)
+    else:
+        sizes = _node_sizes(topo)
+        xs = x.reshape(*sizes, m, *x.shape[1:])
+        recv = _a2a_flip(xs, topo.node_axes, first_dim=0)
+        stripe = recv[_unravel(root_node, sizes)]
+    on_root_lane = topo.lane_rank() == root_lane
+    stripe = jnp.where(on_root_lane, stripe, jnp.zeros_like(stripe))
+    stripe = lax.psum(stripe, topo.lane_axis)
+    return _ag_seq(stripe, topo.node_axes)
+
+
+# --------------------------------------------------------------------------
+# Alltoall (paper Listing 6):  A2A(lane) ∘ A2A(node)
+# --------------------------------------------------------------------------
+
+def alltoall_lane(x, topo: LaneTopology):
+    """Full-lane all-to-all.
+
+    Input: p blocks of m rows in global-destination-rank order.  Output: p
+    blocks in global-source-rank order.  Lane-level first, node-level
+    second — this order lands source-rank-major with **no transpose**
+    (the zero-copy composition; the paper notes both orders are correct,
+    Listing 6 uses datatypes to the same effect).
+
+    Inter-node volume per chip: (N-1)·n·m, carried by n concurrent lane
+    a2a's; node level moves (n-1)·N·m — the unavoidable node bottleneck
+    the paper analyses in §3.5.
+    """
+    n, N = _n(topo), topo.N()
+    p = n * N
+    if x.shape[0] % p:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by p={p}")
+    m = x.shape[0] // p
+    rest = x.shape[1:]
+    sizes = _node_sizes(topo)
+    # explicit dims: (dest_j, dest_iA, dest_iB, ..., m, ...)
+    xb = x.reshape(N, *sizes, m, *rest)
+    y = lax.all_to_all(xb, topo.lane_axis, split_axis=0, concat_axis=0)
+    z = _a2a_flip(y, topo.node_axes, first_dim=1)
+    # dims now (src_j, src_iA, src_iB, ..., m) row-major = global source rank
+    return z.reshape(p * m, *rest)
+
+
+def native_alltoall(x, topo: LaneTopology):
+    """One-shot comparator: direct a2a over the product communicator.
+
+    XLA lowers this as a single all-to-all over the flattened device group
+    when the axis dims stay explicit — the 'direct algorithm' of §3.5 with
+    (p-1)·c volume per chip.
+    """
+    n, N = _n(topo), topo.N()
+    p = n * N
+    m = x.shape[0] // p
+    rest = x.shape[1:]
+    sizes = _node_sizes(topo)
+    xb = x.reshape(N, *sizes, m, *rest)
+    z = _a2a_flip(xb, (topo.lane_axis, *topo.node_axes), first_dim=0)
+    return z.reshape(p * m, *rest)
+
+
+# --------------------------------------------------------------------------
+# Reduce (paper §3.4):  RS(node) ∘ Reduce(lane) ∘ Gather(node→root)
+# --------------------------------------------------------------------------
+
+def reduce_lane(x, topo: LaneTopology, *, root_lane: int = 0,
+                root_node: int = 0):
+    """Full-lane reduce; the summed buffer is valid on the root chip,
+    zeros elsewhere (SPMD rooted-collective convention)."""
+    r = _rs_seq(x, topo.node_axes)
+    r = lax.psum(r, topo.lane_axis)          # lane-level reduce (emulated)
+    out = _ag_seq(r, topo.node_axes)          # gather emulated by allgather
+    is_root = jnp.logical_and(topo.lane_rank() == root_lane,
+                              topo.node_rank() == root_node)
+    return jnp.where(is_root, out, jnp.zeros_like(out))
+
+
+# --------------------------------------------------------------------------
+# Gather / Scatter (paper §3.2, Listing 2)
+# --------------------------------------------------------------------------
+
+def gather_lane(x, topo: LaneTopology, *, root_lane: int = 0,
+                root_node: int = 0):
+    """Full-lane gather: root chip ends with all p blocks in global rank
+    order; others zeros.  Gather(lane) then Gather(node), gathers emulated
+    by allgathers (SPMD).  The paper's derived-datatype placement becomes
+    the final [i][j]→[j][i] transpose."""
+    m = x.shape[0]
+    n, N = _n(topo), topo.N()
+    g1 = lax.all_gather(x, topo.lane_axis, axis=0, tiled=True)   # (N*m)
+    g2 = _ag_seq(g1, topo.node_axes)                              # (n*N*m) [i][j]
+    g2 = g2.reshape(n, N, m, *x.shape[1:])
+    g2 = jnp.swapaxes(g2, 0, 1).reshape(n * N * m, *x.shape[1:])
+    is_root = jnp.logical_and(topo.lane_rank() == root_lane,
+                              topo.node_rank() == root_node)
+    return jnp.where(is_root, g2, jnp.zeros_like(g2))
+
+
+def scatter_lane(x, topo: LaneTopology, *, root_lane: int = 0,
+                 root_node: int = 0, root_replicated: bool = True):
+    """Full-lane scatter: every chip receives its global-rank block of the
+    root's p·m buffer.  Scatter(node@root-node) ∘ Scatter(lane).
+
+    With ``root_replicated`` the node-level scatter is a local stripe
+    slice; the lane-level scatter is an all-to-all + column select (SPMD
+    emulation, see module docstring).
+    """
+    n, N = _n(topo), topo.N()
+    p = n * N
+    if x.shape[0] % p:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by p={p}")
+    m = x.shape[0] // p
+    rest = x.shape[1:]
+    node_rank = topo.node_rank()
+    xb = x.reshape(N, n, m, *rest)
+    if root_replicated:
+        # node-level scatter degenerates to a local stripe pick (zero-copy):
+        # blocks destined to (j, node_rank) for all lane ranks j.
+        stripe = jnp.take(xb, node_rank, axis=1)              # (N, m, ...)
+    else:
+        sizes = _node_sizes(topo)
+        mine = jnp.swapaxes(xb, 0, 1).reshape(*sizes, N * m, *rest)
+        recv = _a2a_flip(mine, topo.node_axes, first_dim=0)
+        stripe = recv[_unravel(root_node, sizes)].reshape(N, m, *rest)
+    # lane-level scatter: tiled a2a over the lane, keep the root lane's column
+    got = lax.all_to_all(stripe.reshape(N * m, *rest), topo.lane_axis,
+                         split_axis=0, concat_axis=0, tiled=True)
+    return got.reshape(N, m, *rest)[root_lane]

@@ -1,0 +1,115 @@
+"""Paper §3/§5 cost model: rounds + volumes per hierarchy level, k-lane time.
+
+The paper analyses each full-lane mock-up under best-case, single-ported,
+fully-connected assumptions; §5 defines the k-lane model (per step: one
+inter-node send+recv and, simultaneously, exchanges with the k-1 on-node
+peers).  We reuse those exact expressions to (a) produce the `derived`
+column of the benchmark CSVs, (b) sanity-check the full-lane property
+(total inter-node bytes per node == c) in property tests, and (c) predict
+multi-pod collective times on the production mesh from the dry-run's
+counted collective bytes.
+
+Units: `c` is an element count per the MPI convention; multiply by
+`elem_bytes` for wire bytes.  n = processes (chips) per node (pod),
+N = nodes (pods), p = n·N, k = physical lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["CollectiveCost", "mockup_cost", "klane_time", "speedup_bound",
+           "HW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    """Best-case cost of one full-lane mock-up (paper §3 analysis)."""
+    name: str
+    rounds_node: int         # communication rounds on nodecomm level
+    rounds_lane: int         # rounds on lanecomm level
+    vol_node: float          # elements sent+received per process, node level
+    vol_lane: float          # elements sent+received per process, lane level
+    vol_internode_per_node: float  # total elements in/out of one node
+    optimal_vol: float       # per-process volume of an optimal direct algo
+
+
+def _lg(x: int) -> int:
+    return max(1, math.ceil(math.log2(max(2, x))))
+
+
+def mockup_cost(coll: str, n: int, N: int, c: float) -> CollectiveCost:
+    """Paper §3 best-case numbers for each full-lane mock-up."""
+    p = n * N
+    if coll == "bcast":
+        # Scatter(node): ceil(log n) rounds, (n-1)/n·c; Bcast(lane):
+        # ceil(log N), c/n; Allgather(node): ceil(log n), (n-1)/n·c.
+        return CollectiveCost(
+            "bcast", 2 * _lg(n), _lg(N),
+            2 * (n - 1) / n * c, c / n, c, c)
+    if coll in ("gather", "scatter"):
+        # (n-1)Nc on the root node + (N-1)c on the lanes = (p-1)c total.
+        return CollectiveCost(
+            coll, _lg(n), _lg(N),
+            (n - 1) * N * c, (N - 1) * c, (p - n) * c, (p - 1) * c)
+    if coll == "allgather":
+        # AG(lane): (N-1)c; AG(node): (n-1)Nc; total (p-1)c = optimal.
+        return CollectiveCost(
+            "allgather", _lg(n), _lg(N),
+            (n - 1) * N * c, (N - 1) * c, (N - 1) * n * c, (p - 1) * c)
+    if coll in ("allreduce", "reduce"):
+        # RS(node)+AG(node): 2·(n-1)/n·c; AR(lane): 2·(N-1)/N·c/n.
+        return CollectiveCost(
+            coll, 2 * _lg(n), 2 * _lg(N),
+            2 * (n - 1) / n * c, 2 * (N - 1) / N * c / n,
+            2 * (N - 1) / N * c, 2 * (p - 1) / p * c)
+    if coll == "reduce_scatter":
+        # RS(node): (n-1)/n·c; RS(lane): (N-1)/N·c/n.
+        return CollectiveCost(
+            "reduce_scatter", _lg(n), _lg(N),
+            (n - 1) / n * c, (N - 1) / N * c / n,
+            (N - 1) / N * c, (p - 1) / p * c)
+    if coll == "alltoall":
+        # A2A(lane): (N-1)n·c_blk rows with c = p·c_blk total per proc —
+        # per paper §3.5 with per-destination block c: (N-1)nc + (n-1)Nc.
+        return CollectiveCost(
+            "alltoall", 1, 1,
+            (n - 1) * N * c, (N - 1) * n * c, (N - 1) * n * c * n,
+            (p - 1) * c)
+    raise ValueError(f"unknown collective {coll!r}")
+
+
+def klane_time(cost: CollectiveCost, *, k: int, elem_bytes: int,
+               alpha_node: float, beta_node: float,
+               alpha_lane: float, beta_lane: float) -> float:
+    """Predicted seconds in the k-lane model (paper §5).
+
+    The lane-level part is carried by k physical lanes concurrently (it is
+    already expressed per-process = per-lane); the node-level part is the
+    serial bottleneck the paper identifies.  alpha = per-round latency,
+    beta = seconds/byte at that level.
+    """
+    t_node = cost.rounds_node * alpha_node + cost.vol_node * elem_bytes * beta_node
+    # the n lane collectives run concurrently but only k physical lanes
+    # exist: effective slowdown max(1, n_virtual/k) is already folded in by
+    # vol_lane being per-process; k enters through beta_lane sharing:
+    t_lane = cost.rounds_lane * alpha_lane + cost.vol_lane * elem_bytes * beta_lane
+    return t_node + t_lane
+
+
+def speedup_bound(coll: str, n: int, N: int, k: int) -> float:
+    """Upper bound on full-lane speedup vs single-root hierarchical algo:
+    the inter-node phase accelerates by ≤ k; node phases don't."""
+    return float(min(k, n))
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per task spec) — used by roofline + predictions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops_bf16: float = 197e12       # FLOP/s per chip
+    hbm_bw: float = 819e9                 # B/s per chip
+    ici_bw: float = 50e9                  # B/s per link (per chip, per spec)
+    dcn_bw: float = 25e9                  # B/s per host NIC (cross-pod lane)
+    chips_per_host: int = 4               # v5e: 4 chips share a host NIC

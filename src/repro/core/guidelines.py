@@ -1,0 +1,63 @@
+"""Self-consistent performance-guideline checking (paper §3/§4, refs [9,19]).
+
+A guideline says: the native implementation of a collective must not be
+slower than a correct mock-up built from other collectives of the same
+library.  The paper benchmarks MPI mock-ups against native MPI; we benchmark
+XLA's one-shot lowering against the explicit full-lane decomposition, both
+in wall-clock (multi-device CPU backend) and in the k-lane cost model.
+
+`time_fn` uses the paper's measurement protocol: repetitions separated by a
+barrier-equivalent (block_until_ready), warmup discarded, report average
+and minimum (paper reports both; minimum is the headline number).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "GuidelineResult", "check_guideline"]
+
+
+def time_fn(fn: Callable, *args, reps: int = 30, warmup: int = 5):
+    """Return (avg_us, min_us) over `reps` timed calls after `warmup`."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return sum(times) / len(times), min(times)
+
+
+@dataclasses.dataclass
+class GuidelineResult:
+    name: str
+    native_avg_us: float
+    native_min_us: float
+    mockup_avg_us: float
+    mockup_min_us: float
+
+    @property
+    def violated(self) -> bool:
+        """True ⇔ the mock-up beats the native (a library defect à la §4)."""
+        return self.mockup_min_us < self.native_min_us
+
+    @property
+    def ratio(self) -> float:
+        """native/mockup min-time ratio; >1 means guideline violation."""
+        return self.native_min_us / max(self.mockup_min_us, 1e-9)
+
+    def row(self) -> str:
+        return (f"{self.name},{self.native_min_us:.2f},{self.mockup_min_us:.2f},"
+                f"{self.ratio:.3f},{'VIOLATED' if self.violated else 'ok'}")
+
+
+def check_guideline(name: str, native_fn: Callable, mockup_fn: Callable,
+                    *args, reps: int = 30) -> GuidelineResult:
+    na, nm = time_fn(native_fn, *args, reps=reps)
+    ma, mm = time_fn(mockup_fn, *args, reps=reps)
+    return GuidelineResult(name, na, nm, ma, mm)

@@ -1,0 +1,108 @@
+"""Lane/node factorization of a device mesh (paper §3, Figure 1).
+
+The paper splits a regular communicator ``comm`` (p = n·N processes,
+N nodes × n per node, consecutively ranked) into
+
+  * ``nodecomm``  — the n processes sharing a compute node, and
+  * ``lanecomm``  — the N processes with the same on-node index i
+                    (one per node), i = 0..n-1.
+
+On a TPU fleet the analogue is a named mesh: the *node* level is the set of
+intra-pod axes (fast ICI domain) and the *lane* level is the cross-pod axis
+(DCN, one independent NIC per host => physically multi-lane).  Communicator
+splitting is free: it is just axis naming, resolved at trace time — the
+paper caches split communicators as MPI attributes; we get the same effect
+structurally.
+
+``LaneTopology`` only names axes; sizes are read off the enclosing mesh, so
+the same topology object works for the single-pod (16×16) and multi-pod
+(2×16×16) production meshes as well as tiny test meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneTopology:
+    """Names the mesh axes that play the paper's nodecomm/lanecomm roles.
+
+    node_axes: intra-node (intra-pod) axes — the paper's ``nodecomm``.
+        Multiple axes are allowed (e.g. ("data", "model")); they are the
+        per-dimension torus rings inside the ICI domain.
+    lane_axis: the inter-node axis — the paper's ``lanecomm`` (e.g. "pod").
+    """
+
+    node_axes: tuple[str, ...]
+    lane_axis: str
+
+    def __post_init__(self):
+        if isinstance(self.node_axes, str):  # tolerate a single name
+            object.__setattr__(self, "node_axes", (self.node_axes,))
+        if self.lane_axis in self.node_axes:
+            raise ValueError(
+                f"lane axis {self.lane_axis!r} also listed in node axes "
+                f"{self.node_axes!r}")
+
+    # -- sizes (valid inside shard_map / under a mesh context) ------------
+    def n(self) -> int:
+        """Processes per node (paper's n) = product of node-axis sizes."""
+        return math.prod(jax.lax.axis_size(a) for a in self.node_axes)
+
+    def N(self) -> int:
+        """Number of nodes (paper's N) = lane-axis size."""
+        return jax.lax.axis_size(self.lane_axis)
+
+    def p(self) -> int:
+        return self.n() * self.N()
+
+    def node_rank(self):
+        """Rank within the node communicator (paper's noderank, 0..n-1).
+
+        Row-major over node_axes, matching the order used by the sequential
+        per-axis collectives in :mod:`repro.core.collectives`.
+        """
+        r = 0
+        for a in self.node_axes:
+            r = r * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return r
+
+    def lane_rank(self):
+        """Rank within the lane communicator (paper's lanerank, 0..N-1)."""
+        return jax.lax.axis_index(self.lane_axis)
+
+    def global_rank(self):
+        """Consecutive global rank: lane_rank * n + node_rank (paper §3)."""
+        return self.lane_rank() * self.n() + self.node_rank()
+
+    # -- static validation against a concrete mesh ------------------------
+    def validate(self, mesh: Mesh) -> None:
+        """Regularity check — the paper's 'few allreduce' probe, statically.
+
+        Every node must host the same number of processes and ranks must be
+        consecutive; on a named mesh both hold by construction, so the only
+        failure mode is a missing axis.
+        """
+        names = set(mesh.axis_names)
+        missing = [a for a in (*self.node_axes, self.lane_axis) if a not in names]
+        if missing:
+            raise ValueError(f"mesh {mesh.axis_names} lacks axes {missing}")
+
+    def sizes(self, mesh: Mesh) -> tuple[int, int]:
+        """(n, N) read off a concrete mesh (outside shard_map)."""
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n = math.prod(ax[a] for a in self.node_axes)
+        return n, ax[self.lane_axis]
+
+
+# Default production factorization: cross-pod "pod" axis is the lane level,
+# everything inside the pod is the node level.
+PRODUCTION = LaneTopology(node_axes=("data", "model"), lane_axis="pod")
+# Single-pod view: "model" rings act as lanes for the "data" reduction —
+# the intra-pod analogue used when there is no pod axis.
+SINGLE_POD = LaneTopology(node_axes=("model",), lane_axis="data")

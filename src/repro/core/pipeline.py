@@ -1,0 +1,165 @@
+"""Paper §5, Proposition 1: pipelined k-lane broadcast from a linear pipeline.
+
+The construction: replicate a single-ported linear pipeline over p/k
+processors k times (one replica per on-node processor), stripe the payload
+1/k per replica, and close every pipeline step with a k-clique exchange on
+the node so each node reassembles full blocks as they arrive.  Steps:
+T_single(p/k, c/k) + O(1); total data in/out of each node: exactly c.
+
+TPU mapping: one pipeline replica per intra-pod chip index; the lane ring
+is a `jax.lax.ppermute` chain along the cross-pod ("lane") axis; the
+k-clique exchange is an `all_gather` over the intra-pod ("node") axis.  The
+two collectives inside one scan step use disjoint axes, so XLA's scheduler
+can run them concurrently — the k-lane model's simultaneity assumption,
+verified structurally on the HLO in benchmarks/paper_tables.py.
+
+SPMD adaptation: the paper's special root steps (the root feeding its k-1
+replicas, and the leaf→root back-edge supplying the root's missing stripe)
+exist because an MPI root *uniquely* owns the buffer.  Under SPMD the root
+node's chips are all handed the same buffer (root replication), so both
+special steps vanish; what remains — and what we implement — is the steady
+state of Proposition 1: k striped pipelines + per-step clique exchange.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .lane import LaneTopology
+
+__all__ = ["pipelined_bcast_lane", "pipelined_reduce_lane",
+           "pipeline_steps"]
+
+
+def pipeline_steps(num_blocks: int, N: int) -> int:
+    """Scan length: last block reaches the last node at step N-2+num_blocks."""
+    return num_blocks + N - 1
+
+
+def pipelined_bcast_lane(x, topo: LaneTopology, *, num_blocks: int,
+                         root_lane: int = 0):
+    """Pipelined k-lane broadcast of the root lane's node-replicated buffer.
+
+    x: (c, ...) — meaningful on chips with lane_rank == root_lane (all of
+    them, node-replicated); other chips' x is ignored.  Requires
+    c % (num_blocks * n) == 0 and a single node axis is fine but multiple
+    node axes are also supported (the clique exchange becomes the sequential
+    per-axis all_gather).
+
+    Returns the broadcast buffer (c, ...) on every chip.
+    """
+    if root_lane != 0:
+        raise NotImplementedError("ring is rooted at lane rank 0")
+    n = topo.n()
+    N = topo.N()
+    c = x.shape[0]
+    B = num_blocks
+    if c % (B * n):
+        raise ValueError(f"payload {c} not divisible by num_blocks*n={B * n}")
+    s = c // (B * n)                          # stripe rows per block per chip
+    rest = x.shape[1:]
+
+    i = topo.node_rank()
+    j = topo.lane_rank()
+
+    # Own-stripe view: block b, stripe i → rows  (b*n + i)*s : +s
+    xb = x.reshape(B, n, s, *rest)
+    stripes = jnp.take(xb, i, axis=1)         # (B, s, ...) traced-index pick
+
+    is_root = (j == 0)
+    axes = (topo.lane_axis, *topo.node_axes)
+    # carries must be device-varying from the start (shard_map vma typing)
+    buf0 = lax.pcast(jnp.zeros((s, *rest), x.dtype), axes, to="varying")
+    out0 = lax.pcast(jnp.zeros((B, n, s, *rest), x.dtype), axes, to="varying")
+
+    perm = [(a, a + 1) for a in range(N - 1)]  # linear chain 0→1→…→N-1
+
+    def step(carry, t):
+        buf, out = carry
+        b = t - j                              # block this chip holds now
+        valid = jnp.logical_and(b >= 0, b < B)
+        bc = jnp.clip(b, 0, B - 1)
+        own = lax.dynamic_slice_in_dim(stripes, bc, 1, axis=0)[0]
+        cur = jnp.where(is_root, own, buf)     # root injects, others forward
+        # ---- the two simultaneous k-lane-model operations ----
+        # (1) lane hop: forward `cur` to the lane successor
+        recv = lax.ppermute(cur, topo.lane_axis, perm)
+        # (2) node clique exchange: assemble the full block from all stripes
+        full = cur[None]
+        for a in reversed(topo.node_axes):
+            full = lax.all_gather(full.reshape(-1, s, *rest), a, axis=0,
+                                  tiled=False).reshape(-1, s, *rest)
+        full = full.reshape(n, s, *rest)
+        upd = lax.dynamic_update_slice_in_dim(out, full[None], bc, axis=0)
+        out = jnp.where(valid, upd, out)
+        return (recv, out), None
+
+    T = pipeline_steps(B, N)
+    (_, out), _ = lax.scan(step, (buf0, out0), jnp.arange(T))
+    return out.reshape(c, *rest)
+
+
+def pipelined_reduce_lane(x, topo: LaneTopology, *, num_blocks: int,
+                          root_lane: int = 0):
+    """Pipelined k-lane REDUCE — the dual of the broadcast construction.
+
+    Blocks flow DOWN each lane ring toward the root lane, accumulating the
+    lane dimension; each step's simultaneous node-clique operation is a
+    reduce-scatter that folds the node dimension into the per-chip stripe
+    (the paper's k-clique exchange, §5: "for binary trees the construction
+    is simpler" — a ring is the depth-1 tree here).  Steps: B + N - 1.
+
+    Returns the full sum on chips with lane_rank == root_lane (node-
+    replicated after the trailing clique all-gather), zeros elsewhere —
+    SPMD rooted-collective convention, cf. reduce_lane.
+    """
+    if root_lane != 0:
+        raise NotImplementedError("ring is rooted at lane rank 0")
+    n = topo.n()
+    N = topo.N()
+    c = x.shape[0]
+    B = num_blocks
+    if c % (B * n):
+        raise ValueError(f"payload {c} not divisible by num_blocks*n={B * n}")
+    s = c // (B * n)
+    rest = x.shape[1:]
+    j = topo.lane_rank()
+
+    xb = x.reshape(B, n * s, *rest)            # block b = rows [b·n·s, …)
+    axes = (topo.lane_axis, *topo.node_axes)
+    buf0 = lax.pcast(jnp.zeros((s, *rest), jnp.float32), axes, to="varying")
+    out0 = lax.pcast(jnp.zeros((B, s, *rest), jnp.float32), axes,
+                     to="varying")
+    perm = [(a, a - 1) for a in range(1, N)]    # ring: j → j-1 (toward root)
+
+    def step(carry, t):
+        buf, out = carry
+        b = t - (N - 1 - j)                     # block this chip forwards
+        valid = jnp.logical_and(b >= 0, b < B)
+        bc = jnp.clip(b, 0, B - 1)
+        # ---- the two simultaneous k-lane-model operations ----
+        # (1) node clique: fold the node dim of my block into my stripe
+        blk = lax.dynamic_slice_in_dim(xb, bc, 1, axis=0)[0]
+        mine = blk.astype(jnp.float32)
+        for a in topo.node_axes:
+            mine = lax.psum_scatter(mine, a, scatter_dimension=0, tiled=True)
+        part = jnp.where(valid, mine + jnp.where(j == N - 1, 0.0, buf),
+                         jnp.zeros_like(mine))
+        # (2) lane hop: pass the partial toward the root lane
+        recv = lax.ppermute(part, topo.lane_axis, perm)
+        done = jnp.logical_and(j == 0, valid)
+        upd = lax.dynamic_update_slice_in_dim(out, part[None], bc, axis=0)
+        out = jnp.where(done, upd, out)
+        return (recv, out), None
+
+    T = pipeline_steps(B, N)
+    (_, out), _ = lax.scan(step, (buf0, out0), jnp.arange(T))
+    # trailing clique all-gather reassembles full blocks on the root lane
+    full = out.reshape(B, s, *rest)
+    for a in reversed(topo.node_axes):
+        full = lax.all_gather(full, a, axis=1, tiled=True)
+    full = full.reshape(c, *rest).astype(x.dtype)
+    is_root = jnp.logical_and(topo.lane_rank() == root_lane,
+                              topo.node_rank() == 0)
+    return jnp.where(is_root, full, jnp.zeros_like(full))

@@ -1,0 +1,2 @@
+from .pipeline import (TokenDataset, SyntheticLM, ShardedLoader,
+                       make_loader)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (causal / sliding-window / GQA).
+
+TPU-native design (not a CUDA port): the kernel is gridded
+(batch, q_head, q_block, k_block) with the k_block dimension marked
+"arbitrary" (sequential) so the online-softmax state lives in VMEM scratch
+across k steps; q/k/v tiles are stage d through VMEM by BlockSpecs sized to
+the MXU (block_q × head_dim and block_k × head_dim tiles, 128-aligned).
+Out-of-band (causal / window) k blocks are skipped with @pl.when before any
+MXU work — the FLOP savings the lax path can't express.
+
+Validated on CPU with interpret=True against kernels/ref.py; on TPU call
+through kernels/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, nk: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # whole-block skip: out-of-band (causal future / pre-window) k blocks
+    # never touch the MXU — the structural FLOP win over the lax path
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + block_k > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window:
+            mask = jnp.logical_and(mask, kpos >= qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[:, 0]                               # (bq,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        corr = jnp.exp(m_prev - m_cur)
+        l_new = l_s[:, 0] * corr + p.sum(axis=1)
+        l_s[...] = jnp.broadcast_to(l_new[:, None], l_s.shape)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_s[...] = acc_s[...] * corr[:, None] + pv
+        m_s[...] = jnp.broadcast_to(m_cur[:, None], m_s.shape)
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        l = l_s[:, 0]
+        o_ref[0, 0] = (acc_s[...] /
+                       jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False):
+    """q: (B, H, Tq, hd); k, v: (B, K, Tk, hd); H = K·G.  Returns like q.
+
+    Head-major layout (B, H, T, hd) so each grid cell owns one (head,
+    q-block) tile — the natural TPU layout (lane dim = hd, sublane = seq).
+    """
+    B, H, Tq, hd = q.shape
+    K, Tk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    def _divisor(T, target):
+        b = min(target, T)
+        while T % b:        # Pallas clamps out-of-range blocks (index
+            b -= 1          # remapping would corrupt position masking)
+        return b
+
+    block_q = _divisor(Tq, block_q)
+    block_k = _divisor(Tk, block_k)
+    nq = Tq // block_q
+    nk = Tk // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, seq_k=Tk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),    # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive softmax attention.  q: (B,H,Tq,hd); k,v: (B,K,Tk,hd)."""
+    B, H, Tq, hd = q.shape
+    K, Tk = k.shape[1], k.shape[2]
+    G = H // K
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) / math.sqrt(hd),
+                   kf)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos >= qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (the definitionally-correct form).
+
+    x: (b,H,T,P); dt: (b,H,T); A: (H,); B,C: (b,T,S).  Returns (b,H,T,P).
+    state_t = e^{dt_t A} state_{t-1} + dt_t x_t ⊗ B_t;  y_t = C_t · state_t
+    """
+    b, H, T, P = x.shape
+    S = B.shape[-1]
+
+    def step(state, inputs):
+        xt, dtt, Bt, Ct = inputs            # (b,H,P), (b,H), (b,S), (b,S)
+        decay = jnp.exp(dtt * A[None, :])   # (b,H)
+        state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bs->bhps", dtt, xt, Bt))
+        y = jnp.einsum("bs,bhps->bhp", Ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state0 = jnp.zeros((b, H, P, S), jnp.float32)
+    _, ys = jax.lax.scan(step, state0,
+                         jax.tree.map(lambda a: a.astype(jnp.float32), xs))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)       # (b,H,T,P)

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets the host-device-count flag before any
+jax initialization; everyone else sees the real devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; the multi-pod mesh adds the cross-DCN "pod" axis.
+
+    Axis roles: "pod" = cross-pod DCN (the paper's lane level is *across*
+    this axis: each intra-pod chip is one lane), "data" = batch parallelism
+    (intra-pod ICI), "model" = tensor parallelism (intra-pod ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh with the same axis names, for 8-device CPU testing."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,5 @@
+"""Composable model zoo: dense/GQA/SWA, MoE, Mamba2-SSD, hybrid, enc-dec, VLM."""
+from .transformer import (
+    init_model, model_forward, init_cache, prefill, decode_step,
+    make_train_step, make_prefill_step, make_decode_step, loss_fn,
+)

@@ -1,0 +1,184 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-function style: ``init_*`` returns a params dict, ``apply`` functions
+are stateless.  Everything is jnp-only so it works under ``jax.eval_shape``
+(the dry-run path never allocates real parameters).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# activation-sharding hints (set by the launch layer, honored model-wide):
+# batch axes pin the leading dim; d_axis optionally shards a trailing
+# feature dim between layers (Megatron-SP-along-d — shrinks saved-for-
+# backward stacks by the TP degree).
+# ---------------------------------------------------------------------------
+_ACT_BATCH: contextvars.ContextVar = contextvars.ContextVar(
+    "act_batch_axes", default=None)
+_ACT_DMODEL: contextvars.ContextVar = contextvars.ContextVar(
+    "act_d_axis", default=None)
+_ACT_KV: contextvars.ContextVar = contextvars.ContextVar(
+    "act_kv_spec", default=None)      # (batch_entry, seq_entry) for caches
+
+
+@contextlib.contextmanager
+def activation_batch_axes(axes, d_axis=None, kv=None):
+    tok = _ACT_BATCH.set(tuple(axes) if axes else None)
+    tok2 = _ACT_DMODEL.set(d_axis)
+    tok3 = _ACT_KV.set(kv)
+    try:
+        yield
+    finally:
+        _ACT_BATCH.reset(tok)
+        _ACT_DMODEL.reset(tok2)
+        _ACT_KV.reset(tok3)
+
+
+def pin_kv(arr):
+    """Pin a (B, S, K, hd) cache-shaped tensor to the serve-cache layout.
+
+    The one-hot cache update and the prefill DUS otherwise produce full-
+    cache-sized intermediates sharded on batch only — 16× the per-chip
+    bytes of the (batch × seq-over-model) cache layout (verified: qwen
+    prefill_32k at 55 GB temp without this pin)."""
+    spec = _ACT_KV.get()
+    if spec is None or arr is None:
+        return arr
+    b, s = spec
+    return jax.lax.with_sharding_constraint(
+        arr, PartitionSpec(b, s, *([None] * (arr.ndim - 2))))
+
+
+def pin_act(x, *, shard_last: bool = False):
+    """Constrain x to (batch_axes, None…, [d_axis]) if hints are active."""
+    axes = _ACT_BATCH.get()
+    if axes is None or x is None:
+        return x
+    d_axis = _ACT_DMODEL.get() if shard_last else None
+    if x.ndim == 1:
+        spec = PartitionSpec(axes)
+    else:
+        spec = PartitionSpec(axes, *([None] * (x.ndim - 2)), d_axis)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(key, -2, 2, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(p: dict, x, eps: float):
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 → (..., head_dim/2) angles, fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, D) with D even; positions: (B, T) or (T,)."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)           # (B?, T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    while cos.ndim < x.ndim:                          # broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dt),
+         "w_down": dense_init(ks[1], (f, d), dt)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def mlp(p: dict, x, cfg: ModelConfig):
+    h = x @ p["w_up"]
+    if "w_gate" in p:
+        h = _act(cfg.act)(x @ p["w_gate"]) * h
+    else:
+        h = _act(cfg.act)(h)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab_size, cfg.d_model), dt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def embed(p: dict, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: dict, x):
+    if "head" in p:
+        return x @ p["head"]
+    return x @ p["tok"].T

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: token-choice top-k routing, capacity dispatch.
+
+Dispatch is done per batch row (sort/scatter along the sequence dim only),
+so the token dimension never crosses the data-parallel sharding — routing
+is local to each data shard and GSPMD inserts no collectives for it.
+Expert FFN weights are tensor-parallel over the "model" axis on d_ff
+(works for any expert count — no divisibility constraint between E and the
+mesh, which matters for granite-moe's 40 experts on a 16-way axis).
+
+Compute cost is E·C·d·f per row with E·C = K·T·capacity_factor — the
+honest ~K-experts-per-token FLOPs (×cf slack), unlike a dense-all-experts
+formulation which would inflate HLO FLOPs by E/K.
+
+An expert-parallel all-to-all variant (the paper's `Alltoall_lane` target)
+lives in `moe_block_ep` and is exercised by the dbrx hillclimb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, _act, _dtype, pin_act
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, E, dt = cfg.d_model, cfg.d_ff, cfg.num_experts, _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), dt),
+        "w_up": dense_init(ks[1], (E, d, f), dt),
+        "w_down": dense_init(ks[2], (E, f, d), dt),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[3], (E, d, f), dt)
+    return p
+
+
+def _route(p, x, cfg: ModelConfig):
+    """x: (B, T, d) → (probs (B,T,K), experts (B,T,K), aux_loss scalar)."""
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = (x @ p["router"]).astype(jnp.float32)        # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)                    # (B,T,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E · Σ_e f_e · P_e
+    density = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                       axis=(1, 2))                       # (B,E) token frac
+    p_mean = jnp.mean(probs, axis=1)                      # (B,E)
+    aux = E * jnp.mean(jnp.sum(density * p_mean, axis=-1))
+    return top_p, top_e, aux
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    E, K = cfg.num_experts, cfg.experts_per_token
+    c = int(cfg.moe_capacity_factor * K * T / E)
+    return max(8, -(-c // 8) * 8)                         # round up to 8
+
+
+def moe_block(p: dict, x, cfg: ModelConfig):
+    """Capacity-based dispatch; returns (out (B,T,d), aux_loss)."""
+    B, T, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, T)
+    top_p, top_e, aux = _route(p, x, cfg)
+
+    # --- slot assignment per batch row (local, no cross-shard traffic) ---
+    # sort-based ranking (MegaBlocks-style): O(TK log TK) with (B,TK)
+    # tensors only — the one-hot cumsum alternative materializes (B,TK,E),
+    # which is 16.7 GB/device for dbrx at prefill_32k
+    TK = T * K
+    flat_e = top_e.reshape(B, TK)                         # expert per (tok,k)
+    sort_idx = jnp.argsort(flat_e, axis=1, stable=True)   # (B,TK)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+    hist = jax.vmap(lambda e: jnp.bincount(e, length=E))(flat_e)   # (B,E)
+    start = jnp.cumsum(hist, axis=1) - hist               # exclusive prefix
+    pos = jnp.broadcast_to(jnp.arange(TK)[None], (B, TK))
+    rank_sorted = pos - jnp.take_along_axis(start, sorted_e, axis=1)
+    rank = jax.vmap(lambda si, rs: jnp.zeros((TK,), jnp.int32).at[si].set(rs)
+                    )(sort_idx, rank_sorted)              # back to (t,k) order
+    keep = rank < C                                       # overflow dropped
+    slot = jnp.where(keep, flat_e * C + rank, E * C)      # E*C = trash slot
+
+    # --- gather tokens into (B, E*C, d) slot buffer ---
+    # pin_act: routing/dispatch tensors must stay batch-sharded — GSPMD's
+    # propagation around the per-row scatters otherwise replicates them
+    xe = jnp.repeat(x, K, axis=1) if K > 1 else x         # (B,TK,d)
+    xe = pin_act(xe)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, xe)
+    buf = pin_act(buf[:, :-1].reshape(B, E, C, d))
+
+    # --- expert FFN (batched over E; d_ff sharded over "model") ---
+    h = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    if "w_gate" in p:
+        h = _act(cfg.act)(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * h
+    else:
+        h = _act(cfg.act)(h)
+    h = pin_act(h, shard_last=True)                       # f over "model"
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])      # (B,E,C,d)
+    y = pin_act(y)
+
+    # --- scatter back, weighted by router prob ---
+    y = y.reshape(B, E * C, d)
+    y = jnp.concatenate([y, jnp.zeros((B, 1, d), y.dtype)], axis=1)
+    gathered = jax.vmap(lambda b, s: b[s])(y, slot)       # (B,TK,d)
+    gathered = pin_act(gathered)
+    w = (top_p.reshape(B, T * K) * keep).astype(x.dtype)
+    out = (gathered * w[..., None]).reshape(B, T, K, d).sum(axis=2)
+    return out, aux

@@ -1,0 +1,584 @@
+"""Model assembly: one stack covering every assigned architecture family.
+
+Families
+  dense  — llama-style pre-norm blocks (GQA attn + [Sw]GLU MLP), scanned
+  moe    — same skeleton with the MLP swapped for the capacity MoE
+  ssm    — Mamba2 blocks only (attention-free)
+  hybrid — Mamba2 backbone + ONE weight-shared attention block applied
+           every `hybrid_attn_every` layers (Zamba2; weight sharing is the
+           published design, simplification: standard residual insertion)
+  vlm    — dense backbone consuming [projected patch embeds | token embeds]
+  audio  — Whisper backbone: bidirectional encoder over stub frame
+           embeddings + causal decoder with cross-attention
+
+All parameters for scanned layers are stacked along a leading L dim
+(init via vmap over per-layer keys), so compile time is O(1) in depth and
+FSDP/TP shardings apply uniformly.  Serving uses functional caches threaded
+through the layer scan as scan xs/ys.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import attention as A
+from . import ssm as S
+from . import moe as M
+
+# activation-sharding hints live in layers.py (shared with moe/ssm);
+# re-exported here for the launch layer.
+from .layers import activation_batch_axes, pin_act, pin_kv  # noqa: E402
+
+
+def _pin(h):
+    """Layer-boundary pin: batch axes + optional d_axis on the feature dim.
+
+    Without this, GSPMD under FSDP params may flip activations to
+    batch-replicated / d-sharded (verified: 16× activation memory on
+    qwen110b train_4k); with d_axis set the saved-for-backward h stacks
+    also shrink by the TP degree (Megatron-SP-along-d algebra).
+    """
+    return pin_act(h, shard_last=True)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return L.init_layernorm(d, L._dtype(cfg))
+    return L.init_rmsnorm(d, L._dtype(cfg))
+
+
+def _init_attn_layer(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"ln1": _init_norm(cfg, cfg.d_model),
+         "attn": A.init_attention(ks[0], cfg),
+         "ln2": _init_norm(cfg, cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cross:
+        p["lnx"] = _init_norm(cfg, cfg.d_model)
+        p["xattn"] = A.init_attention(ks[2], cfg)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _init_norm(cfg, cfg.d_model),
+            "mamba": S.init_mamba2(k1, cfg)}
+
+
+def _stacked(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": L.init_embed(ks[0], cfg),
+                              "final_norm": _init_norm(cfg, cfg.d_model)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        params["blocks"] = _stacked(lambda k: _init_attn_layer(k, cfg),
+                                    ks[1], cfg.num_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stacked(lambda k: _init_mamba_layer(k, cfg),
+                                    ks[1], cfg.num_layers)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stacked(lambda k: _init_mamba_layer(k, cfg),
+                                    ks[1], cfg.num_layers)
+        params["shared_attn"] = _init_attn_layer(ks[2], cfg)
+    elif cfg.family == "audio":
+        params["blocks"] = _stacked(
+            lambda k: _init_attn_layer(k, cfg, cross=True), ks[1],
+            cfg.num_layers)
+        params["encoder"] = {
+            "blocks": _stacked(lambda k: _init_attn_layer(k, cfg), ks[3],
+                               cfg.encoder_layers),
+            "final_norm": _init_norm(cfg, cfg.d_model),
+            "pos": L.dense_init(ks[4], (cfg.encoder_seq, cfg.d_model),
+                                L._dtype(cfg), scale=0.01),
+        }
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        params["vis_proj"] = L.dense_init(ks[5], (cfg.d_model, cfg.d_model),
+                                          L._dtype(cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (shared by the no-cache and cached paths)
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, p, x):
+    return L.apply_norm(p, x, cfg.norm_eps)
+
+
+def _attn_noncache(lp, h, cfg: ModelConfig, *, causal: bool, positions,
+                   window: int, kv=None):
+    """Full-sequence attention (train / encoder / cross with given kv)."""
+    hn = _norm(cfg, lp["ln1"] if kv is None else lp["lnx"], h)
+    ap = lp["attn"] if kv is None else lp["xattn"]
+    if kv is None:
+        q, k, v = A.qkv(ap, hn, cfg, positions=positions, rope=True)
+    else:
+        q, _, _ = A.qkv(ap, hn, cfg, positions=positions, rope=False)
+        k, v = kv
+    o = A.attention_xla(q, k, v, causal=causal, window=window)
+    o = o.reshape(*o.shape[:2], -1) @ ap["wo"]
+    return h + o
+
+
+def _ffn(lp, h, cfg: ModelConfig):
+    hn = _norm(cfg, lp["ln2"], h)
+    if "moe" in lp:
+        out, aux = M.moe_block(lp["moe"], hn, cfg)
+        return h + out, aux
+    return h + L.mlp(lp["mlp"], hn, cfg), 0.0
+
+
+def _dense_block(lp, h, cfg: ModelConfig, *, positions, enc_out=None):
+    causal = True
+    h = _attn_noncache(lp, h, cfg, causal=causal, positions=positions,
+                       window=cfg.sliding_window)
+    if enc_out is not None and "xattn" in lp:
+        k, v = _cross_kv(lp["xattn"], enc_out, cfg)
+        h = _attn_noncache(lp, h, cfg, causal=False, positions=positions,
+                           window=0, kv=(k, v))
+    h, aux = _ffn(lp, h, cfg)
+    return h, aux
+
+
+def _cross_kv(ap, enc_out, cfg: ModelConfig):
+    Bz, Te, _ = enc_out.shape
+    K, hd = cfg.num_kv_heads, cfg.hd()
+    k = (enc_out @ ap["wk"]).reshape(Bz, Te, K, hd)
+    v = (enc_out @ ap["wv"]).reshape(Bz, Te, K, hd)
+    if "bk" in ap:
+        k = k + ap["bk"].reshape(K, hd)
+        v = v + ap["bv"].reshape(K, hd)
+    return k, v
+
+
+def _mamba_block(lp, h, cfg: ModelConfig, state=None):
+    hn = _norm(cfg, lp["ln1"], h)
+    out, new_state = S.mamba2_block(lp["mamba"], hn, cfg, state=state)
+    return h + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward (no cache): training and encoder passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(f, policy: str):
+    if policy == "none":
+        return f
+    if policy == "full":
+        return jax.checkpoint(f)
+    if policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+def _encoder_forward(params, cfg: ModelConfig, frames, remat: str = "none"):
+    """Whisper encoder over stub frame embeddings (B, Te, d)."""
+    enc = params["encoder"]
+    h = frames + enc["pos"][None, :frames.shape[1]]
+    positions = jnp.arange(frames.shape[1])[None]
+
+    def body(h, lp):
+        h = _attn_noncache(lp, h, cfg, causal=False, positions=positions,
+                           window=0)
+        h, _ = _ffn(lp, h, cfg)
+        return _pin(h), None
+
+    body = _maybe_remat(body, remat)
+    h, _ = lax.scan(body, h, enc["blocks"])
+    return _norm(cfg, enc["final_norm"], h)
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, extra_embeds):
+    """Token embeds, with VLM patch prefix when provided."""
+    h = L.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert extra_embeds is not None, "vlm needs patch embeddings"
+        vis = extra_embeds @ params["vis_proj"]
+        h = jnp.concatenate([vis.astype(h.dtype), h], axis=1)
+    return h
+
+
+def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+                  remat: str = "none"):
+    """Full forward to logits; `extra_embeds` = patches (vlm) / frames (audio).
+
+    Returns (logits (B, T_total, V), aux_loss).
+    """
+    enc_out = None
+    if cfg.family == "audio":
+        assert extra_embeds is not None, "audio needs frame embeddings"
+        enc_out = _encoder_forward(params, cfg, extra_embeds, remat)
+        h = L.embed(params["embed"], tokens)
+    else:
+        h = _embed_inputs(params, cfg, tokens, extra_embeds)
+    h = _pin(h)
+    Bz, T, _ = h.shape
+    positions = jnp.arange(T)[None]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        # aux losses leave via ys, not the carry (a mixed-dtype carry made
+        # XLA:CPU stack an f32 copy of every layer's h for the backward)
+        def body(h, lp):
+            h, a = _dense_block(lp, h, cfg, positions=positions,
+                                enc_out=enc_out)
+            return _pin(h), a
+        body = _maybe_remat(body, remat)
+        h, aux_ys = lax.scan(body, h, params["blocks"])
+        aux_total = jnp.sum(aux_ys)
+
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h, _ = _mamba_block(lp, h, cfg)
+            return _pin(h), None
+        body = _maybe_remat(body, remat)
+        h, _ = lax.scan(body, h, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        h = _hybrid_forward(params, cfg, h, positions, remat)
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = L.unembed(params["embed"], h)
+    return logits, aux_total
+
+
+def _hybrid_split(cfg: ModelConfig):
+    every = cfg.hybrid_attn_every
+    groups = cfg.num_layers // every
+    tail = cfg.num_layers - groups * every
+    return groups, every, tail
+
+
+def _tree_first(tree, n):
+    return jax.tree.map(lambda a: a[:n], tree)
+
+
+def _tree_rest(tree, n):
+    return jax.tree.map(lambda a: a[n:], tree)
+
+
+def _hybrid_forward(params, cfg: ModelConfig, h, positions, remat):
+    """Zamba2: every `every` Mamba2 layers, apply the shared attn block."""
+    groups, every, tail = _hybrid_split(cfg)
+    shared = params["shared_attn"]
+    head = _tree_first(params["blocks"], groups * every)
+    head = jax.tree.map(
+        lambda a: a.reshape(groups, every, *a.shape[1:]), head)
+
+    def mamba_body(h, lp):
+        h, _ = _mamba_block(lp, h, cfg)
+        return _pin(h), None
+
+    # nested remat: without it the whole 6-layer group's SSD internals
+    # (the (nc,Q,Q,H) decay tensors) stay live during the group backward
+    mamba_body = _maybe_remat(mamba_body, remat)
+
+    def group_body(h, gp):
+        h = _attn_noncache(shared, h, cfg, causal=True, positions=positions,
+                           window=cfg.sliding_window)
+        h, _ = _ffn(shared, h, cfg)
+        h, _ = lax.scan(mamba_body, h, gp)
+        return _pin(h), None
+
+    group_body = _maybe_remat(group_body, remat)
+    h, _ = lax.scan(group_body, h, head)
+    if tail:
+        tail_p = _tree_rest(params["blocks"], groups * every)
+        h, _ = lax.scan(mamba_body, h, tail_p)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, *, extra_embeds=None,
+            remat: str = "none", aux_weight: float = 0.01):
+    """Next-token CE; labels = -100 are masked.  Returns scalar fp32 loss."""
+    logits, aux = model_forward(params, cfg, tokens,
+                                extra_embeds=extra_embeds, remat=remat)
+    # VLM prefixes add vision tokens in front: loss only over text positions
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via one-hot contraction, NOT take_along_axis: a gather
+    # along the vocab dim would force GSPMD to all-gather the (B,T,V)
+    # logits across the "model" axis; the masked reduction stays sharded.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == safe[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    ce = (logz - gold) * mask
+    loss = ce.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeState:
+    """Functional serving state (a pytree)."""
+    cache: Any                 # per-family structure, stacked over layers
+    length: Any                # (B,) int32 valid lengths
+    enc_kv: Any = None         # audio: per-layer cross K/V (stacked)
+
+    def tree_flatten(self):
+        return (self.cache, self.length, self.enc_kv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    ServeState, lambda s: s.tree_flatten(),
+    lambda aux, c: ServeState(*c))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Any:
+    """Stacked per-layer cache; KV seq dim is later sharded over "model"."""
+    K, hd, Lr = cfg.num_kv_heads, cfg.hd(), cfg.num_layers
+    kv = lambda n: {"k": jnp.zeros((n, batch, max_seq, K, hd), dtype),
+                    "v": jnp.zeros((n, batch, max_seq, K, hd), dtype)}
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        return kv(Lr)
+    if cfg.family == "ssm":
+        st = S.init_mamba_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.zeros((Lr, *a.shape), a.dtype), st)
+    if cfg.family == "hybrid":
+        groups, every, tail = _hybrid_split(cfg)
+        st = S.init_mamba_state(cfg, batch)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.zeros((Lr, *a.shape), a.dtype), st),
+            "attn": kv(groups),
+        }
+    raise ValueError(cfg.family)
+
+
+def _attn_cached(lp, h, cfg: ModelConfig, lc, length, *, prefill: bool,
+                 enc_kv=None):
+    """Attention with cache read/write.  h: (B,T,d); lc: {"k","v"} (B,S,K,hd).
+
+    prefill: writes positions [0, T) and attends within the new block.
+    decode:  T == 1, writes at `length`, attends to the whole cache.
+    """
+    Bz, T, _ = h.shape
+    Smax = lc["k"].shape[1]
+    positions = (jnp.arange(T)[None] if prefill else length[:, None])
+    hn = _norm(cfg, lp["ln1"], h)
+    q, k, v = A.qkv(lp["attn"], hn, cfg, positions=positions, rope=True)
+    if prefill:
+        newk = pin_kv(lax.dynamic_update_slice_in_dim(
+            lc["k"], pin_kv(k.astype(lc["k"].dtype)), 0, axis=1))
+        newv = pin_kv(lax.dynamic_update_slice_in_dim(
+            lc["v"], pin_kv(v.astype(lc["v"].dtype)), 0, axis=1))
+        o = A.attention_xla(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        # one-hot select at per-row `length` (GSPMD-safe on a sharded S dim;
+        # pure select — an arithmetic blend promoted the stacked cache ys
+        # to fp32 on the CPU backend)
+        hot = (jnp.arange(Smax)[None, :] == length[:, None])        # (B,S)
+        newk = pin_kv(jnp.where(hot[..., None, None],
+                                k.astype(lc["k"].dtype), lc["k"]))
+        newv = pin_kv(jnp.where(hot[..., None, None],
+                                v.astype(lc["v"].dtype), lc["v"]))
+        o = A.decode_attention(q, newk, newv, length + 1,
+                               window=cfg.sliding_window)
+    o = o.reshape(Bz, T, -1) @ lp["attn"]["wo"]
+    h = h + o
+    if enc_kv is not None and "xattn" in lp:
+        hn = _norm(cfg, lp["lnx"], h)
+        qx, _, _ = A.qkv(lp["xattn"], hn, cfg, positions=positions, rope=False)
+        o = A.decode_attention(qx, enc_kv["k"], enc_kv["v"],
+                               jnp.full((Bz,), enc_kv["k"].shape[1])) \
+            if not prefill else \
+            A.attention_xla(qx, enc_kv["k"], enc_kv["v"], causal=False)
+        h = h + o.reshape(Bz, T, -1) @ lp["xattn"]["wo"]
+    h, _ = _ffn(lp, h, cfg)
+    return h, {"k": newk, "v": newv}
+
+
+def _scan_enc_kv(params, cfg, enc_out):
+    def body(_, lp):
+        k, v = _cross_kv(lp["xattn"], enc_out, cfg)
+        return None, {"k": k, "v": v}
+    _, kv = lax.scan(body, None, params["blocks"])
+    return kv
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, extra_embeds=None):
+    """Run the prompt; fill caches.  Returns (logits_last, state)."""
+    enc_kv = None
+    if cfg.family == "audio":
+        enc_out = _encoder_forward(params, cfg, extra_embeds)
+        enc_kv = _scan_enc_kv(params, cfg, enc_out)
+        h = L.embed(params["embed"], tokens)
+    else:
+        h = _embed_inputs(params, cfg, tokens, extra_embeds)
+    Bz, T, _ = h.shape
+    length0 = jnp.zeros((Bz,), jnp.int32)
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        xs = (params["blocks"], cache) if enc_kv is None else \
+             (params["blocks"], cache, enc_kv)
+
+        def body(h, lpc):
+            lp, lc = lpc[0], lpc[1]
+            ekv = lpc[2] if len(lpc) == 3 else None
+            h, newc = _attn_cached(lp, h, cfg, lc, length0, prefill=True,
+                                   enc_kv=ekv)
+            return h, newc
+
+        h, newcache = lax.scan(body, h, xs)
+    elif cfg.family == "ssm":
+        def body(h, lpc):
+            lp, lc = lpc
+            hn = _norm(cfg, lp["ln1"], h)
+            out, st = S.mamba2_block(lp["mamba"], hn, cfg, state=lc)
+            return h + out, st
+        h, newcache = lax.scan(body, h, (params["blocks"], cache))
+    elif cfg.family == "hybrid":
+        h, newcache = _hybrid_cached(params, cfg, h, cache, length0,
+                                     prefill=True)
+    else:
+        raise ValueError(cfg.family)
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    state = ServeState(cache=newcache,
+                       length=jnp.full((Bz,), T, jnp.int32),
+                       enc_kv=enc_kv)
+    return logits, state
+
+
+def decode_step(params, cfg: ModelConfig, token, state: ServeState):
+    """One token for every sequence.  token: (B, 1) int32."""
+    h = L.embed(params["embed"], token)
+    length = state.length
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        xs = (params["blocks"], state.cache) if state.enc_kv is None else \
+             (params["blocks"], state.cache, state.enc_kv)
+
+        def body(h, lpc):
+            lp, lc = lpc[0], lpc[1]
+            ekv = lpc[2] if len(lpc) == 3 else None
+            h, newc = _attn_cached(lp, h, cfg, lc, length, prefill=False,
+                                   enc_kv=ekv)
+            return h, newc
+        h, newcache = lax.scan(body, h, xs)
+    elif cfg.family == "ssm":
+        def body(h, lpc):
+            lp, lc = lpc
+            hn = _norm(cfg, lp["ln1"], h)
+            out, st = S.mamba2_block(lp["mamba"], hn, cfg, state=lc)
+            return h + out, st
+        h, newcache = lax.scan(body, h, (params["blocks"], state.cache))
+    elif cfg.family == "hybrid":
+        h, newcache = _hybrid_cached(params, cfg, h, state.cache, length,
+                                     prefill=False)
+    else:
+        raise ValueError(cfg.family)
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = L.unembed(params["embed"], h)
+    new_state = ServeState(cache=newcache, length=length + 1,
+                           enc_kv=state.enc_kv)
+    return logits, new_state
+
+
+def _hybrid_cached(params, cfg: ModelConfig, h, cache, length, *, prefill):
+    groups, every, tail = _hybrid_split(cfg)
+    shared = params["shared_attn"]
+    head = _tree_first(params["blocks"], groups * every)
+    head = jax.tree.map(lambda a: a.reshape(groups, every, *a.shape[1:]), head)
+    mcache_head = _tree_first(cache["mamba"], groups * every)
+    mcache_head = jax.tree.map(
+        lambda a: a.reshape(groups, every, *a.shape[1:]), mcache_head)
+
+    def mamba_body(h, lpc):
+        lp, lc = lpc
+        hn = _norm(cfg, lp["ln1"], h)
+        out, st = S.mamba2_block(lp["mamba"], hn, cfg, state=lc)
+        return h + out, st
+
+    def group_body(h, gx):
+        gp, gmc, gac = gx
+        h, newac = _attn_cached_shared(shared, h, cfg, gac, length,
+                                       prefill=prefill)
+        h, newmc = lax.scan(mamba_body, h, (gp, gmc))
+        return h, (newmc, newac)
+
+    h, (new_mc_head, new_ac) = lax.scan(
+        group_body, h, (head, mcache_head, cache["attn"]))
+    new_mc_head = jax.tree.map(
+        lambda a: a.reshape(groups * every, *a.shape[2:]), new_mc_head)
+    if tail:
+        tail_p = _tree_rest(params["blocks"], groups * every)
+        tail_c = _tree_rest(cache["mamba"], groups * every)
+        h, new_mc_tail = lax.scan(mamba_body, h, (tail_p, tail_c))
+        new_mc = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                              new_mc_head, new_mc_tail)
+    else:
+        new_mc = new_mc_head
+    return h, {"mamba": new_mc, "attn": new_ac}
+
+
+def _attn_cached_shared(shared, h, cfg, lc, length, *, prefill):
+    h, newc = _attn_cached(shared, h, cfg, lc, length, prefill=prefill)
+    return h, newc
+
+
+# ---------------------------------------------------------------------------
+# step factories (pure; jit/sharding applied by the launch layer)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, *, remat: str = "none"):
+    def step(params, tokens, labels, extra_embeds=None):
+        return loss_fn(params, cfg, tokens, labels,
+                       extra_embeds=extra_embeds, remat=remat)
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, tokens, cache, extra_embeds=None):
+        return prefill(params, cfg, tokens, cache, extra_embeds=extra_embeds)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, token, state):
+        return decode_step(params, cfg, token, state)
+    return step

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .gradsync import grad_sync, compress_int8, decompress_int8

@@ -1,0 +1,2 @@
+from .elastic import ElasticMesh, plan_elastic_mesh
+from .straggler import quorum_mean

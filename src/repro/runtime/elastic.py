@@ -1,0 +1,83 @@
+"""Elastic mesh management: survive node/pod loss without a recompile.
+
+Policy (1000+-node design):
+  * The "model" axis is sacred — losing a chip of a TP group kills that
+    whole group's pod-slice, so re-planning only ever shrinks the batch
+    axes ("pod", then "data").
+  * Shrinking a batch axis keeps every per-chip array shape identical
+    (batch is divided by the axis), so the step function does NOT need to
+    recompile — only the data loader's num_hosts and the grad-sync divisor
+    change.
+  * Parameters re-enter via the cross-mesh checkpoint restore (store.py);
+    in-memory survivors could also re-shard via device_put, which this
+    planner expresses as the (old_sharding → new_sharding) mapping.
+
+On real fleets, failure detection is the runtime's heartbeat (borg/GKE +
+jax.distributed); here `plan_elastic_mesh` is pure topology math and is
+unit-tested by masking devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticMesh:
+    axis_names: tuple[str, ...]
+    shape: tuple[int, ...]
+    lost: tuple[int, ...]          # flat indices of lost devices
+    global_batch_scale: float      # new_batch / old_batch (same per-chip)
+
+    def make(self, devices=None):
+        import numpy as np
+        devices = list(devices if devices is not None else jax.devices())
+        n = math.prod(self.shape)
+        if len(devices) < n:
+            raise ValueError(f"need {n} devices, have {len(devices)}")
+        return jax.sharding.Mesh(
+            np.asarray(devices[:n], dtype=object).reshape(self.shape),
+            self.axis_names)
+
+
+def plan_elastic_mesh(axis_names: Sequence[str], shape: Sequence[int],
+                      lost_flat_indices: Sequence[int]) -> ElasticMesh:
+    """Given lost device indices, shrink batch axes to exclude them.
+
+    Returns the largest surviving mesh with the same axis names and the
+    same non-batch axis sizes.  Raises if the model axis itself cannot be
+    preserved (no full TP slice survives).
+    """
+    axis_names = tuple(axis_names)
+    shape = list(shape)
+    lost = set(int(i) for i in lost_flat_indices)
+    n = math.prod(shape)
+    if not lost:
+        return ElasticMesh(axis_names, tuple(shape), (), 1.0)
+
+    # flat index → coordinates (row-major over axes)
+    def coords(i):
+        out = []
+        for s in reversed(shape):
+            out.append(i % s)
+            i //= s
+        return tuple(reversed(out))
+
+    batch_axes = [a for a in ("pod", "data") if a in axis_names]
+    if not batch_axes:
+        raise ValueError("no batch axis to shrink")
+    # find smallest prefix of the outermost batch axis to drop such that
+    # all lost devices fall in dropped slices
+    outer = axis_names.index(batch_axes[0])
+    bad = sorted({coords(i)[outer] for i in lost})
+    new_size = shape[outer] - len(bad)
+    if new_size < 1:
+        raise ValueError("all slices of the outer batch axis lost")
+    scale = new_size / shape[outer]
+    new_shape = list(shape)
+    new_shape[outer] = new_size
+    return ElasticMesh(axis_names, tuple(new_shape), tuple(sorted(lost)),
+                       scale)

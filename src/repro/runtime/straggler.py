@@ -1,0 +1,33 @@
+"""Straggler mitigation: bounded-staleness quorum on the cross-pod hop.
+
+At multi-pod scale the DCN hop is the straggler magnet (one slow host
+delays the whole allreduce).  The paper's decomposition isolates exactly
+that hop — Allreduce(lane) on 1/n payloads — which makes it the natural
+place for a quorum: pods that miss the deadline contribute zero and the
+mean is rescaled by the number of contributors.
+
+Without real hardware timeouts, the quorum is expressed as a mask input
+(tests drive it directly); on a real fleet the mask comes from the
+host-side watchdog that observes per-pod progress counters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quorum_mean(x, lane_axis: str, contributing):
+    """Mean of `x` over the lane (pod) axis counting only contributors.
+
+    x: per-pod value (inside shard_map); contributing: scalar bool/0-1 for
+    THIS pod.  Non-contributors are zeroed; the divisor is the live count
+    (min 1).  Deterministic given the mask — a dropped pod changes the
+    gradient exactly as if its microbatch were skipped, which the
+    (seed, step)-keyed data pipeline can replay later.
+    """
+    c = contributing.astype(x.dtype) if hasattr(contributing, "astype") \
+        else jnp.asarray(contributing, x.dtype)
+    num = lax.psum(x * c, lane_axis)
+    den = lax.psum(jnp.asarray(c, jnp.float32), lane_axis)
+    return num / jnp.maximum(den, 1.0).astype(x.dtype)

@@ -1,0 +1,7 @@
+"""Test support: multi-device collective cases run in subprocesses.
+
+The main pytest process must see exactly ONE device (per project policy the
+host-device-count flag is never set globally), so anything needing a real
+multi-device mesh runs through ``python -m repro.testing.collective_cases``
+in a child process which sets XLA_FLAGS before importing jax.
+"""

@@ -1,0 +1,413 @@
+"""Multi-device validation cases for repro.core.
+
+IMPORT-SAFE: this module never touches XLA flags, so pytest may import it
+to enumerate case names.  EXECUTING the cases needs 8 host devices — run
+``python -m repro.testing.run_collective_cases`` (which sets the flag in a
+fresh process before importing jax/this module).
+"""
+import sys
+
+import numpy as np            # noqa: E402
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import (      # noqa: E402
+    LaneTopology, allreduce_lane, reduce_scatter_lane, allgather_lane,
+    bcast_lane, alltoall_lane, reduce_lane, gather_lane, scatter_lane,
+    native_allreduce, native_allgather, native_reduce_scatter,
+    native_alltoall, pipelined_bcast_lane, ref,
+)
+from repro.core.pipeline import pipelined_reduce_lane  # noqa: E402
+from repro.core import ref as _ref  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# harness: build a mesh, scatter per-rank inputs, run a shard_map'd
+# collective, gather per-rank outputs, compare to the oracle.
+# ---------------------------------------------------------------------------
+
+def _mesh(shape, names):
+    return jax.make_mesh(shape, names)
+
+
+def _run(mesh, topo, fn, xs, out_rows=None):
+    """xs: (p, rows, feat) stacked per-global-rank inputs.
+
+    Device order: global rank = lane_rank * n + node_rank, with node_rank
+    row-major over topo.node_axes.  We shard the stacked input over
+    (lane, *node) so device (j, i) receives xs[j*n+i].
+    """
+    p, rows = xs.shape[0], xs.shape[1]
+    spec = P((topo.lane_axis, *topo.node_axes))
+    flat = xs.reshape(p * rows, *xs.shape[2:])
+    arr = jax.device_put(flat, jax.sharding.NamedSharding(mesh, spec))
+    shard_fn = jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)
+    out = jax.jit(shard_fn)(arr)
+    out = np.asarray(out)
+    orows = out.shape[0] // p
+    return out.reshape(p, orows, *out.shape[1:])
+
+
+def _inputs(p, rows, feat=3, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(p, rows, feat)).astype(dtype)
+
+
+def _close(a, b, tol=1e-5):
+    np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# cases
+# ---------------------------------------------------------------------------
+CASES = {}
+
+
+def case(f):
+    CASES[f.__name__] = f
+    return f
+
+
+def _topo3():
+    """2 pods × (2 data × 2 model) = 8 devices; node level is 2 axes."""
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    return mesh, LaneTopology(node_axes=("data", "model"), lane_axis="pod")
+
+
+def _topo2():
+    """4 lanes × 2-chip nodes (single node axis)."""
+    mesh = _mesh((4, 2), ("lane", "node"))
+    return mesh, LaneTopology(node_axes=("node",), lane_axis="lane")
+
+
+@case
+def allreduce_3axis():
+    mesh, topo = _topo3()
+    n, N = topo.sizes(mesh)
+    xs = _inputs(n * N, rows=8)
+    out = _run(mesh, topo, lambda x: allreduce_lane(x, topo), xs)
+    _close(out, _ref.oracle_allreduce(xs))
+
+
+@case
+def allreduce_2axis():
+    mesh, topo = _topo2()
+    xs = _inputs(8, rows=6)
+    out = _run(mesh, topo, lambda x: allreduce_lane(x, topo), xs)
+    _close(out, _ref.oracle_allreduce(xs))
+
+
+@case
+def allreduce_native_matches():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=8)
+    out = _run(mesh, topo, lambda x: native_allreduce(x, topo), xs)
+    _close(out, _ref.oracle_allreduce(xs))
+
+
+@case
+def reduce_scatter_3axis():
+    mesh, topo = _topo3()
+    p = 8
+    xs = _inputs(p, rows=p * 2)          # m=2 rows per block
+    out = _run(mesh, topo, lambda x: reduce_scatter_lane(x, topo), xs)
+    _close(out, _ref.oracle_reduce_scatter(xs))
+
+
+@case
+def reduce_scatter_native():
+    mesh, topo = _topo3()
+    p = 8
+    xs = _inputs(p, rows=p * 2)
+    out = _run(mesh, topo, lambda x: native_reduce_scatter(x, topo), xs)
+    _close(out, _ref.oracle_reduce_scatter(xs))
+
+
+@case
+def allgather_3axis():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=2)
+    out = _run(mesh, topo, lambda x: allgather_lane(x, topo), xs)
+    _close(out, _ref.oracle_allgather(xs))
+
+
+@case
+def allgather_native():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=2)
+    out = _run(mesh, topo, lambda x: native_allgather(x, topo), xs)
+    _close(out, _ref.oracle_allgather(xs))
+
+
+@case
+def bcast_3axis():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=8)
+    n, N = topo.sizes(mesh)
+    # root lane 0: node-replicate the root buffer there (SPMD convention)
+    root = xs[0].copy()
+    for i in range(n):
+        xs[i] = root
+    out = _run(mesh, topo, lambda x: bcast_lane(x, topo), xs)
+    _close(out, _ref.oracle_bcast(xs, root=0))
+
+
+@case
+def bcast_unreplicated_root():
+    mesh, topo = _topo2()
+    xs = _inputs(8, rows=4)
+    out = _run(mesh, topo,
+               lambda x: bcast_lane(x, topo, root_replicated=False), xs)
+    _close(out, _ref.oracle_bcast(xs, root=0))
+
+
+@case
+def alltoall_3axis():
+    mesh, topo = _topo3()
+    p = 8
+    xs = _inputs(p, rows=p * 2)
+    out = _run(mesh, topo, lambda x: alltoall_lane(x, topo), xs)
+    _close(out, _ref.oracle_alltoall(xs))
+
+
+@case
+def alltoall_native():
+    mesh, topo = _topo3()
+    p = 8
+    xs = _inputs(p, rows=p * 2)
+    out = _run(mesh, topo, lambda x: native_alltoall(x, topo), xs)
+    _close(out, _ref.oracle_alltoall(xs))
+
+
+@case
+def reduce_3axis():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=4)
+    out = _run(mesh, topo, lambda x: reduce_lane(x, topo), xs)
+    _close(out, _ref.oracle_reduce(xs, root=0))
+
+
+@case
+def gather_2axis():
+    mesh, topo = _topo2()
+    xs = _inputs(8, rows=2)
+    out = _run(mesh, topo, lambda x: gather_lane(x, topo), xs)
+    _close(out, _ref.oracle_gather(xs, root=0))
+
+
+@case
+def scatter_2axis():
+    mesh, topo = _topo2()
+    p = 8
+    xs = _inputs(p, rows=p * 2)
+    root = xs[0].copy()
+    n, N = topo.sizes(mesh)
+    for i in range(n):          # replicate root buffer on the root node
+        xs[i] = root
+    out = _run(mesh, topo, lambda x: scatter_lane(x, topo), xs)
+    _close(out, _ref.oracle_scatter(xs, root=0))
+
+
+@case
+def pipelined_bcast():
+    mesh, topo = _topo2()
+    n, N = topo.sizes(mesh)
+    B = 4
+    rows = B * n * 3
+    xs = _inputs(8, rows=rows)
+    root = xs[0].copy()
+    for i in range(n):
+        xs[i] = root
+    out = _run(mesh, topo,
+               lambda x: pipelined_bcast_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_bcast(xs, root=0))
+
+
+@case
+def pipelined_bcast_3axis():
+    mesh, topo = _topo3()
+    n, N = topo.sizes(mesh)
+    B = 3
+    rows = B * n * 2
+    xs = _inputs(8, rows=rows)
+    root = xs[0].copy()
+    for i in range(n):
+        xs[i] = root
+    out = _run(mesh, topo,
+               lambda x: pipelined_bcast_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_bcast(xs, root=0))
+
+
+@case
+def pipelined_reduce():
+    mesh, topo = _topo2()
+    n, N = topo.sizes(mesh)
+    B = 4
+    rows = B * n * 2
+    xs = _inputs(8, rows=rows, seed=11)
+    out = _run(mesh, topo,
+               lambda x: pipelined_reduce_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_reduce(xs, root=0), tol=1e-4)
+
+
+@case
+def pipelined_reduce_3axis():
+    mesh, topo = _topo3()
+    n, N = topo.sizes(mesh)
+    B = 3
+    rows = B * n * 2
+    xs = _inputs(8, rows=rows, seed=12)
+    out = _run(mesh, topo,
+               lambda x: pipelined_reduce_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_reduce(xs, root=0), tol=1e-4)
+
+
+@case
+def allreduce_int32():
+    mesh, topo = _topo3()
+    rng = np.random.default_rng(1)
+    xs = rng.integers(-50, 50, size=(8, 8, 3)).astype(np.int32)
+    out = _run(mesh, topo, lambda x: allreduce_lane(x, topo), xs)
+    np.testing.assert_array_equal(out, _ref.oracle_allreduce(xs))
+
+
+@case
+def allgather_unordered_zero_copy():
+    """reorder=False returns a node-major permutation of the rank order."""
+    mesh, topo = _topo3()
+    n, N = topo.sizes(mesh)
+    xs = _inputs(8, rows=2)
+    out = _run(mesh, topo,
+               lambda x: allgather_lane(x, topo, reorder=False), xs)
+    want = _ref.oracle_allgather(xs)     # (p, p*m, f)
+    m = 2
+    w = want.reshape(8, N, n, m, -1).transpose(0, 2, 1, 3, 4).reshape(want.shape)
+    _close(out, w)
+
+
+@case
+def gradsync_lane_matches_native():
+    """Paper technique vs one-shot psum on a gradient pytree."""
+    from repro.optim import grad_sync
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    rng = np.random.default_rng(3)
+    gshapes = {"a": (4, 6), "b": (10,), "c": (3, 2, 2)}
+    gl = {k: rng.normal(size=(4, *s)).astype(np.float32)
+          for k, s in gshapes.items()}     # 4 replicas over (pod,data)
+
+    def run(strategy):
+        def f(g):
+            return grad_sync(g, topo, strategy)
+        # flattened arrays: replica dim folds into dim0 ⇒ len(s) spec entries
+        spec = {k: P(("pod", "data"), *([None] * (len(s) - 1)))
+                for k, s in gshapes.items()}
+        arrs = {k: jax.device_put(
+            v.reshape(-1, *v.shape[2:]),
+            jax.sharding.NamedSharding(mesh, spec[k])) for k, v in gl.items()}
+        sm = jax.shard_map(f, mesh=mesh, in_specs=(spec,),
+                           out_specs=jax.tree.map(lambda _: P(), spec),
+                           check_vma=False)
+        return jax.tree.map(np.asarray, jax.jit(sm)(arrs))
+
+    native = run("native")
+    lane = run("lane")
+    for k in gl:
+        np.testing.assert_allclose(lane[k][:gl[k].shape[1]],
+                                   native[k][:gl[k].shape[1]], rtol=1e-5)
+
+
+@case
+def gradsync_int8_close():
+    from repro.optim import grad_sync
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    rng = np.random.default_rng(4)
+    g = {"w": rng.normal(size=(4, 64, 8)).astype(np.float32)}
+    spec = {"w": P(("pod", "data"), None)}
+    arrs = {"w": jax.device_put(
+        g["w"].reshape(-1, 8),
+        jax.sharding.NamedSharding(mesh, spec["w"]))}
+
+    def run(strategy):
+        sm = jax.shard_map(lambda x: grad_sync(x, topo, strategy),
+                           mesh=mesh, in_specs=(spec,),
+                           out_specs={"w": P()}, check_vma=False)
+        return np.asarray(jax.jit(sm)(arrs)["w"])
+
+    native, q = run("native"), run("lane_int8")
+    scale = np.abs(native).max()
+    np.testing.assert_allclose(q, native, atol=scale * 0.02)
+
+
+@case
+def gradsync_zero1_matches_native():
+    """ZeRO-1 path: RS'd flat grads, gathered back, equal the native mean."""
+    from repro.optim import grad_sync
+    from repro.optim.gradsync import _unflatten_bucket
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    rng = np.random.default_rng(7)
+    g = {"w": rng.normal(size=(4, 32, 4)).astype(np.float32),
+         "b": rng.normal(size=(4, 10)).astype(np.float32)}
+    spec = {"w": P(("pod", "data"), None), "b": P(("pod", "data"))}
+    arrs = {k: jax.device_put(v.reshape(-1, *v.shape[2:]),
+                              jax.sharding.NamedSharding(mesh, spec[k]))
+            for k, v in g.items()}
+
+    def f(x):
+        shard, sp = grad_sync(x, topo, "lane_zero1")
+        full = shard
+        for a in reversed(topo.node_axes):
+            full = jax.lax.all_gather(full, a, axis=0, tiled=True)
+        return _unflatten_bucket(full, sp)
+
+    sm = jax.shard_map(f, mesh=mesh, in_specs=(spec,),
+                       out_specs=jax.tree.map(lambda _: P(), spec),
+                       check_vma=False)
+    out = jax.tree.map(np.asarray, jax.jit(sm)(arrs))
+    for k in g:
+        np.testing.assert_allclose(out[k], g[k].mean(axis=0), rtol=1e-5,
+                                   atol=1e-6)
+
+
+@case
+def quorum_mean_drops_pod():
+    from repro.runtime import quorum_mean
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+
+    def f(xl):
+        pod = jax.lax.axis_index("pod")
+        contributing = (pod == 0)       # pod 1 is the "straggler"
+        return quorum_mean(xl, "pod", contributing)
+
+    spec = P(("pod", "data", "model"), None)
+    arr = jax.device_put(x.reshape(-1, 4)[:, :],
+                         jax.sharding.NamedSharding(mesh, spec))
+    sm = jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec)
+    out = np.asarray(jax.jit(sm)(arr)).reshape(8, 4)
+    # pod 0 devices are global ranks 0..3; output = pod-0 value only
+    for i in range(4):
+        np.testing.assert_allclose(out[i], x[i], rtol=1e-6)
+        np.testing.assert_allclose(out[i + 4], x[i], rtol=1e-6)
+
+
+def main(argv):
+    names = argv or sorted(CASES)
+    fails = 0
+    for name in names:
+        try:
+            CASES[name]()
+            print(f"PASS {name}")
+        except Exception as e:  # noqa: BLE001
+            fails += 1
+            msg = str(e).splitlines()[0][:200] if str(e) else type(e).__name__
+            print(f"FAIL {name}: {msg}")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

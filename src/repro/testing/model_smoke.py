@@ -1,0 +1,106 @@
+"""Per-arch smoke pass: reduced config, fwd + grad + prefill/decode on CPU.
+
+Run directly:  PYTHONPATH=src python -m repro.testing.model_smoke [arch ...]
+Also imported by tests/test_archs.py (single-device, no XLA_FLAGS needed).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import resolve, all_archs
+from repro.models import (init_model, model_forward, init_cache, prefill,
+                          decode_step, loss_fn)
+
+
+def _extra(cfg, B, T, key):
+    if cfg.family == "vlm":
+        return jax.random.normal(key, (B, cfg.vision_tokens, cfg.d_model),
+                                 jnp.float32)
+    if cfg.family == "audio":
+        return jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model),
+                                 jnp.float32)
+    return None
+
+
+def smoke_arch(arch: str, B: int = 2, T: int = 32) -> dict:
+    """Returns dict of checked quantities; raises on any failure."""
+    cfg = resolve(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = init_model(k1, cfg)
+    n_params = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+
+    T_text = T - (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    tokens = jax.random.randint(k2, (B, T_text), 0, cfg.vocab_size)
+    extra = _extra(cfg, B, T, k3)
+
+    # ---- forward ----
+    logits, aux = jax.jit(
+        lambda p, t, e: model_forward(p, cfg, t, extra_embeds=e))(
+            params, tokens, extra)
+    T_total = T if cfg.family == "vlm" else T_text
+    assert logits.shape == (B, T_total, cfg.vocab_size), logits.shape
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+    # ---- loss + grad (one train step worth of math) ----
+    # next-token labels (shifted); last position masked out
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((B, 1), -100, tokens.dtype)], axis=1)
+    lval, grads = jax.jit(jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, tokens, labels, extra_embeds=extra)))(params)
+    assert bool(jnp.isfinite(lval)), "loss not finite"
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"bad grad norm {gnorm}"
+
+    # ---- prefill + 2 decode steps ----
+    cache = init_cache(cfg, B, max_seq=T_text + 8, dtype=jnp.float32)
+    lg, state = jax.jit(
+        lambda p, t, c, e: prefill(p, cfg, t, c, extra_embeds=e))(
+            params, tokens, cache, extra)
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), "NaN in prefill logits"
+    step = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s))
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    for _ in range(2):
+        lg2, state = step(params, tok, state)
+        assert lg2.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(lg2).all()), "NaN in decode logits"
+        tok = jnp.argmax(lg2[:, -1:], -1).astype(jnp.int32)
+
+    # ---- decode-vs-forward consistency (teacher forcing) ----
+    # run forward on tokens; prefill on tokens[:, :-1] then decode last token
+    if cfg.family not in ("vlm", "audio"):
+        cache2 = init_cache(cfg, B, max_seq=T_text + 8, dtype=jnp.float32)
+        lg_a, st = jax.jit(lambda p, t, c: prefill(p, cfg, t, c))(
+            params, tokens[:, :-1], cache2)
+        lg_b, _ = step(params, tokens[:, -1:], st)
+        full_logits, _ = jax.jit(
+            lambda p, t: model_forward(p, cfg, t))(params, tokens)
+        np.testing.assert_allclose(np.asarray(lg_b[:, 0]),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=2e-2, atol=2e-2)
+
+    return {"arch": arch, "params": n_params, "loss": float(lval)}
+
+
+def main(argv):
+    archs = argv or all_archs()
+    fails = 0
+    for a in archs:
+        try:
+            info = smoke_arch(a)
+            print(f"PASS {a}  params={info['params']:,}  loss={info['loss']:.3f}")
+        except Exception as e:  # noqa: BLE001
+            fails += 1
+            import traceback
+            print(f"FAIL {a}: {type(e).__name__}: {str(e)[:300]}")
+            traceback.print_exc(limit=4)
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

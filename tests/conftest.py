@@ -1,0 +1,9 @@
+# NOTE: deliberately NO XLA_FLAGS / device-count manipulation here — the
+# main test process must see the real single CPU device (project policy).
+# Multi-device coverage runs through subprocesses (test_collectives.py).
+import os
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

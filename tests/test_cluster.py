@@ -1,0 +1,36 @@
+"""Cluster launch planning: per-host env/argv, elastic renumbering,
+manifest rendering (the 1000+-node runnability layer, unit-testable)."""
+import json
+
+from repro.launch.cluster import (plan_cluster, surviving_plans,
+                                  render_ssh_script, render_gke_jobset)
+
+
+def test_plan_shape_and_ids():
+    plans = plan_cluster(num_pods=2, hosts_per_pod=64)
+    assert len(plans) == 128
+    assert [p.process_id for p in plans] == list(range(128))
+    assert plans[64].pod_index == 1                  # pod-major numbering
+    assert plans[0].env["JAX_NUM_PROCESSES"] == "128"
+    assert plans[77].env["REPRO_HOST_INDEX"] == "77"
+
+
+def test_elastic_pod_loss_renumbers():
+    plans = plan_cluster(num_pods=2, hosts_per_pod=64)
+    left = surviving_plans(plans, lost_pods=[0])
+    assert len(left) == 64
+    assert [p.process_id for p in left] == list(range(64))
+    assert all(p.pod_index == 1 for p in left)
+    assert left[0].env["JAX_NUM_PROCESSES"] == "64"
+
+
+def test_renders():
+    plans = plan_cluster(num_pods=2, hosts_per_pod=4)
+    sh = render_ssh_script(plans)
+    assert sh.count("ssh ") == 8 and sh.strip().endswith("wait")
+    js = json.loads(render_gke_jobset(plans, image="repro:latest"))
+    rj = js["spec"]["replicatedJobs"][0]
+    assert rj["replicas"] == 2
+    assert rj["template"]["spec"]["parallelism"] == 4
+    tpl = rj["template"]["spec"]["template"]["spec"]
+    assert tpl["terminationGracePeriodSeconds"] == 120   # SIGTERM ckpt window

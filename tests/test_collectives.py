@@ -1,0 +1,41 @@
+"""Multi-device collective correctness: every full-lane mock-up (paper
+Listings 1-6), the §5 pipelined construction, gradsync strategies, and the
+straggler quorum — each vs its single-process oracle, on an 8-device CPU
+mesh in a subprocess (the parent process keeps 1 device)."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.testing import collective_cases
+
+
+def _run_all():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.run_collective_cases"],
+        capture_output=True, text=True, timeout=1200)
+    results = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith(("PASS ", "FAIL ")):
+            status, rest = line.split(" ", 1)
+            name = rest.split(":")[0].strip()
+            results[name] = (status, line)
+    return results
+
+
+_RESULTS = None
+
+
+def _results():
+    global _RESULTS
+    if _RESULTS is None:
+        _RESULTS = _run_all()
+    return _RESULTS
+
+
+@pytest.mark.parametrize("case", sorted(collective_cases.CASES))
+def test_collective_case(case):
+    res = _results()
+    assert case in res, f"case {case} produced no result (crash?)"
+    status, line = res[case]
+    assert status == "PASS", line

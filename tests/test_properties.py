@@ -1,0 +1,167 @@
+"""Hypothesis property tests on the system's invariants.
+
+Covers the paper's §3 cost algebra (full-lane volume conservation), the
+§5 pipeline step count, loss masking, data-pipeline determinism/
+partitioning, gradient-compression bounds, and elastic-mesh planning.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import mockup_cost, speedup_bound
+from repro.core.pipeline import pipeline_steps
+from repro.configs import resolve, all_archs
+from repro.models.transformer import loss_fn
+from repro.models import init_model
+from repro.data import make_loader
+from repro.optim.gradsync import compress_int8, decompress_int8
+from repro.runtime import plan_elastic_mesh
+
+sizes = st.integers(min_value=2, max_value=64)
+counts = st.integers(min_value=1, max_value=10_000)
+
+
+# ---------------------------------------------------------------------------
+# paper §3: cost-model invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(n=sizes, N=sizes, c=counts)
+def test_fulllane_internode_volume(n, N, c):
+    """Bcast/allgather: total data in/out of a node is the full-lane ideal —
+    c for bcast (§3.1), (N-1)·n·c? no: (p-n)·c/… — use the paper's exact
+    expressions and check consistency relations instead of re-deriving."""
+    b = mockup_cost("bcast", n, N, c)
+    assert b.vol_internode_per_node == c                 # §3.1: exactly c
+    ag = mockup_cost("allgather", n, N, c)
+    # per-process total volume is optimal (p-1)c (§3.3)
+    assert ag.vol_node + ag.vol_lane == (n * N - 1) * c
+    ar = mockup_cost("allreduce", n, N, c)
+    # §3.4: 2(p-1)/p·c total per process, up to the n/N split granularity
+    total = ar.vol_node + ar.vol_lane
+    assert total <= 2 * c
+    assert total >= 2 * c * (n * N - 1) / (n * N) - 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=sizes, N=sizes, c=counts)
+def test_scatter_gather_optimal_volume(n, N, c):
+    g = mockup_cost("gather", n, N, c)
+    p = n * N
+    assert g.vol_node + g.vol_lane == (p - 1) * c        # §3.2 optimal
+    assert g.vol_internode_per_node == (p - n) * c
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=sizes, N=sizes, k=st.integers(1, 8))
+def test_speedup_bound(n, N, k):
+    s = speedup_bound("allreduce", n, N, k)
+    assert 1 <= s <= max(k, 1)
+
+
+@settings(max_examples=100, deadline=None)
+@given(B=st.integers(1, 64), N=st.integers(2, 64))
+def test_pipeline_step_count(B, N):
+    """Prop. 1: steps = B + N - 1 = T_single(p/k, c/k) + O(1)."""
+    assert pipeline_steps(B, N) == B + N - 1
+
+
+# ---------------------------------------------------------------------------
+# loss invariants
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    cfg = resolve("llama3.2-3b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_mask_drops_positions(seed):
+    cfg, params = _tiny()
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    l_full = loss_fn(params, cfg, toks, labels)
+    # masking all but one position = CE of that position alone
+    masked = jnp.full_like(labels, -100).at[0, 3].set(labels[0, 3])
+    l_one = loss_fn(params, cfg, toks, masked)
+    assert np.isfinite(float(l_full)) and np.isfinite(float(l_one))
+    # fully masked → zero CE (only aux, which is 0 for dense)
+    l_none = loss_fn(params, cfg, toks, jnp.full_like(labels, -100))
+    assert float(l_none) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: determinism + host partition correctness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), hosts=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 100))
+def test_loader_determinism_and_partition(step, hosts, seed):
+    cfg = resolve("llama3.2-3b", smoke=True)
+    gb, sl = 8, 32
+    ref = make_loader(cfg, sl, gb, seed=seed).batch_at(step)
+    parts = [make_loader(cfg, sl, gb, seed=seed, host_index=h,
+                         num_hosts=hosts).batch_at(step) for h in range(hosts)]
+    toks = np.concatenate([p[0] for p in parts])
+    labs = np.concatenate([p[1] for p in parts])
+    np.testing.assert_array_equal(toks, ref[0])
+    np.testing.assert_array_equal(labs, ref[1])
+    # determinism across instances
+    again = make_loader(cfg, sl, gb, seed=seed).batch_at(step)
+    np.testing.assert_array_equal(again[0], ref[0])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression: error bound
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5000),
+       scale=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_bound(seed, n, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s, n0 = compress_int8(x)
+    y = decompress_int8(q, s, n0)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    # per-chunk bound: half a quantization step
+    chunks = np.asarray(x)
+    pad = (-n) % 1024
+    cm = np.abs(np.pad(chunks, (0, pad))).reshape(-1, 1024).max(1)
+    bound = np.repeat(cm / 127.0, 1024)[:n] * 0.5 + 1e-6
+    assert (err <= bound + 1e-5 * cm.max()).all()
+
+
+# ---------------------------------------------------------------------------
+# elastic mesh planning
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(lost_pod=st.integers(0, 1))
+def test_elastic_drop_pod(lost_pod):
+    shape = (2, 4, 4)
+    lost = [lost_pod * 16 + i for i in range(16)]
+    em = plan_elastic_mesh(("pod", "data", "model"), shape, lost)
+    assert em.shape == (1, 4, 4)
+    assert em.global_batch_scale == 0.5
+
+
+@settings(max_examples=50, deadline=None)
+@given(bad=st.lists(st.integers(0, 3), min_size=1, max_size=3, unique=True))
+def test_elastic_drop_data_rows(bad):
+    # single-pod mesh: lose chips in given data rows
+    shape = (4, 4)
+    lost = [b * 4 + 1 for b in bad]
+    em = plan_elastic_mesh(("data", "model"), shape, lost)
+    assert em.shape[0] == 4 - len(set(bad))
+    assert em.shape[1] == 4
+
+
+def test_elastic_noop():
+    em = plan_elastic_mesh(("pod", "data", "model"), (2, 16, 16), [])
+    assert em.shape == (2, 16, 16) and em.global_batch_scale == 1.0
