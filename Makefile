@@ -1,0 +1,26 @@
+# CI / local developer targets.
+#
+# `make ci` is what every PR must keep green: the tier-1 suite (with the
+# 8-host-device flag so the multi-device subprocess cases are exercised
+# even where the runner defaults differ) plus the benchmark smoke, which
+# lowers the gradient-sync strategies and structurally verifies the §5
+# lane/node overlap on the optimized HLO (writes BENCH_gradsync.json).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: ci tier1 bench-smoke bench test
+
+tier1:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
+		$(PY) -m pytest -x -q
+
+test: tier1
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+
+bench:
+	$(PY) -m benchmarks.run
+
+ci: tier1 bench-smoke

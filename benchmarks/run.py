@@ -2,9 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper tables run on an
 8-device CPU mesh in a subprocess so this process keeps one device), then
-the roofline table derived from the multi-pod dry-run artifacts.
+the gradient-sync trajectory (``BENCH_gradsync.json`` — native vs lane vs
+lane_pipelined with the HLO overlap check), then the roofline table
+derived from the multi-pod dry-run artifacts.
 
-  PYTHONPATH=src python -m benchmarks.run [--skip-tables] [--skip-roofline]
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [--skip-tables]
+      [--skip-roofline] [--skip-gradsync]
+
+``--smoke`` is the CI mode: it runs only the gradsync benchmark, at a
+reduced payload, which still exercises lowering, the bucket schedule, and
+the structural HLO verification end to end.
 """
 import argparse
 import os
@@ -13,22 +20,39 @@ import subprocess
 import sys
 
 
+def _sub(module_args, env, root):
+    r = subprocess.run([sys.executable, "-m", *module_args],
+                       text=True, env=env, cwd=root, timeout=3600)
+    return r.returncode
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: gradsync bench only, small payload")
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-gradsync", action="store_true")
     args = ap.parse_args(argv)
     rc = 0
 
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+
+    if args.smoke:
+        args.skip_tables = args.skip_roofline = True
+
     if not args.skip_tables:
         print("== paper-table benchmarks (8-device CPU mesh, subprocess) ==")
-        env = dict(os.environ)
-        root = pathlib.Path(__file__).resolve().parents[1]
-        env["PYTHONPATH"] = f"{root / 'src'}:{root}"
-        r = subprocess.run(
-            [sys.executable, "-m", "benchmarks.paper_tables"],
-            text=True, env=env, cwd=root, timeout=3600)
-        rc |= r.returncode
+        rc |= _sub(["benchmarks.paper_tables"], env, root)
+
+    if not args.skip_gradsync:
+        print("== gradient-sync trajectory (8-device CPU mesh, subprocess) ==")
+        cmd = ["benchmarks.gradsync_bench"]
+        if args.smoke:
+            cmd.append("--smoke")
+        rc |= _sub(cmd, env, root)
 
     if not args.skip_roofline:
         from benchmarks import roofline

@@ -61,7 +61,7 @@ def main():
             check_vma=False))
 
     results = {}
-    for strat in ("native", "lane", "lane_int8"):
+    for strat in ("native", "lane", "lane_pipelined", "lane_int8"):
         f = make(strat)
         lowered = f.lower(params, tok_arr, lab_arr)
         stats = analyze(lowered.compile().as_text(), pod_size=4)
@@ -77,6 +77,8 @@ def main():
     l0, g0, _ = results["native"]
     l1, g1, _ = results["lane"]
     assert abs(g0 - g1) / g0 < 1e-5, "lane must equal native"
+    _, gp, _ = results["lane_pipelined"]
+    assert abs(gp - g0) / g0 < 1e-5, "pipelined lane must equal native"
     _, gq, _ = results["lane_int8"]
     print(f"\nint8 DCN hop grad-norm deviation: {abs(gq-g0)/g0:.2%} "
           f"(compression error, bounded by tests)")

@@ -1,0 +1,69 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the current JAX surface (``jax.shard_map``
+with ``check_vma``, ``lax.pcast`` varying-manual-axes casts, Pallas
+``pltpu.CompilerParams``).  Containers pin older releases (0.4.x) where
+those spell ``jax.experimental.shard_map.shard_map(check_rep=...)``,
+no-pcast (no VMA type system to cast in), and ``pltpu.TPUCompilerParams``.
+
+``install()`` bridges the gap *forward only*: it adds the modern names as
+aliases when missing and never overrides a real implementation.  It is
+invoked from ``repro.__init__`` so any ``import repro.*`` makes the rest
+of the code version-agnostic.
+
+Shims:
+  lax.axis_size   — ``lax.psum(1, axis)`` (statically folded) on 0.4.x.
+  jax.shard_map   — wraps experimental shard_map; ``check_vma`` maps to
+                    ``check_rep``.  On 0.4.x replication checking predates
+                    the VMA rules our scans rely on (carries start
+                    replicated and become device-varying mid-scan), so
+                    check_rep is forced off there; values are unaffected —
+                    it is a static typing pass, and correctness is covered
+                    by the oracle tests.
+  lax.pcast       — identity on 0.4.x: without the VMA type system there
+                    is nothing to cast; on modern JAX the real pcast runs.
+  pallas CompilerParams — alias of TPUCompilerParams on 0.4.x.
+"""
+from __future__ import annotations
+
+import functools
+
+
+def install() -> None:
+    import jax
+    from jax import lax
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental import shard_map as _esm
+
+        @functools.wraps(_esm.shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                      **kw):
+            kw.pop("check_rep", None)
+            return _esm.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_rep=False,
+                                  **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(lax, "axis_size"):
+        def axis_size(axis_name):
+            # the classic spelling: psum of a literal 1 is folded to the
+            # static axis size at trace time
+            return lax.psum(1, axis_name)
+
+        lax.axis_size = axis_size
+
+    if not hasattr(lax, "pcast"):
+        def pcast(x, axes, *, to):  # noqa: ARG001 - mirror the real sig
+            return x
+
+        lax.pcast = pcast
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        if not hasattr(pltpu, "CompilerParams") and \
+                hasattr(pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except ImportError:  # pallas not in this build; kernels guard anyway
+        pass

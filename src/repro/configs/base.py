@@ -139,7 +139,11 @@ class RunConfig:
     shape: ShapeConfig
     fsdp: bool = False             # shard params over the data axis too
     remat: str = "none"            # none | full | dots
-    gradsync: str = "native"       # native | lane | lane_zero1 | lane_int8
+    # native | lane | lane_pipelined | lane_int8 | lane_zero1
+    gradsync: str = "native"
+    # gradient-sync bucket count; 0 = cost-model auto (§5 latency/bandwidth
+    # crossover, core.costmodel.optimal_num_buckets)
+    gradsync_buckets: int = 0
     scan_layers: bool = True
     microbatch: int = 0            # 0 = no grad accumulation
     # serving

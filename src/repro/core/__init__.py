@@ -7,21 +7,30 @@ lanecomm = cross-pod axis.  See DESIGN.md §2 for the mapping.
 from .lane import LaneTopology, PRODUCTION, SINGLE_POD
 from .collectives import (
     allreduce_lane, reduce_scatter_lane, allgather_lane, bcast_lane,
-    alltoall_lane, reduce_lane, gather_lane, scatter_lane,
+    alltoall_lane, reduce_lane, gather_lane, scatter_lane, scan_lane,
     native_allreduce, native_allgather, native_reduce_scatter,
-    native_alltoall,
+    native_alltoall, native_scan,
 )
-from .pipeline import pipelined_bcast_lane, pipeline_steps
-from .costmodel import CollectiveCost, mockup_cost, klane_time, HW
+from .pipeline import (
+    pipelined_bcast_lane, pipelined_allreduce_lane, pipeline_steps,
+    allreduce_pipeline_steps,
+)
+from .costmodel import (
+    CollectiveCost, mockup_cost, klane_time, HW, optimal_num_buckets,
+    bucket_pipeline_time,
+)
 from .guidelines import check_guideline, GuidelineResult, time_fn
 
 __all__ = [
     "LaneTopology", "PRODUCTION", "SINGLE_POD",
     "allreduce_lane", "reduce_scatter_lane", "allgather_lane", "bcast_lane",
     "alltoall_lane", "reduce_lane", "gather_lane", "scatter_lane",
+    "scan_lane",
     "native_allreduce", "native_allgather", "native_reduce_scatter",
-    "native_alltoall",
-    "pipelined_bcast_lane", "pipeline_steps",
+    "native_alltoall", "native_scan",
+    "pipelined_bcast_lane", "pipelined_allreduce_lane", "pipeline_steps",
+    "allreduce_pipeline_steps",
     "CollectiveCost", "mockup_cost", "klane_time", "HW",
+    "optimal_num_buckets", "bucket_pipeline_time",
     "check_guideline", "GuidelineResult", "time_fn",
 ]

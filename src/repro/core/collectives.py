@@ -45,8 +45,9 @@ from .lane import LaneTopology
 __all__ = [
     "allreduce_lane", "reduce_scatter_lane", "allgather_lane", "bcast_lane",
     "alltoall_lane", "reduce_lane", "gather_lane", "scatter_lane",
+    "scan_lane",
     "native_allreduce", "native_allgather", "native_reduce_scatter",
-    "native_alltoall",
+    "native_alltoall", "native_scan",
 ]
 
 
@@ -313,6 +314,72 @@ def reduce_lane(x, topo: LaneTopology, *, root_lane: int = 0,
     is_root = jnp.logical_and(topo.lane_rank() == root_lane,
                               topo.node_rank() == root_node)
     return jnp.where(is_root, out, jnp.zeros_like(out))
+
+
+# --------------------------------------------------------------------------
+# Scan (paper abstract list / §3):  Scan(node) ∘ Exscan(lane, striped) ∘
+#                                   AG(node)
+# --------------------------------------------------------------------------
+
+def scan_lane(x, topo: LaneTopology):
+    """Full-lane inclusive scan (MPI_Scan): out on global rank g is
+    Σ_{g'≤g} x_{g'}, elementwise, ranks consecutive (g = lane_rank·n +
+    node_rank — processes of one node are contiguous, paper §3).
+
+    Decomposition: (1) inclusive Scan over the node communicator; (2) the
+    node TOTALS need an *exclusive* scan over the lane communicator — the
+    payload for that step is striped 1/n per on-node process, so the n
+    concurrent lane exscans each move only c/n inter-node (the full-lane
+    property, same as Listing 4's lane hop); (3) AllGather(node)
+    reassembles the exscanned totals, which are then added to the local
+    node-scan.
+
+    SPMD adaptations (see module docstring + DESIGN.md §2): MPI_Scan /
+    MPI_Exscan have no lax primitive, so both scans are emulated as
+    all-gather + node_rank/lane_rank-masked local sums — the rank-indexed
+    prefix mask replaces MPI's rank-asymmetric reduction tree, at the
+    all-gather's (g-1)/g·c wire cost per level.
+
+    Leading dim must be divisible by n.
+    """
+    n, N = _n(topo), topo.N()
+    c = x.shape[0]
+    if c % n:
+        raise ValueError(f"leading dim {c} not divisible by n={n}")
+    m = c // n
+    i = topo.node_rank()
+    j = topo.lane_rank()
+
+    # (1) node-level inclusive scan: gather node peers, prefix-sum i' <= i
+    gn = _ag_seq(x, topo.node_axes)                   # (n*c,) node-rank-major
+    gn = gn.reshape(n, c, *x.shape[1:])
+    keep = (jnp.arange(n) <= i).reshape(n, *([1] * (x.ndim)))
+    t = jnp.sum(jnp.where(keep, gn, 0), axis=0)       # my inclusive node scan
+    tot = jnp.sum(gn, axis=0)                         # node total (replicated)
+
+    # (2) lane-level exclusive scan of node totals, striped 1/n per chip
+    stripe = lax.dynamic_slice_in_dim(tot, i * m, m, axis=0)
+    gl = lax.all_gather(stripe, topo.lane_axis, axis=0, tiled=False)  # (N, m)
+    keep_l = (jnp.arange(N) < j).reshape(N, *([1] * (x.ndim)))
+    e = jnp.sum(jnp.where(keep_l, gl, 0), axis=0)     # exscan of my stripe
+
+    # (3) node-level all-gather reassembles the full exscanned total
+    E = _ag_seq(e, topo.node_axes)                    # (c,), stripe order
+    return t + E
+
+
+def native_scan(x, topo: LaneTopology):
+    """One-shot comparator: gather the whole communicator, prefix-sum by
+    global rank locally (the direct algorithm — every chip moves (p-1)·c;
+    the mock-up's inter-node traffic is the full-lane (N-1)/N·c/n)."""
+    n, N = _n(topo), topo.N()
+    p = n * N
+    y = _ag_seq(x, topo.node_axes)                               # (n*c,)
+    z = lax.all_gather(y, topo.lane_axis, axis=0, tiled=True)    # (p*c,)
+    z = z.reshape(p, x.shape[0], *x.shape[1:])       # global-rank-major
+    g = topo.global_rank()
+    keep = (jnp.arange(p) <= g).reshape(p, *([1] * x.ndim))
+    return jnp.sum(jnp.where(keep, z, 0), axis=0)
 
 
 # --------------------------------------------------------------------------

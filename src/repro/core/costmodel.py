@@ -19,7 +19,7 @@ import dataclasses
 import math
 
 __all__ = ["CollectiveCost", "mockup_cost", "klane_time", "speedup_bound",
-           "HW"]
+           "HW", "optimal_num_buckets", "bucket_pipeline_time"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,3 +113,47 @@ class HW:
     ici_bw: float = 50e9                  # B/s per link (per chip, per spec)
     dcn_bw: float = 25e9                  # B/s per host NIC (cross-pod lane)
     chips_per_host: int = 4               # v5e: 4 chips share a host NIC
+    # per-collective setup latencies (launch + sync), the alpha terms of
+    # the k-lane model.  DCN alpha dominates — it is what caps how finely
+    # the gradient bucket can be split before latency eats the overlap win.
+    alpha_ici: float = 2e-6               # s per intra-pod collective
+    alpha_dcn: float = 20e-6              # s per cross-pod collective
+
+
+# ---------------------------------------------------------------------------
+# §5 pipelining: bucket-count choice from the latency/bandwidth crossover
+# ---------------------------------------------------------------------------
+
+def bucket_pipeline_time(c_bytes: float, K: int, *, stages: int = 3,
+                         alpha: float = HW.alpha_dcn,
+                         beta: float = 1.0 / HW.dcn_bw) -> float:
+    """Predicted seconds for K buckets through an S-stage pipeline.
+
+    Standard pipeline algebra: (K + S - 1) waves, each costing one stage's
+    alpha plus the per-bucket bandwidth term c/K·beta.  The bandwidth term
+    is taken at the slowest level (the DCN lane hop by default) — the
+    other stages overlap under it once the pipeline is full.
+    """
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
+    return (K + stages - 1) * (alpha + c_bytes * beta / K)
+
+
+def optimal_num_buckets(c_bytes: float, *, stages: int = 3,
+                        alpha: float = HW.alpha_dcn,
+                        beta: float = 1.0 / HW.dcn_bw,
+                        max_buckets: int = 64) -> int:
+    """Bucket count K from the k-lane latency/bandwidth crossover.
+
+    Minimizing bucket_pipeline_time over K:  d/dK (K+S-1)(alpha + cβ/K)
+    = alpha - (S-1)·cβ/K² = 0  ⇒  K* = sqrt((S-1)·cβ/alpha).  Below the
+    crossover payload (cβ ≲ alpha) a single bucket wins — pipelining pure
+    latency backfires; far above it the win saturates at ~S× while per-
+    bucket alphas accumulate, hence the clamp.  Deterministic in its
+    inputs so callers on both sides of a shard_map boundary agree on K
+    (the ZeRO-1 shard layout depends on it).
+    """
+    if c_bytes <= 0:
+        return 1
+    k_star = math.sqrt(max(stages - 1, 1) * c_bytes * beta / alpha)
+    return max(1, min(max_buckets, int(round(k_star))))

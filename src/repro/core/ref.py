@@ -13,7 +13,7 @@ import numpy as np
 __all__ = [
     "oracle_allreduce", "oracle_reduce_scatter", "oracle_allgather",
     "oracle_bcast", "oracle_alltoall", "oracle_reduce", "oracle_gather",
-    "oracle_scatter",
+    "oracle_scatter", "oracle_scan",
 ]
 
 
@@ -63,6 +63,11 @@ def oracle_gather(xs: np.ndarray, root: int = 0) -> np.ndarray:
     out = np.zeros((p, p * xs.shape[1], *xs.shape[2:]), dtype=xs.dtype)
     out[root] = xs.reshape(p * xs.shape[1], *xs.shape[2:])
     return out
+
+
+def oracle_scan(xs: np.ndarray) -> np.ndarray:
+    """Inclusive scan: out[r] = sum_{r' <= r} xs[r']."""
+    return np.cumsum(xs, axis=0)
 
 
 def oracle_scatter(xs: np.ndarray, root: int = 0) -> np.ndarray:

@@ -112,23 +112,52 @@ def parse_hlo(text: str) -> dict[str, Computation]:
     return comps
 
 
+def _operand_names(inst: Instr) -> list[str]:
+    """Raw operand names of one HLO instruction, in order.
+
+    Handles both operand dialects: bare ``op(%a, %b)`` and the typed
+    ``op(f32[8]{0} %a, f32[8]{0} %b)`` form compiled dumps use.  Only the
+    operand parenthesis group is scanned (balanced — tuple types nest), so
+    attribute refs like ``to_apply=%add`` are never picked up.
+    """
+    line = inst.line
+    try:
+        start = line.index(inst.op + "(") + len(inst.op)
+    except ValueError:
+        return []
+    seg = line[start:]
+    depth = 0
+    for k, ch in enumerate(line[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                seg = line[start:k + 1]
+                break
+    names = re.findall(r"%([\w.\-]+)", seg)
+    if not names:
+        # bare dialect: comma-split, strip types, keep name-ish tokens
+        names = [t.split()[-1] for t in seg.strip("()").split(",")
+                 if t.strip()]
+    return names
+
+
 def _dot_flops(inst: Instr, table: dict[str, str]) -> float:
     out_elems = _elems_of(inst.type_str)
     mc = _CONTRACT_RE.search(inst.line)
     k = 1
     if mc:
         cdims = [int(x) for x in mc.group(1).split(",") if x]
-        ops = _OPERANDS_RE.search(inst.line[inst.line.index("("):])
-        if ops:
-            lhs = ops.group(1).split(",")[0].strip().lstrip("%")
-            lhs_t = table.get(lhs)
-            if lhs_t:
-                d = _dims(lhs_t)
-                if d:
-                    shape = d[0][1]
-                    for c in cdims:
-                        if c < len(shape):
-                            k *= shape[c]
+        names = _operand_names(inst)
+        lhs_t = table.get(names[0]) if names else None
+        if lhs_t:
+            d = _dims(lhs_t)
+            if d:
+                shape = d[0][1]
+                for c in cdims:
+                    if c < len(shape):
+                        k *= shape[c]
     return 2.0 * out_elems * k
 
 
@@ -136,31 +165,18 @@ def _conv_flops(inst: Instr, table: dict[str, str]) -> float:
     # flops ≈ 2 · out_elems · (kernel spatial · in_channels); approximate
     # via rhs (kernel) element count / out_channels
     out_elems = _elems_of(inst.type_str)
-    ops = _OPERANDS_RE.search(inst.line[inst.line.index("("):])
+    names = _operand_names(inst)
     k = 1
-    if ops:
-        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        if len(names) >= 2 and names[1] in table:
-            d = _dims(table[names[1]])
-            if d:
-                k = max(1, math.prod(d[0][1]))
+    if len(names) >= 2 and names[1] in table:
+        d = _dims(table[names[1]])
+        if d:
+            k = max(1, math.prod(d[0][1]))
     return 2.0 * out_elems * k
 
 
 def _operand_bytes(inst: Instr, table: dict[str, str]) -> int:
-    try:
-        seg = inst.line[inst.line.index(inst.op + "(") + len(inst.op):]
-    except ValueError:
-        return 0
-    ops = _OPERANDS_RE.search(seg)
-    if not ops:
-        return 0
-    total = 0
-    for nm in ops.group(1).split(","):
-        nm = nm.strip().lstrip("%")
-        if nm in table:
-            total += _bytes_of(table[nm])
-    return total
+    return sum(_bytes_of(table[nm]) for nm in _operand_names(inst)
+               if nm in table)
 
 
 def group_info(line: str, pod_size: int):
@@ -190,10 +206,13 @@ def _collective(inst: Instr, pod_size: int):
     b = _bytes_of(inst.type_str)
     g, dcn = group_info(inst.line, pod_size)
     if kind == "collective-permute":
-        # source-target pairs, not groups: DCN iff any pair crosses pods
-        mp = re.search(r"source_target_pairs=\{([^}]*)\}", inst.line)
+        # source-target pairs, not groups: DCN iff ANY pair crosses pods
+        # (the braces nest — match the whole {{a,b},{c,d},...} list, not
+        # just up to the first '}')
+        mp = re.search(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}",
+                       inst.line)
         if mp:
-            pairs = re.findall(r"\{(\d+),(\d+)\}", mp.group(0))
+            pairs = re.findall(r"\{(\d+),(\d+)\}", mp.group(1))
             dcn = any(int(a) // pod_size != int(b2) // pod_size
                       for a, b2 in pairs)
     if kind == "all-reduce":
@@ -235,12 +254,9 @@ def _instr_bytes(inst: "Instr", table: dict[str, str]) -> float:
         return _RESULT_BYTES_OPS[inst.op] * _bytes_of(inst.type_str)
     if inst.op == "dynamic-update-slice":
         # aliased in place: read+write the update operand only
-        seg = inst.line[inst.line.index("(") :]
-        ops = _OPERANDS_RE.search(seg)
-        if ops:
-            names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-            if len(names) >= 2 and names[1] in table:
-                return 2.0 * _bytes_of(table[names[1]])
+        names = _operand_names(inst)
+        if len(names) >= 2 and names[1] in table:
+            return 2.0 * _bytes_of(table[names[1]])
         return 2.0 * _bytes_of(inst.type_str)
     return _bytes_of(inst.type_str) + _operand_bytes(inst, table)
 
@@ -338,3 +354,79 @@ def analyze(text: str, *, pod_size: int = 256) -> dict:
     out = dict(walk(entry))
     out["computations"] = len(comps)
     return out
+
+
+# ---------------------------------------------------------------------------
+# structural concurrency: can the lane (DCN) hop and a node (ICI)
+# collective of one pipeline step run at the same time?
+# ---------------------------------------------------------------------------
+
+def _instr_operands(inst: Instr, table: dict[str, str]) -> list[str]:
+    """Operand instruction names resolvable in the same computation."""
+    return [nm for nm in _operand_names(inst) if nm in table]
+
+
+def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
+    """Verify, per computation, that a cross-pod (DCN) collective and an
+    intra-pod (ICI) collective exist with NO data dependence in either
+    direction — the structural precondition for the §5 pipeline's overlap
+    (XLA's scheduler cannot be forced, but absent a dependence edge it is
+    free to run both at once; present one, it never can).
+
+    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
+    where each pair is (computation, dcn_instr, dcn_kind, ici_instr,
+    ici_kind).  A scan-based pipeline puts both ops in the while-body
+    computation; an unrolled bucket schedule puts them straight in the
+    entry — both are covered because every computation is examined.
+    """
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+    pairs = []
+    per_comp: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        if comp is None:
+            continue
+        # def-use edges within this computation
+        ops_of = {i.name: _instr_operands(i, comp.table)
+                  for i in comp.instrs}
+        colls = []
+        for inst in comp.instrs:
+            c = _collective(inst, pod_size)
+            if c:
+                colls.append((inst, c))
+        if not colls:
+            continue
+        dcn = [(i, c) for i, c in colls if c["dcn"]]
+        ici = [(i, c) for i, c in colls if not c["dcn"]]
+        per_comp[cname] = {"dcn": len(dcn), "ici": len(ici), "pairs": 0}
+        if not dcn or not ici:
+            continue
+
+        anc_memo: dict[str, frozenset] = {}
+
+        def ancestors(name: str) -> frozenset:
+            if name in anc_memo:
+                return anc_memo[name]
+            out: set[str] = set()
+            stack = list(ops_of.get(name, ()))
+            while stack:                           # iterative: HLO chains
+                cur = stack.pop()                  # can exceed Py recursion
+                if cur in out:
+                    continue
+                out.add(cur)
+                if cur in anc_memo:
+                    out |= anc_memo[cur]
+                else:
+                    stack.extend(ops_of.get(cur, ()))
+            anc_memo[name] = frozenset(out)
+            return anc_memo[name]
+
+        for di, dc in dcn:
+            for ni, nc in ici:
+                if di.name not in ancestors(ni.name) and \
+                        ni.name not in ancestors(di.name):
+                    pairs.append((cname, di.name, dc["kind"],
+                                  ni.name, nc["kind"]))
+                    per_comp[cname]["pairs"] += 1
+    return {"concurrent": bool(pairs), "pairs": pairs,
+            "per_computation": per_comp}

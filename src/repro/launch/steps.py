@@ -13,6 +13,7 @@
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Optional
 
@@ -24,7 +25,10 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core import LaneTopology
 from repro.models import loss_fn, prefill, decode_step
 from repro.optim import AdamWConfig, adamw_update, grad_sync
-from repro.optim.gradsync import _unflatten_bucket, _flatten_bucket
+from repro.optim.gradsync import (
+    _unflatten_bucket, _flatten_bucket, resolve_num_buckets,
+    zero1_param_shard, zero1_unshard,
+)
 from .mesh import batch_axes
 
 
@@ -100,10 +104,15 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
                           mesh, param_specs):
     """Manual over batch axes; grad sync via repro.optim.gradsync.
 
-    gradsync strategies: native | lane | lane_int8 | lane_zero1.
+    gradsync strategies: native | lane | lane_pipelined | lane_int8 |
+    lane_zero1.  All lane strategies bucket the flat gradient vector
+    (K = run.gradsync_buckets, 0 = cost-model auto) so the DCN lane hop of
+    one bucket overlaps the ICI node collective of the next (§5 pipeline).
     lane_zero1 keeps grads + moments data-sharded through the optimizer and
     all-gathers the *updated parameters* (the paper's trailing AllGather
-    moved past the update — same bytes, sharded optimizer memory).
+    moved past the update — same bytes, sharded optimizer memory); its
+    shard layout is bucket-major, so param sharding/unsharding goes
+    through gradsync.zero1_param_shard / zero1_unshard with the same K.
     """
     ba = batch_axes(mesh)
     topo = LaneTopology(node_axes=ba[1:] or ba, lane_axis=ba[0]) \
@@ -125,15 +134,20 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
             new_params, new_opt = adamw_update(opt, grads, opt_state, params)
             return loss, new_params, new_opt
         if strategy == "lane_zero1":
-            shard_flat, spec = grad_sync(grads, topo, "lane_zero1")
-            pflat, pspec = _flatten_bucket(params, pad_to=topo.n())
-            mine = _shard_slice(pflat, topo)
+            total = sum(math.prod(p.shape)
+                        for p in jax.tree.leaves(params))
+            K = resolve_num_buckets(total, topo.n(), run.gradsync_buckets)
+            shard_flat, spec = grad_sync(grads, topo, "lane_zero1",
+                                         num_buckets=K)
+            pflat, pspec = _flatten_bucket(params, pad_to=K * topo.n())
+            mine = zero1_param_shard(pflat, topo, K)
             # sharded moments: opt_state here is the *sharded* flat state
             newp_shard, new_opt = _adamw_flat(opt, shard_flat, opt_state, mine)
-            full = _unshard(newp_shard, topo)
+            full = zero1_unshard(newp_shard, topo, K)
             new_params = _unflatten_bucket(full, pspec)
             return loss, new_params, new_opt
-        grads = grad_sync(grads, topo, strategy)
+        grads = grad_sync(grads, topo, strategy,
+                          num_buckets=run.gradsync_buckets)
         new_params, new_opt = adamw_update(opt, grads, opt_state, params)
         return loss, new_params, new_opt
 
@@ -154,21 +168,6 @@ def _strip_batch(spec, ba):
     return spec
 
 
-def _shard_slice(flat, topo: LaneTopology):
-    """This chip's shard of a node-level reduce-scatter layout."""
-    n = topo.n()
-    sz = flat.shape[0] // n
-    r = topo.node_rank()
-    return jax.lax.dynamic_slice_in_dim(flat, r * sz, sz)
-
-
-def _unshard(shard, topo: LaneTopology):
-    out = shard
-    for a in reversed(topo.node_axes):
-        out = jax.lax.all_gather(out, a, axis=0, tiled=True)
-    return out
-
-
 def _adamw_flat(opt: AdamWConfig, g, state, p):
     """AdamW on a flat fp32 shard (ZeRO-1)."""
     from repro.optim.adamw import cosine_lr
@@ -182,11 +181,18 @@ def _adamw_flat(opt: AdamWConfig, g, state, p):
     return p - lr * step, {"m": m, "v": v, "count": count}
 
 
-def zero1_opt_init(params, topo_n: int):
-    """Flat sharded fp32 optimizer state for the lane_zero1 path."""
-    import math
+def zero1_opt_init(params, topo_n: int, num_buckets: int = 0):
+    """Flat sharded fp32 optimizer state for the lane_zero1 path.
+
+    Pass ``run.gradsync_buckets`` as num_buckets: the shard size depends
+    on the bucketed padding (K·n), so this MUST match the train step's
+    override — resolve_num_buckets is deterministic, so the default 0
+    (auto) agrees with the step's auto choice, but a nonzero override on
+    one side only produces a shape mismatch inside the jitted step.
+    """
     total = sum(math.prod(p.shape) for p in jax.tree.leaves(params))
-    padded = -(-total // topo_n) * topo_n
+    K = resolve_num_buckets(total, topo_n, num_buckets)
+    padded = -(-total // (K * topo_n)) * (K * topo_n)
     sz = padded // topo_n
     return {"m": jnp.zeros((sz,), jnp.float32),
             "v": jnp.zeros((sz,), jnp.float32),

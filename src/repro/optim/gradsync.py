@@ -5,35 +5,48 @@ MPI_Allreduce over the (pod × data) communicator.  Strategies:
 
   native    one-shot ``psum`` over ("pod","data") — the "native library"
             baseline (XLA picks the algorithm).
-  lane      the paper's Listing-4 decomposition: ReduceScatter(data) →
-            Allreduce(pod) → AllGather(data).  Every chip of a pod carries
-            1/|data| of the cross-pod (DCN) payload concurrently — the
-            full-lane property; DCN bytes per pod = c, striped over all
-            host NICs.
-  lane_int8 same, but the pod hop is int8-compressed (per-chunk scales):
-            4× fewer DCN bytes; the intra-pod ICI hops stay bf16.
-            Beyond-paper distributed-optimization trick.
+  lane      the paper's Listing-4 decomposition, bucketed: K buckets each
+            run ReduceScatter(node) → Allreduce(lane) → AllGather(node).
+            Every chip of a pod carries 1/|node| of the cross-pod (DCN)
+            payload concurrently — the full-lane property — and bucket
+            b's DCN lane hop has no data dependence on bucket b+1's
+            intra-pod reduce-scatter, so the two levels overlap (§5).
+  lane_pipelined
+            the §5 pipelined construction proper: all buckets stream
+            through the three stages under one ``lax.scan``
+            (core.pipeline.pipelined_allreduce_lane) — O(1) HLO size in
+            the bucket count, same overlap structure.
+  lane_int8 bucketed like ``lane``, but the DCN hop is int8-compressed
+            (per-chunk scales): 4× fewer DCN bytes; the intra-pod ICI
+            hops stay fp32.  Beyond-paper distributed-optimization trick.
   lane_zero1 reduce-scatter only (no trailing all-gather): returns
             data-sharded grads for a ZeRO-1 sharded optimizer update; the
             all-gather of the paper's decomposition moves AFTER the
             optimizer (same bytes, applied to fresh params, moments stay
-            sharded).  See launch/steps.py.
+            sharded).  See launch/steps.py.  Bucketed on the RS + lane
+            phases.
 
-All functions run inside shard_map with ("pod","data") manual; gradients
-are bucketed into one flat fp32/bf16 vector so each strategy is a single
-collective sequence regardless of the parameter count (comm-op count: O(1)
-instead of O(#tensors) — latency term of the k-lane model).
+All strategies flatten the gradient pytree into one fp32 vector, then
+split it into K equal buckets (K from the cost model's §5 latency/
+bandwidth crossover, ``core.costmodel.optimal_num_buckets``, overridable
+via ``RunConfig.gradsync_buckets``).  K collectives per level instead of
+one trades latency (K·alpha) for pipeline overlap of the ICI and DCN
+levels — the k-lane model's simultaneity term; see DESIGN.md §3.
 """
 from __future__ import annotations
 
 import math
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import LaneTopology, allreduce_lane
+from repro.core import LaneTopology, optimal_num_buckets
+from repro.core.collectives import _ag_seq, _rs_seq
+from repro.core.pipeline import pipelined_allreduce_lane
+
+STRATEGIES = ("native", "lane", "lane_pipelined", "lane_int8", "lane_zero1")
 
 
 def _flatten_bucket(tree, pad_to: int):
@@ -74,12 +87,131 @@ def decompress_int8(q, scale, n):
     return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
 
 
-def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native"):
+# ---------------------------------------------------------------------------
+# bucket schedule (shared by every lane strategy)
+# ---------------------------------------------------------------------------
+
+def resolve_num_buckets(total_elems: int, n_node: int,
+                        override: int = 0, *, elem_bytes: int = 4) -> int:
+    """The K every bucketed strategy uses for ``total_elems`` gradients.
+
+    override > 0 wins; otherwise the cost model picks K from the DCN
+    latency/bandwidth crossover on the per-lane payload (c/n bytes — the
+    full-lane stripe is what actually crosses the DCN).  K is additionally
+    capped so each bucket keeps at least one row per chip after the node
+    reduce-scatter.  Takes plain ints (not a topology) so callers outside
+    shard_map — the ZeRO-1 optimizer-state init — resolve the same K.
+    """
+    if override > 0:
+        k = override
+    else:
+        k = optimal_num_buckets(total_elems * elem_bytes / max(n_node, 1))
+    return max(1, min(k, max(1, total_elems // max(n_node, 1))))
+
+
+def bucket_schedule(flat, num_buckets: int,
+                    stages: Sequence[Callable[[Any], Any]]):
+    """Run ``flat`` through per-bucket ``stages`` in stage-skewed order.
+
+    Splits ``flat`` (leading dim divisible by num_buckets) into equal
+    contiguous buckets and applies every stage to every bucket, emitting
+    ops wave by wave: bucket b's stage s+1 lands next to bucket b+1's
+    stage s.  Cross-bucket ops never share operands, so the DCN stage of
+    one bucket and the ICI stage of the next have no data dependence —
+    XLA's scheduler is free to overlap them (structurally verified in
+    launch.hlo_stats.collective_concurrency).  Emission order only hints
+    the scheduler; correctness needs nothing from it.
+
+    Returns the per-bucket results as a list (stages may change shapes,
+    e.g. a reduce-scatter stage shrinks rows by n — concatenation is the
+    caller's business).
+    """
+    K = num_buckets
+    if flat.shape[0] % K:
+        raise ValueError(
+            f"flat dim {flat.shape[0]} not divisible by num_buckets={K}")
+    bsz = flat.shape[0] // K
+    vals = [lax.slice_in_dim(flat, b * bsz, (b + 1) * bsz, axis=0)
+            for b in range(K)]
+    S = len(stages)
+    done = [0] * K                     # stages applied so far, per bucket
+    for wave in range(K + S - 1):
+        for b in range(min(wave, K - 1), max(wave - S, -1), -1):
+            s = wave - b
+            if 0 <= s < S and done[b] == s:
+                vals[b] = stages[s](vals[b])
+                done[b] += 1
+    assert all(d == S for d in done)
+    return vals
+
+
+def _rs_node(topo: LaneTopology):
+    return lambda v: _rs_seq(v, topo.node_axes)
+
+
+def _ag_node(topo: LaneTopology):
+    return lambda v: _ag_seq(v, topo.node_axes)
+
+
+def _ar_lane(topo: LaneTopology):
+    return lambda v: lax.psum(v, topo.lane_axis)
+
+
+def _ar_lane_int8(topo: LaneTopology):
+    def stage(v):
+        q, scale, n = compress_int8(v)
+        qg = lax.all_gather(q, topo.lane_axis, axis=0, tiled=False)
+        sg = lax.all_gather(scale, topo.lane_axis, axis=0, tiled=False)
+        N = qg.shape[0]
+        return sum(decompress_int8(qg[i], sg[i], n) for i in range(N))
+    return stage
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 shard layout (bucket-major, mirrors the bucketed reduce-scatter)
+# ---------------------------------------------------------------------------
+#
+# With K buckets, chip i's lane_zero1 shard is the concatenation of its
+# node-RS stripe from every bucket: [b0·stripe_i, b1·stripe_i, …] — the
+# flat vector viewed as (K, n, s) sliced at node_rank on the middle axis.
+# Reassembly therefore needs the (n, K) → (K, n) swap, the same reorder
+# the paper's Listing 5 expresses with derived datatypes (DESIGN.md §3).
+
+def zero1_param_shard(flat, topo: LaneTopology, num_buckets: int):
+    """This chip's shard of a padded flat vector, matching the layout
+    grad_sync(..., "lane_zero1", num_buckets=K) returns for gradients."""
+    n = topo.n()
+    K = num_buckets
+    s = flat.shape[0] // (K * n)
+    r = topo.node_rank()
+    xb = flat.reshape(K, n, s)
+    return jnp.take(xb, r, axis=1).reshape(K * s)    # traced-index pick
+
+
+def zero1_unshard(shard, topo: LaneTopology, num_buckets: int):
+    """All-gather per-chip (K·s,) shards back to the flat (K·n·s,) order."""
+    n = topo.n()
+    K = num_buckets
+    g = _ag_seq(shard, topo.node_axes)                 # (n·K·s,) chip-major
+    s = g.shape[0] // (n * K)
+    return jnp.swapaxes(g.reshape(n, K, s), 0, 1).reshape(n * K * s)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native",
+              *, num_buckets: int = 0):
     """Synchronize (mean) gradients over the (lane × node) batch axes.
 
     Must be called inside shard_map with topo's axes manual.  Returns the
-    fully-reduced tree for native/lane/lane_int8, or (sharded_flat, spec)
-    for lane_zero1 (see steps.py for the deferred all-gather).
+    fully-reduced tree for native/lane/lane_pipelined/lane_int8, or
+    (sharded_flat, spec) for lane_zero1 (see steps.py for the deferred
+    all-gather).  ``num_buckets``: 0 = cost-model auto (§5 crossover);
+    callers that must agree on the padded layout across call sites (the
+    ZeRO-1 optimizer state) should resolve K once via resolve_num_buckets
+    and pass it explicitly.
     """
     axes = (topo.lane_axis, *topo.node_axes)
     nrep = 1
@@ -88,35 +220,32 @@ def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native"):
 
     if strategy == "native":
         return jax.tree.map(lambda g: lax.psum(g, axes) / nrep, grads)
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown gradsync strategy {strategy!r}; "
+                         f"have {STRATEGIES}")
 
     n_node = topo.n()
-    flat, spec = _flatten_bucket(grads, pad_to=n_node)
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(grads))
+    K = resolve_num_buckets(total, n_node, num_buckets)
+    # every bucket must stay divisible by n after the K-way split
+    flat, spec = _flatten_bucket(grads, pad_to=K * n_node)
 
-    if strategy == "lane":
-        out = allreduce_lane(flat, topo) / nrep
+    if strategy == "lane_pipelined":
+        out = pipelined_allreduce_lane(flat, topo, num_blocks=K) / nrep
         return _unflatten_bucket(out, spec)
 
+    if strategy == "lane":
+        parts = bucket_schedule(
+            flat, K, (_rs_node(topo), _ar_lane(topo), _ag_node(topo)))
+        return _unflatten_bucket(jnp.concatenate(parts) / nrep, spec)
+
     if strategy == "lane_int8":
-        # RS(node level) — bf16/fp32 on ICI
-        r = flat
-        for a in topo.node_axes:
-            r = lax.psum_scatter(r, a, scatter_dimension=0, tiled=True)
-        # compressed AR over the DCN (lane) hop: int8 all-gather + local sum
-        q, scale, n = compress_int8(r)
-        qg = lax.all_gather(q, topo.lane_axis, axis=0, tiled=False)
-        sg = lax.all_gather(scale, topo.lane_axis, axis=0, tiled=False)
-        N = qg.shape[0]
-        r = sum(decompress_int8(qg[i], sg[i], n) for i in range(N))
-        # AG(node level) to reassemble
-        for a in reversed(topo.node_axes):
-            r = lax.all_gather(r, a, axis=0, tiled=True)
-        return _unflatten_bucket(r / nrep, spec)
+        parts = bucket_schedule(
+            flat, K, (_rs_node(topo), _ar_lane_int8(topo), _ag_node(topo)))
+        return _unflatten_bucket(jnp.concatenate(parts) / nrep, spec)
 
     if strategy == "lane_zero1":
-        r = flat
-        for a in topo.node_axes:
-            r = lax.psum_scatter(r, a, scatter_dimension=0, tiled=True)
-        r = lax.psum(r, topo.lane_axis) / nrep
-        return r, spec                     # caller owns the deferred AG
-
-    raise ValueError(f"unknown gradsync strategy {strategy!r}")
+        parts = bucket_schedule(
+            flat, K,
+            (_rs_node(topo), lambda v: lax.psum(v, topo.lane_axis) / nrep))
+        return jnp.concatenate(parts), spec   # caller owns the deferred AG

@@ -15,8 +15,9 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.core import (      # noqa: E402
     LaneTopology, allreduce_lane, reduce_scatter_lane, allgather_lane,
     bcast_lane, alltoall_lane, reduce_lane, gather_lane, scatter_lane,
-    native_allreduce, native_allgather, native_reduce_scatter,
-    native_alltoall, pipelined_bcast_lane, ref,
+    scan_lane, native_allreduce, native_allgather, native_reduce_scatter,
+    native_alltoall, native_scan, pipelined_bcast_lane,
+    pipelined_allreduce_lane, ref,
 )
 from repro.core.pipeline import pipelined_reduce_lane  # noqa: E402
 from repro.core import ref as _ref  # noqa: E402
@@ -264,6 +265,65 @@ def pipelined_reduce_3axis():
 
 
 @case
+def pipelined_allreduce():
+    mesh, topo = _topo2()
+    n, N = topo.sizes(mesh)
+    B = 4
+    rows = B * n * 3
+    xs = _inputs(8, rows=rows, seed=21)
+    out = _run(mesh, topo,
+               lambda x: pipelined_allreduce_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_allreduce(xs), tol=1e-4)
+
+
+@case
+def pipelined_allreduce_3axis():
+    mesh, topo = _topo3()
+    n, N = topo.sizes(mesh)
+    B = 3
+    rows = B * n * 2
+    xs = _inputs(8, rows=rows, seed=22)
+    out = _run(mesh, topo,
+               lambda x: pipelined_allreduce_lane(x, topo, num_blocks=B), xs)
+    _close(out, _ref.oracle_allreduce(xs), tol=1e-4)
+
+
+@case
+def pipelined_allreduce_single_block():
+    """B=1 degenerates to the monolithic Listing-4 chain — must still agree."""
+    mesh, topo = _topo2()
+    n, N = topo.sizes(mesh)
+    xs = _inputs(8, rows=n * 2, seed=23)
+    out = _run(mesh, topo,
+               lambda x: pipelined_allreduce_lane(x, topo, num_blocks=1), xs)
+    _close(out, _ref.oracle_allreduce(xs), tol=1e-4)
+
+
+@case
+def scan_2axis():
+    mesh, topo = _topo2()
+    xs = _inputs(8, rows=6, seed=24)
+    out = _run(mesh, topo, lambda x: scan_lane(x, topo), xs)
+    _close(out, _ref.oracle_scan(xs))
+
+
+@case
+def scan_3axis():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=8, seed=25)
+    out = _run(mesh, topo, lambda x: scan_lane(x, topo), xs)
+    _close(out, _ref.oracle_scan(xs))
+
+
+@case
+def scan_native_matches():
+    mesh, topo = _topo3()
+    xs = _inputs(8, rows=8, seed=26)
+    out = _run(mesh, topo, lambda x: native_scan(x, topo), xs)
+    _close(out, _ref.oracle_scan(xs))
+
+
+@case
 def allreduce_int32():
     mesh, topo = _topo3()
     rng = np.random.default_rng(1)
@@ -286,20 +346,22 @@ def allgather_unordered_zero_copy():
     _close(out, w)
 
 
-@case
-def gradsync_lane_matches_native():
-    """Paper technique vs one-shot psum on a gradient pytree."""
+def _gradsync_harness(gshapes, seed=3):
+    """(mesh, topo, per-leaf inputs, runner) for gradsync strategy cases.
+
+    Returns run(strategy, **kw) → reduced tree as numpy; inputs carry 4
+    replicas over (pod, data).
+    """
     from repro.optim import grad_sync
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
     topo = LaneTopology(node_axes=("data",), lane_axis="pod")
-    rng = np.random.default_rng(3)
-    gshapes = {"a": (4, 6), "b": (10,), "c": (3, 2, 2)}
+    rng = np.random.default_rng(seed)
     gl = {k: rng.normal(size=(4, *s)).astype(np.float32)
-          for k, s in gshapes.items()}     # 4 replicas over (pod,data)
+          for k, s in gshapes.items()}
 
-    def run(strategy):
+    def run(strategy, **kw):
         def f(g):
-            return grad_sync(g, topo, strategy)
+            return grad_sync(g, topo, strategy, **kw)
         # flattened arrays: replica dim folds into dim0 ⇒ len(s) spec entries
         spec = {k: P(("pod", "data"), *([None] * (len(s) - 1)))
                 for k, s in gshapes.items()}
@@ -311,11 +373,88 @@ def gradsync_lane_matches_native():
                            check_vma=False)
         return jax.tree.map(np.asarray, jax.jit(sm)(arrs))
 
+    return mesh, topo, gl, run
+
+
+@case
+def gradsync_lane_matches_native():
+    """Paper technique vs one-shot psum on a gradient pytree."""
+    gshapes = {"a": (4, 6), "b": (10,), "c": (3, 2, 2)}
+    _, _, gl, run = _gradsync_harness(gshapes)
     native = run("native")
     lane = run("lane")
     for k in gl:
         np.testing.assert_allclose(lane[k][:gl[k].shape[1]],
                                    native[k][:gl[k].shape[1]], rtol=1e-5)
+
+
+@case
+def gradsync_bucketed_lane_matches_native():
+    """Multi-bucket schedule, payload NOT divisible by K·n (padding edge):
+    53 elements into 3 buckets over n=2."""
+    gshapes = {"a": (4, 7), "b": (13,), "c": (3, 2, 2)}     # 53 elems
+    _, _, gl, run = _gradsync_harness(gshapes, seed=31)
+    native = run("native")
+    for K in (2, 3, 5):
+        out = run("lane", num_buckets=K)
+        for k in gl:
+            np.testing.assert_allclose(out[k], native[k], rtol=1e-5,
+                                       atol=1e-6)
+
+
+@case
+def gradsync_pipelined_matches_native():
+    """The §5 scan pipeline as a gradsync strategy, incl. padding edges."""
+    gshapes = {"a": (4, 7), "b": (13,), "c": (3, 2, 2)}     # 53 elems
+    _, _, gl, run = _gradsync_harness(gshapes, seed=32)
+    native = run("native")
+    for K in (1, 3, 4):
+        out = run("lane_pipelined", num_buckets=K)
+        for k in gl:
+            np.testing.assert_allclose(out[k], native[k], rtol=1e-5,
+                                       atol=1e-6)
+
+
+@case
+def gradsync_bucketed_int8_close():
+    """Bucketed compressed DCN hop stays within the quantization bound."""
+    gshapes = {"w": (64, 8), "b": (37,)}                    # padding edge
+    _, _, gl, run = _gradsync_harness(gshapes, seed=33)
+    native = run("native")
+    q = run("lane_int8", num_buckets=3)
+    for k in gl:
+        scale = np.abs(native[k]).max()
+        np.testing.assert_allclose(q[k], native[k], atol=scale * 0.02)
+
+
+@case
+def gradsync_pipelined_hlo_overlap():
+    """Structural acceptance: in the lowered HLO of the pipelined strategy
+    the cross-pod (DCN) collective of a pipeline step has NO data
+    dependence on the step's intra-pod (ICI) collectives, while the
+    monolithic K=1 lane chain is strictly serial (negative control)."""
+    from repro.optim import grad_sync
+    from repro.launch import hlo_stats
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    x = np.random.default_rng(34).normal(size=(1 << 12,)).astype(np.float32)
+    arr = jax.device_put(
+        x, jax.sharding.NamedSharding(mesh, P(("pod", "data"))))
+
+    def lower(strategy, K):
+        sm = jax.shard_map(
+            lambda g: grad_sync(g, topo, strategy, num_buckets=K),
+            mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
+            check_vma=False)
+        hlo = jax.jit(sm).lower(arr).compile().as_text()
+        return hlo_stats.collective_concurrency(hlo, pod_size=4)
+
+    assert lower("lane_pipelined", 4)["concurrent"], \
+        "pipelined lane/node collectives must be structurally concurrent"
+    assert lower("lane", 4)["concurrent"], \
+        "bucketed lane/node collectives must be structurally concurrent"
+    assert not lower("lane", 1)["concurrent"], \
+        "monolithic chain must be serial (checker negative control)"
 
 
 @case
@@ -343,9 +482,11 @@ def gradsync_int8_close():
 
 @case
 def gradsync_zero1_matches_native():
-    """ZeRO-1 path: RS'd flat grads, gathered back, equal the native mean."""
+    """ZeRO-1 path: RS'd flat grads, gathered back, equal the native mean —
+    for K=1 (seed behavior) and the bucketed layouts (zero1_unshard does
+    the (n,K)→(K,n) reassembly; padding edge at 138 elems)."""
     from repro.optim import grad_sync
-    from repro.optim.gradsync import _unflatten_bucket
+    from repro.optim.gradsync import _unflatten_bucket, zero1_unshard
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
     topo = LaneTopology(node_axes=("data",), lane_axis="pod")
     rng = np.random.default_rng(7)
@@ -356,20 +497,18 @@ def gradsync_zero1_matches_native():
                               jax.sharding.NamedSharding(mesh, spec[k]))
             for k, v in g.items()}
 
-    def f(x):
-        shard, sp = grad_sync(x, topo, "lane_zero1")
-        full = shard
-        for a in reversed(topo.node_axes):
-            full = jax.lax.all_gather(full, a, axis=0, tiled=True)
-        return _unflatten_bucket(full, sp)
+    for K in (1, 3, 4):
+        def f(x, K=K):
+            shard, sp = grad_sync(x, topo, "lane_zero1", num_buckets=K)
+            return _unflatten_bucket(zero1_unshard(shard, topo, K), sp)
 
-    sm = jax.shard_map(f, mesh=mesh, in_specs=(spec,),
-                       out_specs=jax.tree.map(lambda _: P(), spec),
-                       check_vma=False)
-    out = jax.tree.map(np.asarray, jax.jit(sm)(arrs))
-    for k in g:
-        np.testing.assert_allclose(out[k], g[k].mean(axis=0), rtol=1e-5,
-                                   atol=1e-6)
+        sm = jax.shard_map(f, mesh=mesh, in_specs=(spec,),
+                           out_specs=jax.tree.map(lambda _: P(), spec),
+                           check_vma=False)
+        out = jax.tree.map(np.asarray, jax.jit(sm)(arrs))
+        for k in g:
+            np.testing.assert_allclose(out[k], g[k].mean(axis=0), rtol=1e-5,
+                                       atol=1e-6, err_msg=f"K={K} leaf {k}")
 
 
 @case

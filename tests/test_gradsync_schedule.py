@@ -1,0 +1,159 @@
+"""Single-device tests for the bucketed gradient-sync machinery:
+cost-model bucket sizing, the bucket schedule's partition/skew algebra,
+and the HLO structural-concurrency checker (on handcrafted HLO — the
+compiled-program version runs in the multi-device subprocess cases)."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (bucket_pipeline_time, optimal_num_buckets,
+                                  HW)
+from repro.core.pipeline import allreduce_pipeline_steps, ALLREDUCE_STAGES
+from repro.optim.gradsync import resolve_num_buckets
+from repro.launch.hlo_stats import collective_concurrency
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_optimal_buckets_crossover():
+    # far below the latency/bandwidth crossover: one bucket (don't pipeline
+    # pure latency)
+    assert optimal_num_buckets(1024) == 1
+    # far above: many buckets, clamped
+    assert optimal_num_buckets(10e9) == 64
+    # monotone non-decreasing in payload
+    ks = [optimal_num_buckets(c) for c in (1e3, 1e5, 1e7, 1e9)]
+    assert ks == sorted(ks)
+
+
+def test_optimal_buckets_minimizes_model():
+    c = 256e6                      # 256 MB stripe
+    k_star = optimal_num_buckets(c)
+    t_star = bucket_pipeline_time(c, k_star)
+    for k in (max(1, k_star // 2), k_star * 2):
+        assert t_star <= bucket_pipeline_time(c, k) * 1.05
+    with pytest.raises(ValueError):
+        bucket_pipeline_time(c, 0)
+
+
+def test_resolve_num_buckets():
+    # override wins
+    assert resolve_num_buckets(10_000, 4, 7) == 7
+    # auto is deterministic and >= 1
+    assert resolve_num_buckets(0, 4, 0) == 1
+    assert resolve_num_buckets(10_000, 4, 0) == \
+        resolve_num_buckets(10_000, 4, 0)
+    # capped: each bucket keeps >= 1 row per chip after the node RS
+    assert resolve_num_buckets(8, 4, 100) == 2
+    # big payloads hit the cost-model choice
+    big = resolve_num_buckets(1 << 30, 4, 0)
+    assert big == optimal_num_buckets((1 << 30) * 4 / 4)
+
+
+def test_pipeline_step_count():
+    assert ALLREDUCE_STAGES == 3
+    assert allreduce_pipeline_steps(1) == 3
+    assert allreduce_pipeline_steps(8) == 10
+
+
+# ---------------------------------------------------------------------------
+# bucket schedule (pure-jax, runs on one device with trivial stages)
+# ---------------------------------------------------------------------------
+
+def test_bucket_schedule_partitions_exactly():
+    import jax.numpy as jnp
+    from repro.optim.gradsync import bucket_schedule
+    x = jnp.arange(24, dtype=jnp.float32)
+    calls = []
+    parts = bucket_schedule(
+        x, 4, (lambda v: (calls.append("s0"), v * 2)[1],
+               lambda v: (calls.append("s1"), v + 1)[1]))
+    got = np.concatenate([np.asarray(p) for p in parts])
+    np.testing.assert_allclose(got, np.arange(24) * 2 + 1)
+    # every bucket saw every stage exactly once
+    assert len(calls) == 8
+    with pytest.raises(ValueError):
+        bucket_schedule(x, 5, (lambda v: v,))
+
+
+def test_bucket_schedule_skewed_emission_order():
+    import jax.numpy as jnp
+    from repro.optim.gradsync import bucket_schedule
+    order = []
+    x = jnp.arange(6, dtype=jnp.float32)
+    bucket_schedule(x, 3, (lambda v: (order.append(("s0", float(v[0]))), v)[1],
+                           lambda v: (order.append(("s1", float(v[0]))), v)[1]))
+    # wave order: b0s0 | b1s0, b0s1 | b2s0, b1s1 | b2s1 (skew: bucket b's
+    # stage 1 is emitted in the same wave as bucket b+1's stage 0)
+    stages = [s for s, _ in order]
+    assert stages == ["s0", "s0", "s1", "s0", "s1", "s1"]
+
+
+# ---------------------------------------------------------------------------
+# HLO structural concurrency checker
+# ---------------------------------------------------------------------------
+
+_HLO_CONCURRENT = """\
+HloModule m
+
+ENTRY %main (p0: f32[8]) -> (f32[4], f32[8]) {
+  %p0 = f32[8]{0} parameter(0)
+  %rs = f32[4]{0} reduce-scatter(f32[8]{0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %p0), source_target_pairs={{0,4},{4,0},{1,5},{5,1}}
+  ROOT %t = (f32[4], f32[8]) tuple(f32[4]{0} %rs, f32[8]{0} %cp)
+}
+"""
+
+_HLO_SERIAL = """\
+HloModule m
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  %rs = f32[4]{0} reduce-scatter(f32[8]{0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+  %fus = f32[4]{0} fusion(f32[4]{0} %rs), kind=kLoop, calls=%fc
+  %cp = f32[4]{0} collective-permute(f32[4]{0} %fus), source_target_pairs={{0,4},{4,0}}
+  ROOT %ag = f32[8]{0} all-gather(f32[4]{0} %cp), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+}
+"""
+
+
+def test_concurrency_checker_positive():
+    res = collective_concurrency(_HLO_CONCURRENT, pod_size=4)
+    assert res["concurrent"]
+    assert len(res["pairs"]) == 1
+    (_, dcn_name, dcn_kind, ici_name, ici_kind) = res["pairs"][0]
+    assert (dcn_kind, ici_kind) == ("collective-permute", "reduce-scatter")
+
+
+_HLO_PERMUTE_LATE_CROSS = """\
+HloModule m
+
+ENTRY %main (p0: f32[8]) -> (f32[4], f32[8]) {
+  %p0 = f32[8]{0} parameter(0)
+  %rs = f32[4]{0} reduce-scatter(f32[8]{0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %p0), source_target_pairs={{0,1},{1,4},{4,5},{5,0}}
+  ROOT %t = (f32[4], f32[8]) tuple(f32[4]{0} %rs, f32[8]{0} %cp)
+}
+"""
+
+
+def test_permute_dcn_classification_checks_all_pairs():
+    # first listed pair (0,1) is intra-pod; pairs (1,4)/(5,0) cross pods —
+    # the permute must still classify as DCN
+    res = collective_concurrency(_HLO_PERMUTE_LATE_CROSS, pod_size=4)
+    assert res["per_computation"]["main"] == \
+        {"dcn": 1, "ici": 1, "pairs": 1}
+
+
+def test_concurrency_checker_negative():
+    # rs → fusion → cp → ag is a strict chain (deps flow THROUGH the
+    # non-collective fusion), so nothing may be reported concurrent
+    res = collective_concurrency(_HLO_SERIAL, pod_size=4)
+    assert not res["concurrent"]
+    assert res["per_computation"]["main"]["dcn"] == 1
+    assert res["per_computation"]["main"]["ici"] == 2
+
+
+def test_hw_alpha_defaults_present():
+    assert HW.alpha_dcn > HW.alpha_ici > 0

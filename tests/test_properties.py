@@ -7,7 +7,11 @@ partitioning, gradient-compression bounds, and elastic-mesh planning.
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.costmodel import mockup_cost, speedup_bound
 from repro.core.pipeline import pipeline_steps
