@@ -1,0 +1,81 @@
+"""Schema check for BENCH_gradsync.json.
+
+The benchmark is the perf trajectory future PRs regress against; a
+refactor that silently drops a strategy from the grid (or a field from
+the rows) would make the trajectory lie by omission.  This check fails
+the build instead.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_schema [--file F]
+
+Run after ``benchmarks.run --smoke`` (make ci does).
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+TOP_KEYS = {"mesh", "payload_elems", "payload_bytes", "auto_num_buckets",
+            "cost_model", "smoke", "reps", "results",
+            "hlo_per_computation", "structure_ok"}
+
+ROW_KEYS = {"strategy", "num_buckets", "avg_us", "min_us",
+            "max_abs_err_vs_native", "model_pred_us", "hlo_concurrent",
+            "hlo_concurrent_pairs"}
+
+# every emitting run must cover these; a full (non-smoke) run additionally
+# sweeps the compressed strategy
+REQUIRED_STRATEGIES = {"native", "lane", "lane_pipelined", "lane_zero3"}
+FULL_ONLY_STRATEGIES = {"lane_int8"}
+
+
+def check(doc: dict) -> list[str]:
+    errs = []
+    missing = TOP_KEYS - set(doc)
+    if missing:
+        errs.append(f"missing top-level keys: {sorted(missing)}")
+    rows = doc.get("results", [])
+    if not isinstance(rows, list) or not rows:
+        errs.append("results must be a non-empty list")
+        rows = []
+    for i, row in enumerate(rows):
+        mk = ROW_KEYS - set(row)
+        if mk:
+            errs.append(f"results[{i}] missing {sorted(mk)}")
+    have = {r.get("strategy") for r in rows}
+    required = REQUIRED_STRATEGIES | (
+        set() if doc.get("smoke") else FULL_ONLY_STRATEGIES)
+    gone = required - have
+    if gone:
+        errs.append(f"benchmark stopped emitting strategies: {sorted(gone)}"
+                    f" (have {sorted(have)})")
+    if not doc.get("structure_ok", False):
+        errs.append("structure_ok is false: the §5 overlap (or a negative "
+                    "control) regressed — see the benchmark output")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--file", default="BENCH_gradsync.json")
+    args = ap.parse_args(argv)
+    path = pathlib.Path(args.file)
+    if not path.exists():
+        print(f"SCHEMA FAIL: {path} missing (run benchmarks.run --smoke "
+              f"first)")
+        return 1
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        print(f"SCHEMA FAIL: {path} is not valid JSON: {e}")
+        return 1
+    errs = check(doc)
+    for e in errs:
+        print(f"SCHEMA FAIL: {e}")
+    if not errs:
+        print(f"schema ok: {path} ({len(doc['results'])} rows, "
+              f"{len({r['strategy'] for r in doc['results']})} strategies)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

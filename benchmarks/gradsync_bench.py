@@ -1,9 +1,11 @@
 """Gradient-sync benchmark: the training hot path, per strategy.
 
 Times grad_sync under shard_map on the 8-device CPU mesh (2 pods × 4
-chips) for native vs lane vs lane_pipelined (plus lane_int8), sweeping
-the bucket count, and writes ``BENCH_gradsync.json`` — the perf
-trajectory future PRs regress against.  Also verifies STRUCTURALLY on
+chips) for native vs lane vs lane_pipelined (plus lane_int8 and the
+ZeRO-3 lane_zero3 reduce-scatter, timed as its RS+AG roundtrip),
+sweeping the bucket count, and writes ``BENCH_gradsync.json`` — the perf
+trajectory future PRs regress against (schema pinned by
+``benchmarks/check_bench_schema.py``).  Also verifies STRUCTURALLY on
 the optimized HLO that each bucketed/pipelined program contains a
 cross-pod (DCN) collective with no data dependence on an intra-pod (ICI)
 collective — the §5 overlap precondition — and that the monolithic K=1
@@ -42,7 +44,20 @@ POD = 4                               # chips per pod on the 2×4 bench mesh
 
 def build(mesh, topo, strategy, num_buckets):
     def f(g):
-        return grad_sync(g, topo, strategy, num_buckets=num_buckets)
+        out = grad_sync(g, topo, strategy, num_buckets=num_buckets)
+        if strategy == "lane_zero3":
+            # roundtrip for a comparable full-vector result: the RS'd 1/p
+            # stripe is re-gathered (training instead defers this gather
+            # into the next forward's per-layer prefetch) — the timed row
+            # is RS(node)→RS(lane)→AG(lane)→AG(node).  K is re-resolved
+            # with grad_sync's own cap so the unshard always agrees with
+            # the shard layout, even if the payload shrinks below K·p.
+            from repro.optim.gradsync import _unflatten_bucket, zero3_unshard
+            shard, spec = out
+            k_eff = resolve_num_buckets(g.shape[0], topo.n() * topo.N(),
+                                        num_buckets)
+            out = _unflatten_bucket(zero3_unshard(shard, topo, k_eff), spec)
+        return out
     return jax.jit(jax.shard_map(
         f, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
         check_vma=False))
@@ -70,12 +85,14 @@ def main(argv=None) -> int:
         # below the cost-model crossover auto-K is 1; pin K=4 so CI still
         # exercises (and structurally verifies) the multi-bucket schedule
         grid = [("native", 0), ("lane", 1), ("lane", 4),
-                ("lane_pipelined", 4)]
+                ("lane_pipelined", 4), ("lane_zero3", 4)]
     else:
         grid = [("native", 0), ("lane", 1), ("lane", auto_k),
                 ("lane_pipelined", auto_k), ("lane", 4), ("lane", 16),
                 ("lane_pipelined", 4), ("lane_pipelined", 16),
-                ("lane_int8", auto_k)]
+                ("lane_int8", auto_k),
+                ("lane_zero3", 1), ("lane_zero3", 4),
+                ("lane_zero3", max(auto_k, 1))]
         # auto_k may coincide with a swept K — drop duplicate cells
         grid = list(dict.fromkeys(grid))
 
@@ -112,7 +129,8 @@ def main(argv=None) -> int:
     for row in results:
         if row["strategy"] == "native":
             continue
-        want = not (row["strategy"] == "lane" and row["num_buckets"] == 1)
+        want = not (row["strategy"] in ("lane", "lane_zero3")
+                    and row["num_buckets"] == 1)
         if row["hlo_concurrent"] != want:
             print(f"STRUCTURE FAIL: {row['strategy']} K={row['num_buckets']} "
                   f"concurrent={row['hlo_concurrent']}, expected {want}")

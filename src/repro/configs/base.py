@@ -139,11 +139,17 @@ class RunConfig:
     shape: ShapeConfig
     fsdp: bool = False             # shard params over the data axis too
     remat: str = "none"            # none | full | dots
-    # native | lane | lane_pipelined | lane_int8 | lane_zero1
+    # native | lane | lane_pipelined | lane_int8 | lane_zero1 | lane_zero3
     gradsync: str = "native"
     # gradient-sync bucket count; 0 = cost-model auto (§5 latency/bandwidth
     # crossover, core.costmodel.optimal_num_buckets)
     gradsync_buckets: int = 0
+    # lane_zero3 per-layer weight-gather pipeline blocks:
+    #   0  = cost-model auto (core.costmodel.optimal_prefetch_blocks)
+    #   >0 = that many AG(lane)→AG(node) blocks, one-layer prefetch
+    #   -1 = BLOCKING gather (no prefetch; the negative control — layer i's
+    #        compute depends on its own all-gather)
+    fsdp_prefetch: int = 0
     scan_layers: bool = True
     microbatch: int = 0            # 0 = no grad accumulation
     # serving

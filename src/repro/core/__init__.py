@@ -12,12 +12,12 @@ from .collectives import (
     native_alltoall, native_scan,
 )
 from .pipeline import (
-    pipelined_bcast_lane, pipelined_allreduce_lane, pipeline_steps,
-    allreduce_pipeline_steps,
+    pipelined_bcast_lane, pipelined_allreduce_lane, pipelined_allgather_lane,
+    pipeline_steps, allreduce_pipeline_steps, allgather_pipeline_steps,
 )
 from .costmodel import (
     CollectiveCost, mockup_cost, klane_time, HW, optimal_num_buckets,
-    bucket_pipeline_time,
+    bucket_pipeline_time, optimal_prefetch_blocks,
 )
 from .guidelines import check_guideline, GuidelineResult, time_fn
 
@@ -28,9 +28,10 @@ __all__ = [
     "scan_lane",
     "native_allreduce", "native_allgather", "native_reduce_scatter",
     "native_alltoall", "native_scan",
-    "pipelined_bcast_lane", "pipelined_allreduce_lane", "pipeline_steps",
-    "allreduce_pipeline_steps",
+    "pipelined_bcast_lane", "pipelined_allreduce_lane",
+    "pipelined_allgather_lane", "pipeline_steps",
+    "allreduce_pipeline_steps", "allgather_pipeline_steps",
     "CollectiveCost", "mockup_cost", "klane_time", "HW",
-    "optimal_num_buckets", "bucket_pipeline_time",
+    "optimal_num_buckets", "bucket_pipeline_time", "optimal_prefetch_blocks",
     "check_guideline", "GuidelineResult", "time_fn",
 ]

@@ -19,7 +19,8 @@ import dataclasses
 import math
 
 __all__ = ["CollectiveCost", "mockup_cost", "klane_time", "speedup_bound",
-           "HW", "optimal_num_buckets", "bucket_pipeline_time"]
+           "HW", "optimal_num_buckets", "bucket_pipeline_time",
+           "optimal_prefetch_blocks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,3 +158,22 @@ def optimal_num_buckets(c_bytes: float, *, stages: int = 3,
         return 1
     k_star = math.sqrt(max(stages - 1, 1) * c_bytes * beta / alpha)
     return max(1, min(max_buckets, int(round(k_star))))
+
+
+def optimal_prefetch_blocks(shard_bytes: float, *, max_blocks: int = 16) -> int:
+    """Block count B for the ZeRO-3 per-layer weight all-gather pipeline.
+
+    Same latency/bandwidth crossover as :func:`optimal_num_buckets`, but
+    for the 2-stage AG(lane)→AG(node) pipeline
+    (:func:`repro.core.pipeline.pipelined_allgather_lane`), where
+    ``shard_bytes`` is the per-chip 1/p stripe of one layer's flat weight
+    vector (the bytes the DCN lane hop actually moves).  The cap is lower
+    than the gradient path's: the prefetch must finish under ONE layer's
+    compute, so there is no point splitting past a few blocks — each
+    block adds a DCN alpha that eats into the overlap window.
+    Deterministic so the host-side shard layout (outside shard_map) and
+    the train step (inside) agree on B.
+    """
+    from .pipeline import ALLGATHER_STAGES
+    return optimal_num_buckets(shard_bytes, stages=ALLGATHER_STAGES,
+                               max_buckets=max_blocks)

@@ -30,8 +30,9 @@ from .collectives import _ag_seq, _rs_seq
 from .lane import LaneTopology
 
 __all__ = ["pipelined_bcast_lane", "pipelined_reduce_lane",
-           "pipelined_allreduce_lane", "pipeline_steps",
-           "allreduce_pipeline_steps"]
+           "pipelined_allreduce_lane", "pipelined_allgather_lane",
+           "pipeline_steps", "allreduce_pipeline_steps",
+           "allgather_pipeline_steps"]
 
 
 def pipeline_steps(num_blocks: int, N: int) -> int:
@@ -41,10 +42,17 @@ def pipeline_steps(num_blocks: int, N: int) -> int:
 
 ALLREDUCE_STAGES = 3     # RS(node) → ring-AR(lane) → AG(node)
 
+ALLGATHER_STAGES = 2     # AG(lane) → AG(node)
+
 
 def allreduce_pipeline_steps(num_blocks: int) -> int:
     """Scan length of the pipelined allreduce: B blocks through 3 stages."""
     return num_blocks + ALLREDUCE_STAGES - 1
+
+
+def allgather_pipeline_steps(num_blocks: int) -> int:
+    """Scan length of the pipelined allgather: B blocks through 2 stages."""
+    return num_blocks + ALLGATHER_STAGES - 1
 
 
 def pipelined_bcast_lane(x, topo: LaneTopology, *, num_blocks: int,
@@ -259,3 +267,68 @@ def pipelined_allreduce_lane(x, topo: LaneTopology, *, num_blocks: int):
     T = allreduce_pipeline_steps(B)
     _, ys = lax.scan(step, (rs0, ar0), jnp.arange(T))
     return ys[ALLREDUCE_STAGES - 1:].reshape(c, *rest)
+
+
+def pipelined_allgather_lane(x, topo: LaneTopology, *, num_blocks: int):
+    """Pipelined full-lane ALLGATHER — the §5 recipe applied to Listing 3.
+
+    The input is this chip's 1/p stripe of the result (the ZeRO-3 FSDP
+    parameter shard), split into ``num_blocks`` blocks that stream through
+    the two stages of the Listing-3 composition under one ``lax.scan``:
+    at scan step t,
+
+      stage 1  AG(lane)  of block t    — cross-pod DCN collective
+      stage 2  AG(node)  of block t-1  — intra-pod ICI collective
+
+    Stage 2 reads only the scan carry written by stage 1 of the *previous*
+    step, so within one step the lane and node all-gathers have no data
+    dependence — the same overlap structure as pipelined_allreduce_lane,
+    but for the gather-shaped collective the FSDP weight prefetch is built
+    from (the k-lane follow-up paper's gather/scatter case).  The scan
+    runs B steps; the last block's node gather is the epilogue OUTSIDE
+    the loop (B + 1 waves total = allgather_pipeline_steps) — a drain
+    iteration inside the scan would re-execute the DCN lane hop of block
+    B-1 and discard it, and XLA cannot drop work from one trip of a
+    while loop.
+
+    Output layout (per block, zero-copy — no trailing transpose): the
+    lane hop lands lane-rank-major inside each block, the node hop wraps
+    node-rank-major outside, so the c = B·n·N·s result rows are ordered
+    (block, node_rank, lane_rank, s) — the ``zero3`` shard layout of
+    :func:`repro.optim.gradsync.zero3_param_shard`.  Requires
+    ``x.shape[0] % num_blocks == 0``.
+    """
+    n = topo.n()
+    N = topo.N()
+    c = x.shape[0]
+    B = num_blocks
+    if B < 1:
+        raise ValueError(f"num_blocks must be >= 1, got {B}")
+    if c % B:
+        raise ValueError(f"shard {c} not divisible by num_blocks={B}")
+    s = c // B                                 # shard rows per block
+    rest = x.shape[1:]
+
+    def ag_lane(blk):
+        return lax.all_gather(blk, topo.lane_axis, axis=0, tiled=True)
+
+    if B == 1:                                 # no pipeline to fill
+        return _ag_seq(ag_lane(x), topo.node_axes)
+
+    xb = x.reshape(B, s, *rest)
+    # prologue fills the pipe with block 0's lane hop (a zeros carry
+    # would cost a discarded node all-gather on the first scan step)
+    carry0 = ag_lane(xb[0])
+
+    def step(carry, t):
+        # ---- stage 1: lane all-gather of block t (DCN) ------------------
+        cur = ag_lane(lax.dynamic_slice_in_dim(xb, t, 1, axis=0)[0])
+        # ---- stage 2: node all-gather of block t-1 (ICI) ----------------
+        # reads only the carry — no data dependence on stage 1 above
+        full = _ag_seq(carry, topo.node_axes)
+        # step t emits block t-1: steps 1..B-1 yield blocks 0..B-2
+        return cur, full
+
+    last, ys = lax.scan(step, carry0, jnp.arange(1, B))
+    tail = _ag_seq(last, topo.node_axes)       # epilogue: block B-1 (ICI)
+    return jnp.concatenate([ys.reshape((B - 1) * n * N * s, *rest), tail])

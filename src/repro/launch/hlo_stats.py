@@ -366,6 +366,39 @@ def _instr_operands(inst: Instr, table: dict[str, str]) -> list[str]:
     return [nm for nm in _operand_names(inst) if nm in table]
 
 
+def _ancestor_fn(comp: Computation):
+    """Memoized transitive-ancestor query over one computation's def-use
+    graph.  Edges follow every operand reference, so dependence chains
+    routed through tuple / get-tuple-element / bitcast plumbing are
+    ancestors too (they are ordinary instructions with operands)."""
+    ops_of = {i.name: _instr_operands(i, comp.table) for i in comp.instrs}
+    anc_memo: dict[str, frozenset] = {}
+
+    def ancestors(name: str) -> frozenset:
+        if name in anc_memo:
+            return anc_memo[name]
+        out: set[str] = set()
+        stack = list(ops_of.get(name, ()))
+        while stack:                           # iterative: HLO chains
+            cur = stack.pop()                  # can exceed Py recursion
+            if cur in out:
+                continue
+            out.add(cur)
+            if cur in anc_memo:
+                out |= anc_memo[cur]
+            else:
+                stack.extend(ops_of.get(cur, ()))
+        anc_memo[name] = frozenset(out)
+        return anc_memo[name]
+
+    return ancestors
+
+
+def _independent(ancestors, a: str, b: str) -> bool:
+    """True iff neither instruction is a def-use ancestor of the other."""
+    return a not in ancestors(b) and b not in ancestors(a)
+
+
 def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
     """Verify, per computation, that a cross-pod (DCN) collective and an
     intra-pod (ICI) collective exist with NO data dependence in either
@@ -386,9 +419,6 @@ def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
     for cname, comp in comps.items():
         if comp is None:
             continue
-        # def-use edges within this computation
-        ops_of = {i.name: _instr_operands(i, comp.table)
-                  for i in comp.instrs}
         colls = []
         for inst in comp.instrs:
             c = _collective(inst, pod_size)
@@ -401,32 +431,130 @@ def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
         per_comp[cname] = {"dcn": len(dcn), "ici": len(ici), "pairs": 0}
         if not dcn or not ici:
             continue
-
-        anc_memo: dict[str, frozenset] = {}
-
-        def ancestors(name: str) -> frozenset:
-            if name in anc_memo:
-                return anc_memo[name]
-            out: set[str] = set()
-            stack = list(ops_of.get(name, ()))
-            while stack:                           # iterative: HLO chains
-                cur = stack.pop()                  # can exceed Py recursion
-                if cur in out:
-                    continue
-                out.add(cur)
-                if cur in anc_memo:
-                    out |= anc_memo[cur]
-                else:
-                    stack.extend(ops_of.get(cur, ()))
-            anc_memo[name] = frozenset(out)
-            return anc_memo[name]
-
+        ancestors = _ancestor_fn(comp)
         for di, dc in dcn:
             for ni, nc in ici:
-                if di.name not in ancestors(ni.name) and \
-                        ni.name not in ancestors(di.name):
+                if _independent(ancestors, di.name, ni.name):
                     pairs.append((cname, di.name, dc["kind"],
                                   ni.name, nc["kind"]))
+                    per_comp[cname]["pairs"] += 1
+    return {"concurrent": bool(pairs), "pairs": pairs,
+            "per_computation": per_comp}
+
+
+# ---------------------------------------------------------------------------
+# structural concurrency, collective vs COMPUTE: can the ZeRO-3 prefetch
+# all-gather of layer i+1 run under layer i's dot FLOPs?
+# ---------------------------------------------------------------------------
+
+def _called_comps(line: str) -> list[str]:
+    """Every computation a line references: calls=/condition=/body=/
+    to_apply= AND conditional branch_computations={...}."""
+    out = _CALLED_RE.findall(line)
+    mb = _BRANCHES_RE.search(line)
+    if mb:
+        out += [c.strip().lstrip("%") for c in mb.group(1).split(",")]
+    return out
+
+
+def _carrier_comps(comps: dict, direct) -> set:
+    """Names of computations that transitively contain an instruction for
+    which ``direct(inst)`` is true — through while bodies, fusions, calls
+    and conditional branches alike."""
+    memo: dict[str, bool] = {}
+
+    def has(name: str) -> bool:
+        if name in memo:
+            return memo[name]
+        memo[name] = False                     # cycle guard (HLO is acyclic)
+        comp = comps.get(name)
+        if comp is None:
+            return False
+        for inst in comp.instrs:
+            if direct(inst) or any(has(ch)
+                                   for ch in _called_comps(inst.line)):
+                memo[name] = True
+                break
+        return memo[name]
+
+    return {n for n in comps if n != "__entry__" and has(n)}
+
+
+_CALLER_OPS = ("while", "fusion", "call", "conditional", "map")
+
+
+def collective_compute_concurrency(text: str, *, pod_size: int = 256,
+                                   coll_kinds=None) -> dict:
+    """Verify, per computation, that a collective and a FLOP-carrying
+    instruction coexist with NO data dependence in either direction — the
+    structural precondition for hiding a ZeRO-3 weight-prefetch
+    all-gather under a layer's matmuls (multi-core cluster model: overlap
+    must be provable on the graph, not inferred from CPU wall-clock,
+    which cannot show the win on shared-memory host devices).
+
+    An instruction "carries" a collective/FLOPs either directly (an
+    all-gather / a dot) or by calling into a computation that transitively
+    contains one (a fusion of dots; the inner while loop of the pipelined
+    per-layer gather).  That nesting matters: the layer scan's body holds
+    the prefetch gather as a ``while`` instruction (the AG pipeline) next
+    to the current layer's dot fusions — def-use-independent, so XLA may
+    overlap them.  A BLOCKING gather chains every dot behind its own
+    all-gather, so no independent pair survives — the negative control.
+
+    ``coll_kinds`` restricts which collective kinds count (default: the
+    gather-shaped kind the prefetch path is built from).
+
+    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
+    with pairs (computation, coll_instr, coll_kind_or_op, compute_instr,
+    compute_op).
+    """
+    if coll_kinds is None:
+        coll_kinds = ("all-gather",)
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+
+    def direct_coll(inst):
+        c = _collective(inst, pod_size)
+        return bool(c and c["kind"] in coll_kinds)
+
+    def direct_flops(inst):
+        return inst.op in ("dot", "convolution")
+
+    coll_comps = _carrier_comps(comps, direct_coll)
+    flop_comps = _carrier_comps(comps, direct_flops)
+
+    def carriers(comp, direct, carrier_set):
+        out = []
+        for inst in comp.instrs:
+            if direct(inst):
+                out.append(inst)
+            elif inst.op in _CALLER_OPS and any(
+                    ch in carrier_set
+                    for ch in _called_comps(inst.line)):
+                out.append(inst)
+        return out
+
+    pairs = []
+    per_comp: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        if comp is None:
+            continue
+        colls = carriers(comp, direct_coll, coll_comps)
+        if not colls:
+            continue
+        compute = carriers(comp, direct_flops, flop_comps)
+        per_comp[cname] = {"colls": len(colls), "compute": len(compute),
+                           "pairs": 0}
+        if not compute:
+            continue
+        ancestors = _ancestor_fn(comp)
+        for ci in colls:
+            ckind = (_collective(ci, pod_size) or {}).get("kind", ci.op)
+            for fi in compute:
+                if fi.name == ci.name:
+                    continue                   # one instr carrying both
+                if _independent(ancestors, ci.name, fi.name):
+                    pairs.append((cname, ci.name, ckind, fi.name, fi.op))
                     per_comp[cname]["pairs"] += 1
     return {"concurrent": bool(pairs), "pairs": pairs,
             "per_computation": per_comp}

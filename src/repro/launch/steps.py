@@ -22,12 +22,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import LaneTopology
-from repro.models import loss_fn, prefill, decode_step
-from repro.optim import AdamWConfig, adamw_update, grad_sync
+from repro.core import LaneTopology, optimal_prefetch_blocks
+from repro.core.pipeline import pipelined_allgather_lane
+from repro.models import init_model, loss_fn, prefill, decode_step
+from repro.models.transformer import ShardedBlocks
+from repro.optim import AdamWConfig, adamw_init, adamw_update, grad_sync
 from repro.optim.gradsync import (
     _unflatten_bucket, _flatten_bucket, resolve_num_buckets,
-    zero1_param_shard, zero1_unshard,
+    zero1_param_shard, zero1_unshard, zero3_unshard,
 )
 from .mesh import batch_axes
 
@@ -113,8 +115,26 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     moved past the update — same bytes, sharded optimizer memory); its
     shard layout is bucket-major, so param sharding/unsharding goes
     through gradsync.zero1_param_shard / zero1_unshard with the same K.
+    lane_zero3 additionally keeps the scanned layer weights sharded 1/p
+    per chip (zero3_shard_blocks layout) and re-gathers them LAYER BY
+    LAYER inside the forward scan via the pipelined AG(lane)→AG(node)
+    (core.pipeline.pipelined_allgather_lane), with a one-layer prefetch
+    buffer so layer i+1's gather overlaps layer i's compute
+    (run.fsdp_prefetch: 0 = cost-model block count, >0 = override,
+    -1 = blocking negative control).  Gradients for the stack need no
+    separate sync: the gather's AD transpose IS the lane_zero3
+    reduce-scatter.
     """
     ba = batch_axes(mesh)
+    if run.gradsync == "lane_zero3" and len(ba) < 2:
+        # zero3 shards over the (lane × node) product and its gather
+        # pipeline needs the two levels to be DISTINCT axes; there is no
+        # sensible single-axis degradation (unlike the other strategies,
+        # which fall back to native below)
+        raise ValueError(
+            "lane_zero3 needs distinct lane and node batch axes (a "
+            "multi-pod mesh); use native or lane_zero1 on single-"
+            f"batch-axis meshes (got batch axes {ba})")
     topo = LaneTopology(node_axes=ba[1:] or ba, lane_axis=ba[0]) \
         if len(ba) > 1 else LaneTopology(node_axes=(ba[0],), lane_axis=ba[0])
     # single-pod fallback: treat "data" as the lane axis with a trivial
@@ -124,6 +144,72 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
 
     def lf(p, tok, lab, ex):
         return loss_fn(p, cfg, tok, lab, extra_embeds=ex, remat=run.remat)
+
+    if strategy == "lane_zero3":
+        n_, N_ = topo.sizes(mesh)
+        spec3 = zero3_layer_spec(cfg)
+        B3 = resolve_prefetch_blocks(spec3.layer_elems, n_, N_,
+                                     run.fsdp_prefetch)
+        blocking = run.fsdp_prefetch == -1
+
+        def gather_layer(x):
+            full = (zero3_unshard(x, topo, B3) if blocking
+                    else pipelined_allgather_lane(x, topo, num_blocks=B3))
+            return unflatten_layer(full, spec3)
+
+        def per_replica_zero3(params, opt_state, tokens, labels, extra=None):
+            """lane_zero3 train step.
+
+            params["blocks"] is this chip's shard — any shape reshapeable
+            to (L, B·s), e.g. the local block of the host-side
+            (L, B, n·N, s) layout from zero3_shard_blocks.  opt_state is
+            the split {"rest", "blocks"} state of zero3_opt_init.  The
+            returned params keep the blocks SHARDED (same shape as the
+            input): ZeRO-3 never materializes full parameters outside the
+            per-layer prefetch window.
+            """
+            # NOTE optimizer-semantics parity with lane_zero1, not native:
+            # the flat sharded AdamW (_adamw_flat) does no global-norm
+            # clipping (a true global norm needs an extra cross-shard
+            # psum) and applies weight decay uniformly, incl. norm gains;
+            # the rest-params clip by their own partial norm.  Exact-
+            # native comparisons neutralize both (see the zero3 test
+            # case); sharded clipping is a ROADMAP follow-up.
+            bshape = params["blocks"].shape
+            shards = params["blocks"].reshape(spec3.num_layers, -1)
+            rest = {k: v for k, v in params.items() if k != "blocks"}
+
+            def lf3(rest_p, sh):
+                p = dict(rest_p)
+                p["blocks"] = ShardedBlocks(sh, gather_layer,
+                                            prefetch=not blocking)
+                return lf(p, tokens, labels, extra)
+
+            loss, (g_rest, g_sh) = jax.value_and_grad(
+                lf3, argnums=(0, 1))(rest, shards)
+            loss = jax.lax.pmean(loss, ba)
+            # the gather's transpose already reduce-scattered g_sh over
+            # (lane × node) — sum over replicas; only the mean is left
+            g_sh = g_sh / _axprod(ba)
+            g_rest = grad_sync(g_rest, topo, "lane",
+                               num_buckets=run.gradsync_buckets)
+            new_rest, new_opt_rest = adamw_update(
+                opt, g_rest, opt_state["rest"], rest)
+            ob = opt_state["blocks"]
+            newp, nob = _adamw_flat(
+                opt, g_sh.reshape(-1),
+                {"m": ob["m"].reshape(-1), "v": ob["v"].reshape(-1),
+                 "count": ob["count"]},
+                shards.reshape(-1))
+            new_params = dict(new_rest)
+            new_params["blocks"] = newp.reshape(bshape)
+            new_opt = {"rest": new_opt_rest,
+                       "blocks": {"m": nob["m"].reshape(ob["m"].shape),
+                                  "v": nob["v"].reshape(ob["v"].shape),
+                                  "count": nob["count"]}}
+            return loss, new_params, new_opt
+
+        return per_replica_zero3, topo
 
     def per_replica(params, opt_state, tokens, labels, extra):
         loss, grads = jax.value_and_grad(lf)(params, tokens, labels, extra)
@@ -197,6 +283,116 @@ def zero1_opt_init(params, topo_n: int, num_buckets: int = 0):
     return {"m": jnp.zeros((sz,), jnp.float32),
             "v": jnp.zeros((sz,), jnp.float32),
             "count": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-3 layer sharding (the lane_zero3 / FSDP path)
+# ---------------------------------------------------------------------------
+#
+# The scanned layer stack params["blocks"] (every leaf (L, ...)) is
+# flattened per layer into an (L, D) fp32 master copy, padded to
+# D_pad = B·n·N·s, and each chip keeps the (L, B·s) stripe of the
+# gradsync.zero3_param_shard layout.  The host-side array is shaped
+# (L, B, n·N, s) so a plain NamedSharding P(None, None, (*node_axes,
+# lane_axis), None) places exactly stripe (node_rank·N + lane_rank) on
+# each chip — no host-side rank arithmetic.  Everything that both sides
+# of the shard_map boundary must agree on (leaf order, D, B, s) is
+# derived deterministically from the ModelConfig via zero3_layer_spec.
+
+class Zero3LayerSpec:
+    """Flat layout of ONE layer's parameter tree (derived via eval_shape,
+    so it never materializes weights)."""
+
+    def __init__(self, metas, treedef, layer_elems: int, num_layers: int):
+        self.metas = metas              # ((shape[1:], dtype) per leaf)
+        self.treedef = treedef
+        self.layer_elems = layer_elems  # D: unpadded flat size per layer
+        self.num_layers = num_layers
+
+
+def zero3_layer_spec(cfg: ModelConfig) -> Zero3LayerSpec:
+    abs_params = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+    leaves, treedef = jax.tree.flatten(abs_params["blocks"])
+    metas = tuple((tuple(l.shape[1:]), l.dtype) for l in leaves)
+    elems = sum(math.prod(s) for s, _ in metas)
+    return Zero3LayerSpec(metas, treedef, elems, leaves[0].shape[0])
+
+
+def unflatten_layer(vec, spec: Zero3LayerSpec):
+    """Padded flat fp32 layer vector -> the layer's parameter tree (leaves
+    cast back to their stored dtypes)."""
+    out, ofs = [], 0
+    for shape, dtype in spec.metas:
+        sz = math.prod(shape)
+        out.append(vec[ofs:ofs + sz].reshape(shape).astype(dtype))
+        ofs += sz
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def resolve_prefetch_blocks(layer_elems: int, n: int, N: int,
+                            override: int = 0) -> int:
+    """The B every lane_zero3 call site uses (shard layout, opt-state
+    size, per-layer gather pipeline).  override > 0 wins; -1 (blocking
+    negative control) gathers monolithically so B degenerates to 1;
+    otherwise the cost model picks B from the DCN latency/bandwidth
+    crossover on the per-chip stripe.  Capped so each block keeps at
+    least one row per chip."""
+    p = max(n * N, 1)
+    if override > 0:
+        b = override
+    elif override < 0:
+        b = 1
+    else:
+        b = optimal_prefetch_blocks(layer_elems * 4 / p)
+    return max(1, min(b, max(1, layer_elems // p)))
+
+
+def _flatten_blocks_layerwise(blocks, pad_to: int):
+    leaves, _ = jax.tree.flatten(blocks)
+    L = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(L, -1).astype(jnp.float32) for l in leaves], axis=1)
+    pad = (-flat.shape[1]) % pad_to
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((L, pad), flat.dtype)], axis=1)
+    return flat
+
+
+def zero3_shard_blocks(blocks, n: int, N: int, fsdp_prefetch: int = 0):
+    """Host-side: the (L, B, n·N, s) fp32 master layout of the stacked
+    layer tree.  Place on the mesh with
+    ``P(None, None, (*node_axes, lane_axis), None)`` and each chip's
+    local block reshapes to the (L, B·s) shard the train step expects.
+    Returns (array, B)."""
+    leaves = jax.tree.leaves(blocks)
+    L = leaves[0].shape[0]
+    elems = sum(math.prod(l.shape[1:]) for l in leaves)
+    B = resolve_prefetch_blocks(elems, n, N, fsdp_prefetch)
+    p = n * N
+    flat = _flatten_blocks_layerwise(blocks, pad_to=B * p)
+    s = flat.shape[1] // (B * p)
+    return flat.reshape(L, B, p, s), B
+
+
+def zero3_opt_init(params, n: int, N: int, fsdp_prefetch: int = 0):
+    """Split optimizer state for the lane_zero3 step: ordinary AdamW tree
+    state for the replicated non-block params, flat sharded fp32 moments
+    (in the zero3_shard_blocks layout) for the layer stack.  The B
+    resolution MUST match the step's (resolve_prefetch_blocks is
+    deterministic, so the default 0 agrees; pass the same
+    run.fsdp_prefetch override on both sides)."""
+    blocks = params["blocks"]
+    rest = {k: v for k, v in params.items() if k != "blocks"}
+    # derive the moment shape FROM zero3_shard_blocks (via eval_shape, no
+    # weight materialization) so the layout invariant lives in one place
+    shard = jax.eval_shape(
+        lambda b: zero3_shard_blocks(b, n, N, fsdp_prefetch)[0], blocks)
+    zeros = jnp.zeros(shard.shape, jnp.float32)
+    return {"rest": adamw_init(rest),
+            "blocks": {"m": zeros, "v": zeros,
+                       "count": jnp.zeros((), jnp.int32)}}
 
 
 # ---------------------------------------------------------------------------

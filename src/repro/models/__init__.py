@@ -2,4 +2,5 @@
 from .transformer import (
     init_model, model_forward, init_cache, prefill, decode_step,
     make_train_step, make_prefill_step, make_decode_step, loss_fn,
+    ShardedBlocks,
 )

@@ -180,6 +180,85 @@ def _mamba_block(lp, h, cfg: ModelConfig, state=None):
     return h + out, new_state
 
 
+# families whose layer stack is one lax.scan over params["blocks"] — the
+# shape ZeRO-3 sharding (ShardedBlocks below) can substitute into
+_SCANNED_FAMILIES = ("dense", "vlm", "moe", "audio")
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-3 / FSDP sharded layer stack (paper §5 applied to the weight gather)
+# ---------------------------------------------------------------------------
+
+class ShardedBlocks:
+    """Stand-in for ``params["blocks"]`` when the scanned layer stack is
+    ZeRO-3 sharded: each chip holds its 1/p stripe of every layer's flat
+    weight vector plus the recipe to re-gather one layer on demand.
+
+    shards   (L, B·s)-reshapeable array — this chip's per-layer stripe in
+             the bucket-major ``zero3_param_shard`` layout.  Differentiable
+             through the gather: the cotangent arriving on ``shards`` is
+             the batch-summed, fully reduce-scattered layer gradient (the
+             all-gather's transpose IS the lane_zero3 reduce-scatter).
+    gather   shard row -> one layer's parameter tree (built by
+             launch/steps.py around ``pipelined_allgather_lane``).
+    prefetch True: the layer scan carries a one-layer prefetch buffer —
+             layer i+1's all-gather is issued in the same scan step as
+             layer i's compute with no data dependence between them, so
+             XLA may overlap gather and matmuls (verified structurally by
+             ``launch.hlo_stats.collective_compute_concurrency``).
+             False: blocking gather — each layer's compute consumes its
+             own all-gather (the negative control).
+
+    Not a pytree on purpose: it only ever exists *inside* a traced loss
+    function (steps.py closes over gather and passes the shard array as
+    the differentiated argument), so it must never cross a jit/grad
+    boundary itself.
+    """
+
+    def __init__(self, shards, gather, *, prefetch: bool = True):
+        self.shards = shards
+        self.gather = gather
+        self.prefetch = prefetch
+
+
+def _scan_blocks_prefetch(blocks: ShardedBlocks, h, body):
+    """Layer scan over ZeRO-3 shards with a one-layer prefetch buffer.
+
+    ``body(h, layer_params) -> (h', aux)`` is the ordinary (possibly
+    remat'd) block body.  In prefetch mode the carry holds the *gathered*
+    params of the layer about to run: step t gathers layer t+1's weights
+    from its shard row while computing layer t from the carry — within a
+    step the all-gather and the dots touch disjoint values, which is
+    exactly the structural concurrency the §5 pipeline needs.  The scan
+    covers layers 0..L-2 (xs = shard rows 1..L-1); layer L-1 runs OUTSIDE
+    the loop on the final carry, so exactly L gathers execute per forward
+    — a wrapped xs would re-gather layer 0 on the last trip, and XLA
+    cannot drop work from a single iteration of a while loop.
+    """
+    shards, gather = blocks.shards, blocks.gather
+    if not blocks.prefetch:
+        # blocking: layer t's dots are data-dependent on layer t's gather
+        def step_blocking(h, x):
+            return body(h, gather(x))
+        return lax.scan(step_blocking, h, shards)
+
+    w0 = gather(shards[0])                  # layer 0: unavoidably blocking
+    if shards.shape[0] == 1:
+        h, a = body(h, w0)
+        return h, jnp.asarray(a)[None]
+
+    def step(carry, x):
+        h, w = carry
+        w_next = gather(x)                  # prefetch layer t+1 (no dep on w)
+        h, a = body(h, w)                   # compute layer t
+        return (h, w_next), a
+
+    (h, w_last), aux_ys = lax.scan(step, (h, w0), shards[1:])
+    h, a_last = body(h, w_last)             # layer L-1: already gathered
+    return h, jnp.concatenate([jnp.atleast_1d(aux_ys),
+                               jnp.asarray(a_last)[None]])
+
+
 # ---------------------------------------------------------------------------
 # forward (no cache): training and encoder passes
 # ---------------------------------------------------------------------------
@@ -239,8 +318,13 @@ def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     Bz, T, _ = h.shape
     positions = jnp.arange(T)[None]
     aux_total = jnp.zeros((), jnp.float32)
+    if isinstance(params.get("blocks"), ShardedBlocks) and \
+            cfg.family not in _SCANNED_FAMILIES:
+        raise NotImplementedError(
+            "ZeRO-3 sharded blocks support the scanned attention families "
+            f"only, not {cfg.family!r}")
 
-    if cfg.family in ("dense", "vlm", "moe", "audio"):
+    if cfg.family in _SCANNED_FAMILIES:
         # aux losses leave via ys, not the carry (a mixed-dtype carry made
         # XLA:CPU stack an f32 copy of every layer's h for the backward)
         def body(h, lp):
@@ -248,7 +332,11 @@ def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
                                 enc_out=enc_out)
             return _pin(h), a
         body = _maybe_remat(body, remat)
-        h, aux_ys = lax.scan(body, h, params["blocks"])
+        blocks = params["blocks"]
+        if isinstance(blocks, ShardedBlocks):
+            h, aux_ys = _scan_blocks_prefetch(blocks, h, body)
+        else:
+            h, aux_ys = lax.scan(body, h, blocks)
         aux_total = jnp.sum(aux_ys)
 
     elif cfg.family == "ssm":
@@ -370,7 +458,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     K, hd, Lr = cfg.num_kv_heads, cfg.hd(), cfg.num_layers
     kv = lambda n: {"k": jnp.zeros((n, batch, max_seq, K, hd), dtype),
                     "v": jnp.zeros((n, batch, max_seq, K, hd), dtype)}
-    if cfg.family in ("dense", "vlm", "moe", "audio"):
+    if cfg.family in _SCANNED_FAMILIES:
         return kv(Lr)
     if cfg.family == "ssm":
         st = S.init_mamba_state(cfg, batch)
@@ -450,7 +538,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, extra_embeds=None):
     Bz, T, _ = h.shape
     length0 = jnp.zeros((Bz,), jnp.int32)
 
-    if cfg.family in ("dense", "vlm", "moe", "audio"):
+    if cfg.family in _SCANNED_FAMILIES:
         xs = (params["blocks"], cache) if enc_kv is None else \
              (params["blocks"], cache, enc_kv)
 
@@ -488,7 +576,7 @@ def decode_step(params, cfg: ModelConfig, token, state: ServeState):
     h = L.embed(params["embed"], token)
     length = state.length
 
-    if cfg.family in ("dense", "vlm", "moe", "audio"):
+    if cfg.family in _SCANNED_FAMILIES:
         xs = (params["blocks"], state.cache) if state.enc_kv is None else \
              (params["blocks"], state.cache, state.enc_kv)
 

@@ -17,14 +17,24 @@ MPI_Allreduce over the (pod × data) communicator.  Strategies:
             (core.pipeline.pipelined_allreduce_lane) — O(1) HLO size in
             the bucket count, same overlap structure.
   lane_int8 bucketed like ``lane``, but the DCN hop is int8-compressed
-            (per-chunk scales): 4× fewer DCN bytes; the intra-pod ICI
-            hops stay fp32.  Beyond-paper distributed-optimization trick.
+            (per-chunk scales, bitcast-fused into the SAME all-gather as
+            the payload — one DCN collective per bucket): ~4× fewer DCN
+            bytes; the intra-pod ICI hops stay fp32.  Beyond-paper
+            distributed-optimization trick.
   lane_zero1 reduce-scatter only (no trailing all-gather): returns
             data-sharded grads for a ZeRO-1 sharded optimizer update; the
             all-gather of the paper's decomposition moves AFTER the
             optimizer (same bytes, applied to fresh params, moments stay
             sharded).  See launch/steps.py.  Bucketed on the RS + lane
             phases.
+  lane_zero3 full reduce-scatter over BOTH levels — RS(node) then
+            RS(lane) — leaving each chip its 1/p stripe of the reduced
+            gradient, matching the ZeRO-3/FSDP parameter shard layout
+            (zero3_param_shard).  No all-gather here at all: parameters
+            stay sharded through the optimizer and are re-gathered
+            layer-by-layer during the NEXT forward pass by the pipelined
+            prefetch (core.pipeline.pipelined_allgather_lane; see
+            launch/steps.py and DESIGN.md §5).
 
 All strategies flatten the gradient pytree into one fp32 vector, then
 split it into K equal buckets (K from the cost model's §5 latency/
@@ -46,7 +56,8 @@ from repro.core import LaneTopology, optimal_num_buckets
 from repro.core.collectives import _ag_seq, _rs_seq
 from repro.core.pipeline import pipelined_allreduce_lane
 
-STRATEGIES = ("native", "lane", "lane_pipelined", "lane_int8", "lane_zero1")
+STRATEGIES = ("native", "lane", "lane_pipelined", "lane_int8", "lane_zero1",
+              "lane_zero3")
 
 
 def _flatten_bucket(tree, pad_to: int):
@@ -70,9 +81,12 @@ def _unflatten_bucket(flat, spec):
     return jax.tree.unflatten(treedef, out)
 
 
+_INT8_CHUNK = 1024
+
+
 def compress_int8(x):
     """Chunked symmetric int8 quantization; returns (q, scales)."""
-    chunk = 1024
+    chunk = _INT8_CHUNK
     n = x.shape[0]
     pad = (-n) % chunk
     if pad:
@@ -85,6 +99,29 @@ def compress_int8(x):
 
 def decompress_int8(q, scale, n):
     return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+
+
+def pack_int8_payload(q, scale):
+    """(C, chunk) int8 values + (C, 1) fp32 scales -> ONE 1-D int8 wire
+    buffer ``[q-bytes | scale-bytes]``.
+
+    The fp32 scales are bitcast to 4 int8 lanes each and appended, so the
+    per-bucket DCN hop needs a single all-gather instead of a payload
+    gather plus a separate scale gather (the ROADMAP-noted 2-collective
+    inefficiency: the second gather paid a full DCN alpha for C·4 bytes).
+    Bit-exact: the bytes are reinterpreted, never converted."""
+    sb = lax.bitcast_convert_type(scale.astype(jnp.float32).reshape(-1),
+                                  jnp.int8)                     # (C, 4)
+    return jnp.concatenate([q.reshape(-1), sb.reshape(-1)])
+
+
+def unpack_int8_payload(buf, num_chunks: int):
+    """Inverse of pack_int8_payload: -> ((C, chunk) int8, (C, 1) fp32)."""
+    m = num_chunks * _INT8_CHUNK
+    q = buf[:m].reshape(num_chunks, _INT8_CHUNK)
+    scale = lax.bitcast_convert_type(
+        buf[m:].reshape(num_chunks, 4), jnp.float32)
+    return q, scale.reshape(num_chunks, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -158,12 +195,23 @@ def _ar_lane(topo: LaneTopology):
 
 
 def _ar_lane_int8(topo: LaneTopology):
+    """Compressed DCN allreduce stage: ONE fused all-gather per bucket.
+
+    The per-chunk scales ride inside the int8 payload (bitcast, see
+    pack_int8_payload) instead of a second scale all-gather — one DCN
+    alpha per bucket, not two, and the schedule's wave structure sees a
+    single collective to overlap with the neighbouring ICI stages."""
     def stage(v):
         q, scale, n = compress_int8(v)
-        qg = lax.all_gather(q, topo.lane_axis, axis=0, tiled=False)
-        sg = lax.all_gather(scale, topo.lane_axis, axis=0, tiled=False)
-        N = qg.shape[0]
-        return sum(decompress_int8(qg[i], sg[i], n) for i in range(N))
+        num_chunks = q.shape[0]
+        buf = pack_int8_payload(q, scale)
+        g = lax.all_gather(buf, topo.lane_axis, axis=0, tiled=False)
+        N = g.shape[0]
+        out = jnp.zeros((n,), jnp.float32)
+        for i in range(N):
+            qi, si = unpack_int8_payload(g[i], num_chunks)
+            out = out + decompress_int8(qi, si, n)
+        return out
     return stage
 
 
@@ -198,6 +246,47 @@ def zero1_unshard(shard, topo: LaneTopology, num_buckets: int):
 
 
 # ---------------------------------------------------------------------------
+# ZeRO-3 shard layout (bucket-major over node_rank × lane_rank)
+# ---------------------------------------------------------------------------
+#
+# ZeRO-3 shards over the FULL p = n·N product communicator: with B buckets,
+# chip (node_rank i, lane_rank j) holds the flat vector viewed as
+# (B, n, N, s) sliced at [:, i, j, :].  This is exactly the order the
+# pipelined AG(lane)→AG(node) reassembly of pipelined_allgather_lane emits
+# blocks in, so the hot-path per-layer weight gather needs NO transpose
+# (the Listing-3 zero-copy layout choice, DESIGN.md §2.2) — only the
+# monolithic debug/negative-control unshard below pays a permute.
+
+def zero3_param_shard(flat, topo: LaneTopology, num_blocks: int):
+    """This chip's 1/p stripe of a padded flat vector, matching both the
+    layout grad_sync(..., "lane_zero3", num_buckets=B) returns for
+    gradients and the block order pipelined_allgather_lane reassembles."""
+    n, N = topo.n(), topo.N()
+    B = num_blocks
+    s = flat.shape[0] // (B * n * N)
+    idx = topo.node_rank() * N + topo.lane_rank()
+    xb = flat.reshape(B, n * N, s, *flat.shape[1:])
+    return jnp.take(xb, idx, axis=1).reshape(B * s, *flat.shape[1:])
+
+
+def zero3_unshard(shard, topo: LaneTopology, num_blocks: int):
+    """Monolithic reassembly of per-chip (B·s,) stripes to flat (B·n·N·s,).
+
+    AG(lane) then AG(node) on the WHOLE shard — the blocking comparator
+    to the pipelined per-block gather (and the negative control of the
+    prefetch-overlap proof).  Gathering whole shards lands (i, j, b, s)
+    order, so this path pays the (n·N, B) → (B, n·N) permute the
+    pipelined path avoids."""
+    n, N = topo.n(), topo.N()
+    B = num_blocks
+    g = lax.all_gather(shard, topo.lane_axis, axis=0, tiled=True)
+    g = _ag_seq(g, topo.node_axes)                    # (n·N·B·s,) (i, j, b, s)
+    s = g.shape[0] // (n * N * B)
+    g = g.reshape(n * N, B, s, *shard.shape[1:])
+    return jnp.swapaxes(g, 0, 1).reshape(B * n * N * s, *shard.shape[1:])
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 
@@ -207,8 +296,8 @@ def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native",
 
     Must be called inside shard_map with topo's axes manual.  Returns the
     fully-reduced tree for native/lane/lane_pipelined/lane_int8, or
-    (sharded_flat, spec) for lane_zero1 (see steps.py for the deferred
-    all-gather).  ``num_buckets``: 0 = cost-model auto (§5 crossover);
+    (sharded_flat, spec) for lane_zero1 / lane_zero3 (see steps.py for
+    the deferred all-gather / the per-layer prefetch re-gather).  ``num_buckets``: 0 = cost-model auto (§5 crossover);
     callers that must agree on the padded layout across call sites (the
     ZeRO-1 optimizer state) should resolve K once via resolve_num_buckets
     and pass it explicitly.
@@ -225,10 +314,12 @@ def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native",
                          f"have {STRATEGIES}")
 
     n_node = topo.n()
+    # zero3 scatters over the full p = n·N product; the others over n only
+    shard_ways = n_node * topo.N() if strategy == "lane_zero3" else n_node
     total = sum(math.prod(l.shape) for l in jax.tree.leaves(grads))
-    K = resolve_num_buckets(total, n_node, num_buckets)
-    # every bucket must stay divisible by n after the K-way split
-    flat, spec = _flatten_bucket(grads, pad_to=K * n_node)
+    K = resolve_num_buckets(total, shard_ways, num_buckets)
+    # every bucket must stay divisible by the shard ways after the K-way split
+    flat, spec = _flatten_bucket(grads, pad_to=K * shard_ways)
 
     if strategy == "lane_pipelined":
         out = pipelined_allreduce_lane(flat, topo, num_blocks=K) / nrep
@@ -249,3 +340,11 @@ def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native",
             flat, K,
             (_rs_node(topo), lambda v: lax.psum(v, topo.lane_axis) / nrep))
         return jnp.concatenate(parts), spec   # caller owns the deferred AG
+
+    if strategy == "lane_zero3":
+        parts = bucket_schedule(
+            flat, K,
+            (_rs_node(topo), lambda v: lax.psum_scatter(
+                v, topo.lane_axis, scatter_dimension=0, tiled=True) / nrep))
+        return jnp.concatenate(parts), spec   # 1/p stripe; layer prefetch
+        # re-gathers during the next forward (launch/steps.py)

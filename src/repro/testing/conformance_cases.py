@@ -1,0 +1,321 @@
+"""Conformance grid for EVERY lane collective (paper §3, Listings 1-6).
+
+Where ``collective_cases`` hand-picks representative scenarios, this
+module *generates* a dense grid: each of the lane collectives
+(bcast/reduce/scan/gather/scatter/alltoall plus allreduce/RS/AG) against
+its single-process oracle, across
+
+  * odd topologies — n=1 (every node a single process: the lane level IS
+    the communicator), N=1 (single node: the node level is everything),
+    heterogeneous node-axis sizes ((data, model) = (4, 1)),
+  * non-power-of-two payloads (odd rows per rank — the minimal
+    divisibility the mock-ups require, nothing more),
+  * bf16 / int32 payloads (integer-valued so reductions are EXACT in
+    every dtype — a tolerance would hide dtype-dispatch bugs),
+  * non-default roots and the unreplicated-root SPMD emulation paths,
+  * the divisibility preconditions (ValueError on bad leading dims).
+
+IMPORT-SAFE like collective_cases: importing never touches XLA flags, so
+pytest can enumerate CASES; executing needs 8 host devices — run
+``python -m repro.testing.run_conformance_cases`` (fresh process, flag
+set before the jax import).
+"""
+import sys
+
+import numpy as np            # noqa: E402
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import (      # noqa: E402
+    LaneTopology, allreduce_lane, reduce_scatter_lane, allgather_lane,
+    bcast_lane, alltoall_lane, reduce_lane, gather_lane, scatter_lane,
+    scan_lane,
+)
+from repro.core import ref as _ref  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# topology grid (all use the 8 host devices)
+# ---------------------------------------------------------------------------
+
+TOPOS = {
+    # name: (mesh shape, axis names, node_axes, lane_axis)
+    "t2": ((4, 2), ("lane", "node"), ("node",), "lane"),       # n=2, N=4
+    "t3": ((2, 2, 2), ("pod", "data", "model"),
+           ("data", "model"), "pod"),                          # n=4, N=2
+    "het": ((2, 4, 1), ("pod", "data", "model"),
+            ("data", "model"), "pod"),                         # (4,1) node
+    "n1": ((8, 1), ("lane", "node"), ("node",), "lane"),       # n=1 (k=1)
+    "N1": ((1, 8), ("lane", "node"), ("node",), "lane"),       # single node
+}
+
+DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "int32": jnp.int32,
+}
+
+
+def _make(topo_key):
+    shape, names, node_axes, lane = TOPOS[topo_key]
+    mesh = jax.make_mesh(shape, names)
+    return mesh, LaneTopology(node_axes=node_axes, lane_axis=lane)
+
+
+def _payload(p, rows, feat, dtype_key, seed):
+    """Stacked per-rank inputs as fp64-exact numpy.
+
+    bf16/int32 use small integers so every reduction below is exact in
+    the target dtype (bf16 represents integers up to 256 exactly; the
+    deepest sum here is bounded by 8 ranks × |4|, plus prefix depth)."""
+    rng = np.random.default_rng(seed)
+    if dtype_key == "f32":
+        return rng.normal(size=(p, rows, feat)).astype(np.float32)
+    return rng.integers(-4, 5, size=(p, rows, feat)).astype(
+        np.float32 if dtype_key == "bf16" else np.int32)
+
+
+def _run(mesh, topo, fn, xs, dtype_key):
+    """Scatter per-rank inputs, run the shard_map'd collective in the
+    target dtype, gather per-rank outputs back as float/int numpy."""
+    p, rows = xs.shape[0], xs.shape[1]
+    spec = P((topo.lane_axis, *topo.node_axes))
+    flat = jnp.asarray(xs.reshape(p * rows, *xs.shape[2:]),
+                       DTYPES[dtype_key])
+    arr = jax.device_put(flat, jax.sharding.NamedSharding(mesh, spec))
+    shard_fn = jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)
+    out = jax.jit(shard_fn)(arr)
+    out = np.asarray(out).astype(xs.dtype)
+    orows = out.shape[0] // p
+    return out.reshape(p, orows, *out.shape[1:])
+
+
+def _check(got, want, dtype_key):
+    if dtype_key == "f32":
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+def _replicate_root_node(xs, root_lane, n):
+    """SPMD rooted-collective convention: the root buffer is replicated
+    over the root lane's chips (global ranks root_lane·n .. +n-1)."""
+    xs = xs.copy()
+    base = root_lane * n
+    for i in range(n):
+        xs[base + i] = xs[base]
+    return xs
+
+
+# ---------------------------------------------------------------------------
+# per-collective builders: (mesh, topo, dtype_key, seed) -> None (asserts)
+# ---------------------------------------------------------------------------
+# m (rows per divisibility unit) is odd everywhere — the grid's payloads
+# are exactly the minimal-divisibility sizes, never "nice" powers of two.
+
+def _b_allreduce(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3 * n, 2, dt, seed)
+    out = _run(mesh, topo, lambda x: allreduce_lane(x, topo), xs, dt)
+    _check(out, _ref.oracle_allreduce(xs), dt)
+
+
+def _b_reduce_scatter(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    p = n * N
+    xs = _payload(p, 3 * p, 2, dt, seed)
+    out = _run(mesh, topo, lambda x: reduce_scatter_lane(x, topo), xs, dt)
+    _check(out, _ref.oracle_reduce_scatter(xs), dt)
+
+
+def _b_allgather(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3, 2, dt, seed)
+    out = _run(mesh, topo, lambda x: allgather_lane(x, topo), xs, dt)
+    _check(out, _ref.oracle_allgather(xs), dt)
+
+
+def _b_bcast(mesh, topo, dt, seed, root_lane=0):
+    n, N = topo.sizes(mesh)
+    xs = _replicate_root_node(_payload(n * N, 3 * n, 2, dt, seed),
+                              root_lane, n)
+    out = _run(mesh, topo,
+               lambda x: bcast_lane(x, topo, root_lane=root_lane), xs, dt)
+    _check(out, _ref.oracle_bcast(xs, root=root_lane * n), dt)
+
+
+def _b_bcast_unreplicated(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3 * n, 2, dt, seed)
+    out = _run(mesh, topo,
+               lambda x: bcast_lane(x, topo, root_replicated=False), xs, dt)
+    _check(out, _ref.oracle_bcast(xs, root=0), dt)
+
+
+def _b_reduce(mesh, topo, dt, seed, root_lane=0, root_node=0):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3 * n, 2, dt, seed)
+    out = _run(mesh, topo,
+               lambda x: reduce_lane(x, topo, root_lane=root_lane,
+                                     root_node=root_node), xs, dt)
+    _check(out, _ref.oracle_reduce(xs, root=root_lane * n + root_node), dt)
+
+
+def _b_scan(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3 * n, 2, dt, seed)
+    out = _run(mesh, topo, lambda x: scan_lane(x, topo), xs, dt)
+    _check(out, _ref.oracle_scan(xs), dt)
+
+
+def _b_gather(mesh, topo, dt, seed, root_lane=0, root_node=0):
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, 3, 2, dt, seed)
+    out = _run(mesh, topo,
+               lambda x: gather_lane(x, topo, root_lane=root_lane,
+                                     root_node=root_node), xs, dt)
+    _check(out, _ref.oracle_gather(xs, root=root_lane * n + root_node), dt)
+
+
+def _b_scatter(mesh, topo, dt, seed, root_lane=0):
+    n, N = topo.sizes(mesh)
+    p = n * N
+    xs = _replicate_root_node(_payload(p, 3 * p, 2, dt, seed), root_lane, n)
+    out = _run(mesh, topo,
+               lambda x: scatter_lane(x, topo, root_lane=root_lane), xs, dt)
+    _check(out, _ref.oracle_scatter(xs, root=root_lane * n), dt)
+
+
+def _b_scatter_unreplicated(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    p = n * N
+    xs = _payload(p, 3 * p, 2, dt, seed)
+    out = _run(mesh, topo,
+               lambda x: scatter_lane(x, topo, root_replicated=False),
+               xs, dt)
+    _check(out, _ref.oracle_scatter(xs, root=0), dt)
+
+
+def _b_alltoall(mesh, topo, dt, seed):
+    n, N = topo.sizes(mesh)
+    p = n * N
+    xs = _payload(p, 3 * p, 2, dt, seed)
+    out = _run(mesh, topo, lambda x: alltoall_lane(x, topo), xs, dt)
+    _check(out, _ref.oracle_alltoall(xs), dt)
+
+
+BUILDERS = {
+    "allreduce": _b_allreduce,
+    "reduce_scatter": _b_reduce_scatter,
+    "allgather": _b_allgather,
+    "bcast": _b_bcast,
+    "reduce": _b_reduce,
+    "scan": _b_scan,
+    "gather": _b_gather,
+    "scatter": _b_scatter,
+    "alltoall": _b_alltoall,
+}
+
+# the six collectives the PR-2 conformance mandate names (the other three
+# also run, across the odd topologies)
+NAMED = ("bcast", "reduce", "scan", "gather", "scatter", "alltoall")
+
+
+# ---------------------------------------------------------------------------
+# grid registration
+# ---------------------------------------------------------------------------
+
+CASES = {}
+
+
+def _register(name, fn):
+    assert name not in CASES, name
+    CASES[name] = fn
+
+
+def _add(coll, topo_key, dt, seed, builder=None, suffix=""):
+    builder = builder or BUILDERS[coll]
+
+    def run(builder=builder, topo_key=topo_key, dt=dt, seed=seed):
+        mesh, topo = _make(topo_key)
+        builder(mesh, topo, dt, seed)
+
+    _register(f"{coll}{suffix}__{topo_key}__{dt}", run)
+
+
+_seed = 100
+for _topo_key in TOPOS:
+    for _coll in BUILDERS:
+        _seed += 1
+        _add(_coll, _topo_key, "f32", _seed)
+
+for _dt in ("bf16", "int32"):
+    for _coll in NAMED:
+        _seed += 1
+        _add(_coll, "t3", _dt, _seed)
+
+# non-default roots (masked-root SPMD paths beyond lane 0)
+_add("bcast", "t2", "f32", 201, suffix="_rootlane1",
+     builder=lambda m, t, dt, s: _b_bcast(m, t, dt, s, root_lane=1))
+_add("reduce", "t2", "f32", 202, suffix="_root11",
+     builder=lambda m, t, dt, s: _b_reduce(m, t, dt, s, root_lane=1,
+                                           root_node=1))
+_add("gather", "t3", "f32", 203, suffix="_root12",
+     builder=lambda m, t, dt, s: _b_gather(m, t, dt, s, root_lane=1,
+                                           root_node=2))
+_add("scatter", "t2", "f32", 204, suffix="_rootlane2",
+     builder=lambda m, t, dt, s: _b_scatter(m, t, dt, s, root_lane=2))
+
+# unreplicated-root SPMD emulation (the all-to-all Scatterv path)
+_add("bcast", "t2", "f32", 211, suffix="_unreplicated",
+     builder=lambda m, t, dt, s: _b_bcast_unreplicated(m, t, dt, s))
+_add("bcast", "het", "f32", 212, suffix="_unreplicated",
+     builder=lambda m, t, dt, s: _b_bcast_unreplicated(m, t, dt, s))
+_add("scatter", "t2", "f32", 213, suffix="_unreplicated",
+     builder=lambda m, t, dt, s: _b_scatter_unreplicated(m, t, dt, s))
+
+
+# divisibility preconditions: a leading dim that violates the mock-up's
+# contract must raise ValueError at trace time, not silently misshard
+def _expect_value_error(topo_key, fn, rows):
+    mesh, topo = _make(topo_key)
+    n, N = topo.sizes(mesh)
+    xs = _payload(n * N, rows, 2, "f32", 99)
+    try:
+        _run(mesh, topo, lambda x: fn(x, topo), xs, "f32")
+    except ValueError:
+        return
+    raise AssertionError(f"{fn.__name__} accepted indivisible rows={rows}")
+
+
+_register("allreduce_indivisible_raises__t2",
+          lambda: _expect_value_error("t2", allreduce_lane, 3))     # n=2∤3
+_register("alltoall_indivisible_raises__t2",
+          lambda: _expect_value_error("t2", alltoall_lane, 12))     # p=8∤12
+_register("scatter_indivisible_raises__t2",
+          lambda: _expect_value_error("t2", scatter_lane, 12))
+_register("reduce_scatter_indivisible_raises__t2",
+          lambda: _expect_value_error("t2", reduce_scatter_lane, 12))
+_register("bcast_indivisible_raises__t3",
+          lambda: _expect_value_error("t3", bcast_lane, 3))         # n=4∤3
+_register("scan_indivisible_raises__t3",
+          lambda: _expect_value_error("t3", scan_lane, 5))
+
+
+def main(argv):
+    names = argv or sorted(CASES)
+    fails = 0
+    for name in names:
+        try:
+            CASES[name]()
+            print(f"PASS {name}")
+        except Exception as e:  # noqa: BLE001
+            fails += 1
+            msg = str(e).splitlines()[0][:200] if str(e) else type(e).__name__
+            print(f"FAIL {name}: {msg}")
+    return fails
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

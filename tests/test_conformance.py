@@ -1,0 +1,233 @@
+"""Hardened conformance suite for the lane collectives.
+
+Two layers:
+
+1. The multi-device conformance grid (``repro.testing.conformance_cases``
+   — every lane collective × odd topologies × bf16/int32 × odd payloads
+   × root variants × divisibility errors) executed once in an 8-device
+   subprocess, one pytest case per grid cell.
+
+2. Property-based oracle-algebra checks (pure numpy, this process):
+   the single-process oracles must satisfy the MPI-semantics identities
+   the mock-ups are tested against, so a bug in an oracle cannot silently
+   validate a matching bug in a mock-up.  Hypothesis-driven when
+   hypothesis is installed; otherwise a deterministic seeded sweep draws
+   the same strategies (the suite must not lose coverage on the minimal
+   container — see requirements-dev.txt).
+"""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import mockup_cost
+from repro.testing import conformance_cases
+from repro.core import ref as _ref
+
+# ---------------------------------------------------------------------------
+# hypothesis, with a deterministic fallback sweep
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover - env dep
+    HAVE_HYPOTHESIS = False
+
+    class _Ints:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Sampled:
+        def __init__(self, xs):
+            self.xs = list(xs)
+
+        def draw(self, rng):
+            return self.xs[int(rng.integers(len(self.xs)))]
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Ints(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Sampled(xs)
+
+    def settings(**_kw):
+        def deco(f):
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            # NOT functools.wraps: pytest would read the wrapped signature
+            # and treat the strategy parameters as fixtures
+            def run():
+                rng = np.random.default_rng(0)
+                for _ in range(25):
+                    f(**{k: s.draw(rng) for k, s in strategies.items()})
+            run.__name__ = f.__name__
+            run.__doc__ = f.__doc__
+            return run
+        return deco
+
+
+# ---------------------------------------------------------------------------
+# layer 1: the multi-device grid (subprocess, one pytest case per cell)
+# ---------------------------------------------------------------------------
+
+def _run_all():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.run_conformance_cases"],
+        capture_output=True, text=True, timeout=1200)
+    results = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith(("PASS ", "FAIL ")):
+            status, rest = line.split(" ", 1)
+            name = rest.split(":")[0].strip()
+            results[name] = (status, line)
+    # keep the crash context: an import-time failure produces zero result
+    # lines and everything a developer needs is on stderr
+    diag = (f"runner exit={proc.returncode}; stderr tail:\n"
+            + "\n".join(proc.stderr.splitlines()[-15:]))
+    return results, diag
+
+
+_RESULTS = None
+
+
+def _results():
+    global _RESULTS
+    if _RESULTS is None:
+        _RESULTS = _run_all()
+    return _RESULTS
+
+
+@pytest.mark.parametrize("case", sorted(conformance_cases.CASES))
+def test_conformance_case(case):
+    res, diag = _results()
+    assert case in res, \
+        f"case {case} produced no result (runner crash?)\n{diag}"
+    status, line = res[case]
+    assert status == "PASS", line
+
+
+def test_grid_covers_every_lane_collective():
+    """The grid itself is conformant: every collective named by the PR-2
+    mandate appears across every topology, and the dtype axis is present."""
+    names = sorted(conformance_cases.CASES)
+    for coll in conformance_cases.NAMED:
+        for topo in conformance_cases.TOPOS:
+            assert any(n.startswith(f"{coll}__{topo}__") for n in names), \
+                (coll, topo)
+        for dt in ("bf16", "int32"):
+            assert any(n == f"{coll}__t3__{dt}" for n in names), (coll, dt)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: oracle algebra (the identities the mock-ups are judged against)
+# ---------------------------------------------------------------------------
+
+def _xs(p, m, seed, feat=2):
+    return np.random.default_rng(seed).normal(
+        size=(p, m, feat)).astype(np.float32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(1, 12), m=st.integers(1, 5),
+       seed=st.integers(0, 1000))
+def test_oracle_ag_of_rs_is_allreduce(p, m, seed):
+    xs = _xs(p, p * m, seed)
+    rs = _ref.oracle_reduce_scatter(xs)
+    np.testing.assert_allclose(_ref.oracle_allgather(rs),
+                               _ref.oracle_allreduce(xs), rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(1, 12), m=st.integers(1, 5),
+       root=st.integers(0, 11), seed=st.integers(0, 1000))
+def test_oracle_scatter_inverts_gather(p, m, root, seed):
+    root = root % p
+    xs = _xs(p, m, seed)
+    g = _ref.oracle_gather(xs, root=root)
+    np.testing.assert_allclose(_ref.oracle_scatter(g, root=root), xs)
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(1, 12), m=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+def test_oracle_alltoall_is_involution(p, m, seed):
+    xs = _xs(p, p * m, seed)
+    np.testing.assert_allclose(_ref.oracle_alltoall(_ref.oracle_alltoall(xs)),
+                               xs)
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(1, 12), m=st.integers(1, 5),
+       seed=st.integers(0, 1000))
+def test_oracle_scan_telescopes(p, m, seed):
+    """Last rank of the inclusive scan = the allreduce total; first
+    differences recover the inputs (MPI_Scan semantics)."""
+    xs = _xs(p, m, seed)
+    sc = _ref.oracle_scan(xs)
+    np.testing.assert_allclose(sc[-1], _ref.oracle_allreduce(xs)[0],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.diff(sc, axis=0), xs[1:], rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(p=st.integers(1, 12), m=st.integers(1, 5),
+       root=st.integers(0, 11), seed=st.integers(0, 1000))
+def test_oracle_reduce_is_rooted_allreduce(p, m, root, seed):
+    root = root % p
+    xs = _xs(p, m, seed)
+    red = _ref.oracle_reduce(xs, root=root)
+    ar = _ref.oracle_allreduce(xs)
+    np.testing.assert_allclose(red[root], ar[root], rtol=1e-5)
+    mask = np.ones(p, bool)
+    mask[root] = False
+    assert not red[mask].any()
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 32), N=st.integers(1, 32),
+       c=st.integers(1, 10_000))
+def test_fulllane_volumes_for_named_collectives(n, N, c):
+    """§3 conservation: the six named mock-ups keep the per-node
+    inter-node volume at (or under) the full-lane ideal."""
+    b = mockup_cost("bcast", n, N, c)
+    assert b.vol_internode_per_node == c
+    for coll in ("gather", "scatter"):
+        g = mockup_cost(coll, n, N, c)
+        assert g.vol_node + g.vol_lane == (n * N - 1) * c
+    rs = mockup_cost("reduce_scatter", n, N, c)
+    assert rs.vol_internode_per_node <= c
+    a2a = mockup_cost("alltoall", n, N, c)
+    assert a2a.vol_lane == (N - 1) * n * c
+
+
+def test_fallback_shim_is_deterministic():
+    """When hypothesis is absent the sweep must be reproducible (the CI
+    leg pins --hypothesis-seed=0 for the real thing; the shim's rng is
+    seeded the same way every run)."""
+    if HAVE_HYPOTHESIS:
+        pytest.skip("hypothesis installed: determinism owned by "
+                    "--hypothesis-seed")
+    draws = []
+
+    @given(a=st.integers(0, 100), b=st.sampled_from(["x", "y"]))
+    def probe(a, b):
+        draws.append((a, b))
+
+    probe()
+    first = list(draws)
+    draws.clear()
+    probe()
+    assert draws == first and len(first) == 25

@@ -1,15 +1,18 @@
 """Single-device tests for the bucketed gradient-sync machinery:
-cost-model bucket sizing, the bucket schedule's partition/skew algebra,
-and the HLO structural-concurrency checker (on handcrafted HLO — the
-compiled-program version runs in the multi-device subprocess cases)."""
+cost-model bucket/prefetch sizing, the bucket schedule's partition/skew
+algebra, the int8 payload/scale fuse, and the HLO structural-concurrency
+checkers (on handcrafted HLO — the compiled-program versions run in the
+multi-device subprocess cases)."""
 import numpy as np
 import pytest
 
 from repro.core.costmodel import (bucket_pipeline_time, optimal_num_buckets,
-                                  HW)
-from repro.core.pipeline import allreduce_pipeline_steps, ALLREDUCE_STAGES
+                                  optimal_prefetch_blocks, HW)
+from repro.core.pipeline import (allreduce_pipeline_steps, ALLREDUCE_STAGES,
+                                 allgather_pipeline_steps, ALLGATHER_STAGES)
 from repro.optim.gradsync import resolve_num_buckets
-from repro.launch.hlo_stats import collective_concurrency
+from repro.launch.hlo_stats import (collective_concurrency,
+                                    collective_compute_concurrency)
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +58,50 @@ def test_pipeline_step_count():
     assert ALLREDUCE_STAGES == 3
     assert allreduce_pipeline_steps(1) == 3
     assert allreduce_pipeline_steps(8) == 10
+
+
+def test_allgather_pipeline_step_count():
+    assert ALLGATHER_STAGES == 2
+    assert allgather_pipeline_steps(1) == 2
+    assert allgather_pipeline_steps(8) == 9
+
+
+def test_optimal_prefetch_blocks():
+    # tiny layer stripes don't split (latency would eat the window)
+    assert optimal_prefetch_blocks(256) == 1
+    # huge stripes clamp at the prefetch cap, below the gradient cap
+    assert optimal_prefetch_blocks(10e9) == 16
+    ks = [optimal_prefetch_blocks(c) for c in (1e3, 1e6, 1e9)]
+    assert ks == sorted(ks)
+
+
+def test_zero3_rejects_single_batch_axis():
+    """lane_zero3 shards over the (lane × node) product: a single-batch-
+    axis mesh has no distinct levels and must be rejected up front (the
+    other strategies degrade to native instead)."""
+    import jax
+    from repro.configs import resolve
+    from repro.configs.base import RunConfig, SHAPES
+    from repro.launch.steps import build_train_step_lane
+    from repro.optim import AdamWConfig
+    cfg = resolve("llama3.2-3b", smoke=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                    gradsync="lane_zero3")
+    with pytest.raises(ValueError, match="distinct lane and node"):
+        build_train_step_lane(cfg, run, AdamWConfig(), mesh, None)
+
+
+def test_resolve_prefetch_blocks():
+    from repro.launch.steps import resolve_prefetch_blocks
+    # override wins; -1 (blocking negative control) degenerates to 1
+    assert resolve_prefetch_blocks(10_000, 2, 2, 5) == 5
+    assert resolve_prefetch_blocks(10_000, 2, 2, -1) == 1
+    # deterministic auto, capped at >= 1 row per chip per block
+    assert resolve_prefetch_blocks(10_000, 2, 2, 0) == \
+        resolve_prefetch_blocks(10_000, 2, 2, 0)
+    assert resolve_prefetch_blocks(8, 4, 2, 100) == 1
+    assert resolve_prefetch_blocks(0, 1, 1, 0) == 1
 
 
 # ---------------------------------------------------------------------------
@@ -157,3 +204,268 @@ def test_concurrency_checker_negative():
 
 def test_hw_alpha_defaults_present():
     assert HW.alpha_dcn > HW.alpha_ici > 0
+
+
+# ---------------------------------------------------------------------------
+# HLO checker edge cases (satellite: untested false-negative paths)
+# ---------------------------------------------------------------------------
+
+def test_concurrency_checker_empty_hlo():
+    for text in ("", "HloModule m\n"):
+        res = collective_concurrency(text, pod_size=4)
+        assert res == {"concurrent": False, "pairs": [],
+                       "per_computation": {}}
+        res = collective_compute_concurrency(text, pod_size=4)
+        assert res == {"concurrent": False, "pairs": [],
+                       "per_computation": {}}
+
+
+_HLO_SINGLE_COLLECTIVE = """\
+HloModule m
+
+ENTRY %main (p0: f32[8]) -> f32[4] {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %rs = f32[4]{0} reduce-scatter(f32[8]{0} %p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_concurrency_checker_single_collective():
+    # one collective can never overlap with itself
+    res = collective_concurrency(_HLO_SINGLE_COLLECTIVE, pod_size=4)
+    assert not res["concurrent"]
+    assert res["per_computation"]["main"] == {"dcn": 0, "ici": 1, "pairs": 0}
+
+
+_HLO_TUPLE_CHAIN = """\
+HloModule m
+
+ENTRY %main (p0: f32[8]) -> f32[4] {
+  %p0 = f32[8]{0} parameter(0)
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %p0), source_target_pairs={{0,4},{4,0}}
+  %t = (f32[8], f32[8]) tuple(f32[8]{0} %cp, f32[8]{0} %p0)
+  %gte = f32[8]{0} get-tuple-element((f32[8], f32[8]) %t), index=0
+  ROOT %rs = f32[4]{0} reduce-scatter(f32[8]{0} %gte), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_concurrency_checker_tuple_gte_dependence():
+    """A DCN permute feeding an ICI reduce-scatter THROUGH a
+    tuple/get-tuple-element chain is a real dependence — the checker must
+    not report the pair concurrent just because the edge is plumbing."""
+    res = collective_concurrency(_HLO_TUPLE_CHAIN, pod_size=4)
+    assert not res["concurrent"]
+    assert res["per_computation"]["main"] == {"dcn": 1, "ici": 1, "pairs": 0}
+
+
+# ---------------------------------------------------------------------------
+# prefetch-AG vs compute checker (tentpole acceptance, handcrafted HLO;
+# the compiled lane_zero3 version runs in collective_cases)
+# ---------------------------------------------------------------------------
+
+_HLO_PREFETCH = """\
+HloModule m
+
+ENTRY %main (shard: f32[2], w: f32[4], h: f32[2,2]) -> (f32[4], f32[2,2]) {
+  %shard = f32[2]{0} parameter(0)
+  %w = f32[4]{0} parameter(1)
+  %h = f32[2,2]{1,0} parameter(2)
+  %ag = f32[4]{0} all-gather(f32[2]{0} %shard), replica_groups={{0,1}}, dimensions={0}
+  %wr = f32[2,2]{1,0} reshape(f32[4]{0} %w)
+  %dot = f32[2,2]{1,0} dot(f32[2,2]{1,0} %h, f32[2,2]{1,0} %wr), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (f32[4], f32[2,2]) tuple(f32[4]{0} %ag, f32[2,2]{1,0} %dot)
+}
+"""
+
+_HLO_BLOCKING = """\
+HloModule m
+
+ENTRY %main (shard: f32[2], h: f32[2,2]) -> f32[2,2] {
+  %shard = f32[2]{0} parameter(0)
+  %h = f32[2,2]{1,0} parameter(1)
+  %ag = f32[4]{0} all-gather(f32[2]{0} %shard), replica_groups={{0,1}}, dimensions={0}
+  %wr = f32[2,2]{1,0} reshape(f32[4]{0} %ag)
+  ROOT %dot = f32[2,2]{1,0} dot(f32[2,2]{1,0} %h, f32[2,2]{1,0} %wr), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_compute_concurrency_prefetch_positive():
+    """Layer i+1's gather reads the shard; layer i's dot reads the
+    already-gathered carry — no ancestor relation, overlap possible."""
+    res = collective_compute_concurrency(_HLO_PREFETCH, pod_size=4)
+    assert res["concurrent"]
+    (_, ag, kind, dot, op) = res["pairs"][0]
+    assert (kind, op) == ("all-gather", "dot")
+
+
+def test_compute_concurrency_blocking_negative():
+    """BLOCKING all-gather: the dot consumes the gather's output, so the
+    checker must find no independent pair (the fsdp_prefetch=-1 control)."""
+    res = collective_compute_concurrency(_HLO_BLOCKING, pod_size=4)
+    assert not res["concurrent"]
+    assert res["per_computation"]["main"] == \
+        {"colls": 1, "compute": 1, "pairs": 0}
+
+
+_HLO_WHILE_CARRIER = """\
+HloModule m
+
+%gcond (cp: (f32[2], f32[4])) -> pred[] {
+  %cp = (f32[2], f32[4]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+%gbody (gp: (f32[2], f32[4])) -> (f32[2], f32[4]) {
+  %gp = (f32[2], f32[4]) parameter(0)
+  %gs = f32[2]{0} get-tuple-element((f32[2], f32[4]) %gp), index=0
+  %gag = f32[4]{0} all-gather(f32[2]{0} %gs), replica_groups={{0,1}}, dimensions={0}
+  ROOT %gt = (f32[2], f32[4]) tuple(f32[2]{0} %gs, f32[4]{0} %gag)
+}
+
+ENTRY %main (shard: f32[2], z: f32[4], w: f32[2,2], h: f32[2,2]) -> ((f32[2], f32[4]), f32[2,2]) {
+  %shard = f32[2]{0} parameter(0)
+  %z = f32[4]{0} parameter(1)
+  %w = f32[2,2]{1,0} parameter(2)
+  %h = f32[2,2]{1,0} parameter(3)
+  %init = (f32[2], f32[4]) tuple(f32[2]{0} %shard, f32[4]{0} %z)
+  %wl = (f32[2], f32[4]) while((f32[2], f32[4]) %init), condition=%gcond, body=%gbody
+  %dot = f32[2,2]{1,0} dot(f32[2,2]{1,0} %h, f32[2,2]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = ((f32[2], f32[4]), f32[2,2]) tuple((f32[2], f32[4]) %wl, f32[2,2]{1,0} %dot)
+}
+"""
+
+
+def test_compute_concurrency_while_carries_collective():
+    """The pipelined per-layer gather lowers to an inner while loop: the
+    while INSTRUCTION must count as carrying its body's all-gather, so it
+    can pair with a dot beside it (this is exactly how the lane_zero3
+    layer scan body looks after XLA)."""
+    res = collective_compute_concurrency(_HLO_WHILE_CARRIER, pod_size=4)
+    assert res["concurrent"]
+    pair_comps = {p[0] for p in res["pairs"]}
+    assert "main" in pair_comps
+    main_pairs = [p for p in res["pairs"] if p[0] == "main"]
+    assert any(p[1] == "wl" and p[3] == "dot" for p in main_pairs)
+
+
+_HLO_BRANCH_CARRIER = """\
+HloModule m
+
+%br0 (bp: f32[2]) -> f32[4] {
+  %bp = f32[2]{0} parameter(0)
+  ROOT %bag = f32[4]{0} all-gather(f32[2]{0} %bp), replica_groups={{0,1}}, dimensions={0}
+}
+
+%br1 (cp: f32[2]) -> f32[4] {
+  %cp = f32[2]{0} parameter(0)
+  ROOT %pad = f32[4]{0} pad(f32[2]{0} %cp), padding=0_2
+}
+
+ENTRY %main (idx: s32[], shard: f32[2], h: f32[2,2], w: f32[2,2]) -> (f32[4], f32[2,2]) {
+  %idx = s32[] parameter(0)
+  %shard = f32[2]{0} parameter(1)
+  %h = f32[2,2]{1,0} parameter(2)
+  %w = f32[2,2]{1,0} parameter(3)
+  %sel = f32[4]{0} conditional(s32[] %idx, f32[2]{0} %shard, f32[2]{0} %shard), branch_computations={%br0, %br1}
+  %dot = f32[2,2]{1,0} dot(f32[2,2]{1,0} %h, f32[2,2]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (f32[4], f32[2,2]) tuple(f32[4]{0} %sel, f32[2,2]{1,0} %dot)
+}
+"""
+
+
+def test_compute_concurrency_conditional_carries_collective():
+    """A collective living inside a conditional BRANCH computation must
+    count against the conditional instruction (branch_computations= is a
+    different attribute syntax than body=/calls=)."""
+    res = collective_compute_concurrency(_HLO_BRANCH_CARRIER, pod_size=4)
+    assert res["concurrent"]
+    assert any(p[0] == "main" and p[1] == "sel" and p[3] == "dot"
+               for p in res["pairs"])
+
+
+def test_compute_concurrency_kind_filter():
+    # nothing matches when the prefetch kind is excluded
+    res = collective_compute_concurrency(
+        _HLO_PREFETCH, pod_size=4, coll_kinds=("reduce-scatter",))
+    assert not res["concurrent"] and res["per_computation"] == {}
+
+
+# ---------------------------------------------------------------------------
+# int8 payload/scale fuse (satellite: one DCN collective per bucket)
+# ---------------------------------------------------------------------------
+
+def test_int8_pack_unpack_roundtrip_exact():
+    import jax.numpy as jnp
+    from repro.optim.gradsync import (compress_int8, pack_int8_payload,
+                                      unpack_int8_payload)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2500,)) * 3.0,
+                    jnp.float32)
+    q, s, n = compress_int8(x)
+    buf = pack_int8_payload(q, s)
+    assert buf.dtype == jnp.int8
+    assert buf.shape[0] == q.size + 4 * s.size      # scales ride as 4 bytes
+    q2, s2 = unpack_int8_payload(buf, q.shape[0])
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+    # bitcast, not convert: the fp32 scales survive BIT-EXACTLY
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+
+
+def test_int8_fused_error_bound_unchanged():
+    """The fuse moves bytes, not values: summing dequantized payloads
+    through pack→unpack equals the unfused two-gather result exactly,
+    and stays within the half-step quantization bound."""
+    import jax.numpy as jnp
+    from repro.optim.gradsync import (compress_int8, decompress_int8,
+                                      pack_int8_payload, unpack_int8_payload)
+    rng = np.random.default_rng(1)
+    ranks = [jnp.asarray(rng.normal(size=(1500,)), jnp.float32)
+             for _ in range(4)]
+    fused = np.zeros(1500, np.float32)
+    unfused = np.zeros(1500, np.float32)
+    for x in ranks:
+        q, s, n = compress_int8(x)
+        qf, sf = unpack_int8_payload(pack_int8_payload(q, s), q.shape[0])
+        fused += np.asarray(decompress_int8(qf, sf, n))
+        unfused += np.asarray(decompress_int8(q, s, n))
+    np.testing.assert_array_equal(fused, unfused)
+    total = np.sum([np.asarray(x) for x in ranks], axis=0)
+    # per-rank half-step bound, accumulated over ranks
+    bound = sum(float(np.abs(np.asarray(x)).max()) / 127.0 * 0.5 + 1e-6
+                for x in ranks)
+    assert np.abs(fused - total).max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# BENCH_gradsync.json schema check (satellite: CI guards the trajectory)
+# ---------------------------------------------------------------------------
+
+def test_bench_schema_flags_missing_strategy():
+    import sys, pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.check_bench_schema import check, REQUIRED_STRATEGIES
+    row = {"strategy": "native", "num_buckets": 0, "avg_us": 1.0,
+           "min_us": 1.0, "max_abs_err_vs_native": 0.0,
+           "model_pred_us": 1.0, "hlo_concurrent": False,
+           "hlo_concurrent_pairs": 0}
+    doc = {"mesh": "2x4", "payload_elems": 1, "payload_bytes": 4,
+           "auto_num_buckets": 1, "cost_model": {}, "smoke": True,
+           "reps": 1, "hlo_per_computation": {}, "structure_ok": True,
+           "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES]}
+    assert check(doc) == []
+    # dropping any required strategy fails the build
+    for s in REQUIRED_STRATEGIES:
+        bad = dict(doc, results=[r for r in doc["results"]
+                                 if r["strategy"] != s])
+        errs = check(bad)
+        assert errs and "stopped emitting" in errs[0], (s, errs)
+    # a regressed structural check fails too
+    assert check(dict(doc, structure_ok=False))
+    # a full (non-smoke) run must also carry lane_int8
+    assert check(dict(doc, smoke=False))
+    # and a row losing a field is caught
+    broken = dict(doc, results=doc["results"][:1]
+                  + [dict(doc["results"][1])])
+    del broken["results"][1]["min_us"]
+    assert any("missing" in e for e in check(broken))
