@@ -9,16 +9,20 @@
 #                   where hypothesis isn't installed the suites already
 #                   ran in tier1 through their built-in seeded fallback
 #                   (see tests/test_conformance.py), so the leg is a no-op
+#   api-surface   — the repro.comm public-surface lock (names, signatures,
+#                   registered strategy tables) re-run on its own so a
+#                   surface break is named even when tier1 dies earlier
 #   bench-smoke   — lowers the gradient-sync strategies and structurally
 #                   verifies the §5 lane/node overlap on the optimized HLO
 #                   (writes BENCH_gradsync.json)
 #   bench-schema  — fails the build if the benchmark silently stopped
-#                   emitting a strategy or a row field
+#                   emitting a strategy or a row field; the required
+#                   strategy list derives from the repro.comm registry
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci tier1 props-det bench-smoke bench bench-schema test
+.PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -38,6 +42,9 @@ props-det:
 		     "fallback in tier1"; \
 	fi
 
+api-surface:
+	$(PY) -m pytest -q tests/test_api_surface.py
+
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 
@@ -47,4 +54,4 @@ bench:
 bench-schema:
 	$(PY) -m benchmarks.check_bench_schema
 
-ci: tier1 props-det bench-smoke bench-schema
+ci: tier1 props-det api-surface bench-smoke bench-schema

@@ -3,7 +3,10 @@
 The benchmark is the perf trajectory future PRs regress against; a
 refactor that silently drops a strategy from the grid (or a field from
 the rows) would make the trajectory lie by omission.  This check fails
-the build instead.
+the build instead.  The required-strategy list is DERIVED from the
+repro.comm registry — every registered grad_sync strategy (plus the
+``auto`` dispatch row) must appear, so an impl that quietly loses its
+registration, or a registration the bench never exercises, both fail CI.
 
   PYTHONPATH=src python -m benchmarks.check_bench_schema [--file F]
 
@@ -15,17 +18,21 @@ import pathlib
 import sys
 
 TOP_KEYS = {"mesh", "payload_elems", "payload_bytes", "auto_num_buckets",
-            "cost_model", "smoke", "reps", "results",
-            "hlo_per_computation", "structure_ok"}
+            "strategies_registered", "cost_model", "smoke", "reps",
+            "results", "hlo_per_computation", "structure_ok"}
 
-ROW_KEYS = {"strategy", "num_buckets", "avg_us", "min_us",
+ROW_KEYS = {"strategy", "selected", "num_buckets", "avg_us", "min_us",
             "max_abs_err_vs_native", "model_pred_us", "hlo_concurrent",
             "hlo_concurrent_pairs"}
 
-# every emitting run must cover these; a full (non-smoke) run additionally
-# sweeps the compressed strategy
-REQUIRED_STRATEGIES = {"native", "lane", "lane_pipelined", "lane_zero3"}
-FULL_ONLY_STRATEGIES = {"lane_int8"}
+
+def required_strategies() -> set:
+    """The registry IS the requirement (never a hard-coded tuple)."""
+    from repro.comm import strategies_for
+    return set(strategies_for("grad_sync")) | {"auto"}
+
+
+REQUIRED_STRATEGIES = required_strategies()
 
 
 def check(doc: dict) -> list[str]:
@@ -42,12 +49,16 @@ def check(doc: dict) -> list[str]:
         if mk:
             errs.append(f"results[{i}] missing {sorted(mk)}")
     have = {r.get("strategy") for r in rows}
-    required = REQUIRED_STRATEGIES | (
-        set() if doc.get("smoke") else FULL_ONLY_STRATEGIES)
-    gone = required - have
+    gone = REQUIRED_STRATEGIES - have
     if gone:
         errs.append(f"benchmark stopped emitting strategies: {sorted(gone)}"
-                    f" (have {sorted(have)})")
+                    f" (registry + auto require "
+                    f"{sorted(REQUIRED_STRATEGIES)}, have {sorted(have)})")
+    stale = set(doc.get("strategies_registered", [])) - \
+        (REQUIRED_STRATEGIES - {"auto"})
+    if stale:
+        errs.append(f"bench ran against a registry that no longer matches: "
+                    f"{sorted(stale)} (re-run benchmarks.run --smoke)")
     if not doc.get("structure_ok", False):
         errs.append("structure_ok is false: the §5 overlap (or a negative "
                     "control) regressed — see the benchmark output")

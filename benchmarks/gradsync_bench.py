@@ -1,15 +1,18 @@
 """Gradient-sync benchmark: the training hot path, per strategy.
 
-Times grad_sync under shard_map on the 8-device CPU mesh (2 pods × 4
-chips) for native vs lane vs lane_pipelined (plus lane_int8 and the
-ZeRO-3 lane_zero3 reduce-scatter, timed as its RS+AG roundtrip),
+Times LaneComm.grad_sync under shard_map on the 8-device CPU mesh
+(2 pods × 4 chips) for EVERY strategy the repro.comm registry has
+registered (the ZeRO strategies timed as their RS+AG roundtrip), plus
+one ``auto`` row recording what the cost-model dispatcher picked,
 sweeping the bucket count, and writes ``BENCH_gradsync.json`` — the perf
 trajectory future PRs regress against (schema pinned by
-``benchmarks/check_bench_schema.py``).  Also verifies STRUCTURALLY on
-the optimized HLO that each bucketed/pipelined program contains a
-cross-pod (DCN) collective with no data dependence on an intra-pod (ICI)
-collective — the §5 overlap precondition — and that the monolithic K=1
-chain does NOT (negative control).
+``benchmarks/check_bench_schema.py``, whose required-strategy list is
+derived from the same registry: a silently-unregistered impl fails the
+build).  Also verifies STRUCTURALLY on the optimized HLO that each
+bucketed/pipelined program contains a cross-pod (DCN) collective with no
+data dependence on an intra-pod (ICI) collective — the §5 overlap
+precondition — and that the monolithic K=1 chain does NOT (negative
+control).
 
 CPU caveat (same as paper_tables): host devices share memory, so wall
 times validate relative behavior and the schedule's structure, not
@@ -33,9 +36,9 @@ import numpy as np
 import jax
 from jax.sharding import PartitionSpec as P, NamedSharding
 
+from repro.comm import CommConfig, LaneComm, strategies_for
 from repro.core import LaneTopology, time_fn, bucket_pipeline_time, HW
 from repro.core.costmodel import optimal_num_buckets
-from repro.optim import grad_sync
 from repro.optim.gradsync import resolve_num_buckets
 from repro.launch import hlo_stats
 
@@ -43,24 +46,32 @@ POD = 4                               # chips per pod on the 2×4 bench mesh
 
 
 def build(mesh, topo, strategy, num_buckets):
+    """(jitted fn, comm) — the comm records any auto-dispatch selection."""
+    comm = LaneComm(topo, CommConfig(buckets=num_buckets), mesh=mesh)
+
     def f(g):
-        out = grad_sync(g, topo, strategy, num_buckets=num_buckets)
-        if strategy == "lane_zero3":
-            # roundtrip for a comparable full-vector result: the RS'd 1/p
+        out = comm.grad_sync(g, strategy=strategy, num_buckets=num_buckets)
+        if strategy in ("lane_zero1", "lane_zero3"):
+            # roundtrip for a comparable full-vector result: the RS'd
             # stripe is re-gathered (training instead defers this gather
-            # into the next forward's per-layer prefetch) — the timed row
-            # is RS(node)→RS(lane)→AG(lane)→AG(node).  K is re-resolved
-            # with grad_sync's own cap so the unshard always agrees with
-            # the shard layout, even if the payload shrinks below K·p.
-            from repro.optim.gradsync import _unflatten_bucket, zero3_unshard
+            # past the optimizer / into the next forward's per-layer
+            # prefetch) — the zero3 row times RS(node)→RS(lane)→AG(lane)
+            # →AG(node).  K is re-resolved with grad_sync's own cap so
+            # the unshard always agrees with the shard layout, even if
+            # the payload shrinks below K·shard_ways.
+            from repro.optim.gradsync import (_unflatten_bucket,
+                                              zero1_unshard, zero3_unshard)
             shard, spec = out
-            k_eff = resolve_num_buckets(g.shape[0], topo.n() * topo.N(),
-                                        num_buckets)
-            out = _unflatten_bucket(zero3_unshard(shard, topo, k_eff), spec)
+            ways = topo.n() * (topo.N() if strategy == "lane_zero3" else 1)
+            k_eff = resolve_num_buckets(g.shape[0], ways, num_buckets)
+            unshard = (zero3_unshard if strategy == "lane_zero3"
+                       else zero1_unshard)
+            out = _unflatten_bucket(unshard(shard, topo, k_eff), spec)
         return out
-    return jax.jit(jax.shard_map(
+    fn = jax.jit(jax.shard_map(
         f, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
         check_vma=False))
+    return fn, comm
 
 
 def main(argv=None) -> int:
@@ -80,30 +91,47 @@ def main(argv=None) -> int:
     x = rng.normal(size=(elems,)).astype(np.float32)
     arr = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
 
-    auto_k = resolve_num_buckets(elems, topo_n, 0)
+    # grad_sync runs inside shard_map, so its cost-model auto-K resolves
+    # from the PER-CHIP payload (elems / 8 devices), not the global one —
+    # the structure check below must use the same resolution
+    auto_k = resolve_num_buckets(elems // 8, topo_n, 0)
+    # the registry IS the grid: every registered grad_sync strategy gets
+    # at least one row (schema-checked), plus the auto-dispatch row
+    registered = strategies_for("grad_sync")
     if args.smoke:
         # below the cost-model crossover auto-K is 1; pin K=4 so CI still
         # exercises (and structurally verifies) the multi-bucket schedule
         grid = [("native", 0), ("lane", 1), ("lane", 4),
-                ("lane_pipelined", 4), ("lane_zero3", 4)]
+                ("lane_pipelined", 4), ("lane_int8", 4),
+                ("lane_zero1", 4), ("lane_zero3", 4), ("auto", 0)]
     else:
         grid = [("native", 0), ("lane", 1), ("lane", auto_k),
                 ("lane_pipelined", auto_k), ("lane", 4), ("lane", 16),
                 ("lane_pipelined", 4), ("lane_pipelined", 16),
                 ("lane_int8", auto_k),
+                ("lane_zero1", 1), ("lane_zero1", 4),
                 ("lane_zero3", 1), ("lane_zero3", 4),
-                ("lane_zero3", max(auto_k, 1))]
+                ("lane_zero3", max(auto_k, 1)), ("auto", 0)]
         # auto_k may coincide with a swept K — drop duplicate cells
         grid = list(dict.fromkeys(grid))
+    missing = set(registered) - {s for s, _ in grid}
+    assert not missing, f"bench grid lost registered strategies: {missing}"
 
     results = []
     hlo_checks = {}
     oracle = None
     for strategy, K in grid:
-        fn = build(mesh, topo, strategy, K)
+        fn, comm = build(mesh, topo, strategy, K)
         lowered = fn.lower(arr)
         hlo = lowered.compile().as_text()
         conc = hlo_stats.collective_concurrency(hlo, pod_size=POD)
+        # what actually ran: the auto row records the dispatcher's pick
+        selected = strategy
+        if strategy == "auto":
+            sel = comm.last_selection
+            selected = sel.strategy
+            print(f"auto-dispatch: {selected} "
+                  f"(ranking {[(s, round(t * 1e6, 1)) for t, s in sel.ranking]})")
         avg, best = time_fn(fn, arr, reps=reps, warmup=warmup)
         out = np.asarray(fn(arr))
         if oracle is None and strategy == "native":
@@ -112,7 +140,7 @@ def main(argv=None) -> int:
             else 0.0
         stripe_bytes = elems * 4 / topo_n           # full-lane DCN stripe
         pred_us = bucket_pipeline_time(stripe_bytes, max(K, 1)) * 1e6
-        row = {"strategy": strategy, "num_buckets": K,
+        row = {"strategy": strategy, "selected": selected, "num_buckets": K,
                "avg_us": round(avg, 2), "min_us": round(best, 2),
                "max_abs_err_vs_native": max_err,
                "model_pred_us": round(pred_us, 2),
@@ -127,22 +155,28 @@ def main(argv=None) -> int:
     # structural acceptance: pipelined/bucketed overlap possible, serial not
     ok = True
     for row in results:
-        if row["strategy"] == "native":
+        eff = row["selected"]
+        if eff == "native":
             continue
-        want = not (row["strategy"] in ("lane", "lane_zero3")
-                    and row["num_buckets"] == 1)
+        # a single-bucket schedule is a monolithic chain for every wave-
+        # scheduled strategy (only the lax.scan pipeline keeps structural
+        # concurrency at K=1 — its stages read distinct scan carries)
+        k_eff = row["num_buckets"] if row["num_buckets"] else auto_k
+        want = not (eff in ("lane", "lane_int8", "lane_zero1", "lane_zero3")
+                    and k_eff == 1)
         if row["hlo_concurrent"] != want:
             print(f"STRUCTURE FAIL: {row['strategy']} K={row['num_buckets']} "
                   f"concurrent={row['hlo_concurrent']}, expected {want}")
             ok = False
         if row["max_abs_err_vs_native"] > \
-                (0.2 if row["strategy"] == "lane_int8" else 1e-3):
+                (0.2 if eff == "lane_int8" else 1e-3):
             print(f"NUMERICS FAIL: {row}")
             ok = False
 
     doc = {
         "mesh": "2x4 (pod,data)", "payload_elems": elems,
         "payload_bytes": elems * 4, "auto_num_buckets": auto_k,
+        "strategies_registered": list(registered),
         "cost_model": {"alpha_dcn_s": HW.alpha_dcn,
                        "dcn_bw_Bps": HW.dcn_bw,
                        "optimal_K_model":

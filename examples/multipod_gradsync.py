@@ -25,17 +25,18 @@ import jax                                                     # noqa: E402
 import jax.numpy as jnp                                        # noqa: E402
 from jax.sharding import PartitionSpec as P, NamedSharding     # noqa: E402
 
+from repro.comm import LaneComm                                # noqa: E402
 from repro.configs import resolve                              # noqa: E402
 from repro.core import LaneTopology                            # noqa: E402
 from repro.models import init_model                            # noqa: E402
 from repro.models.transformer import loss_fn                   # noqa: E402
-from repro.optim import grad_sync                              # noqa: E402
 from repro.launch.hlo_stats import analyze                     # noqa: E402
 
 
 def main():
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    comm = LaneComm(topo, mesh=mesh)
     cfg = resolve("llama3.2-3b", smoke=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
@@ -51,7 +52,7 @@ def main():
         def per_replica(p, t, l):
             loss, g = jax.value_and_grad(
                 lambda pp: loss_fn(pp, cfg, t, l))(p)
-            g = grad_sync(g, topo, strategy)
+            g = comm.grad_sync(g, strategy=strategy)
             if strategy == "lane_zero1":
                 g = g[0]     # sharded flat bucket
             return jax.lax.pmean(loss, ("pod", "data")), g

@@ -1,0 +1,29 @@
+"""Once-per-process deprecation warnings for the legacy collective APIs.
+
+Python's default warning machinery dedupes by (message, module, lineno),
+which varies with the *call site*; the deprecation contract of the
+``repro.comm`` migration is per *entry point* — every legacy entry point
+warns exactly once per process no matter how many call sites touch it
+(tests pin this; see tests/test_comm_api.py).  Hence the explicit latch.
+
+No repro imports here: this module sits below everything (core, optim,
+comm) so any layer may use it without creating an import cycle.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(key: str, message: str) -> None:
+    """Emit ``DeprecationWarning(message)`` the first time ``key`` is seen."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def reset_warned() -> None:
+    """Forget all emitted keys (test isolation only)."""
+    _WARNED.clear()

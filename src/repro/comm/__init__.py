@@ -1,0 +1,32 @@
+"""repro.comm — communicator-object collective API (the paper's §2 made
+first-class).
+
+One :class:`LaneComm` object = one decomposed communication domain
+(:class:`~repro.core.lane.LaneTopology`) + one typed tuning surface
+(:class:`CommConfig`), exposing the full collective surface through a
+decorator-based implementation registry with cost-model auto-dispatch::
+
+    comm = LaneComm(topo, CommConfig.from_run(run))
+    grads = comm.grad_sync(grads)                  # cfg-default strategy
+    out = comm.allreduce(x, strategy="auto")       # cost-model pick,
+    comm.last_selection                            #   recorded here
+
+Registering a new implementation is one decorator (see
+:mod:`repro.comm.impls`); consumers, error messages, benchmarks and the
+CI schema check all derive their strategy lists from the registry, so a
+registration is self-documenting.  The public surface below is locked by
+tests/test_api_surface.py.
+"""
+from .config import CommConfig
+from .lanecomm import LaneComm, Selection
+from .registry import (
+    ImplEntry, get_impl, has_impl, iter_impls, register_impl,
+    registered_collectives, strategies_for,
+)
+from . import impls as _impls  # populate the registry  # noqa: F401
+
+__all__ = [
+    "LaneComm", "CommConfig", "Selection",
+    "ImplEntry", "register_impl", "get_impl", "has_impl", "iter_impls",
+    "strategies_for", "registered_collectives",
+]

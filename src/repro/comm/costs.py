@@ -1,0 +1,110 @@
+"""Cost functions for auto-dispatch — the §3/§5 model per registration.
+
+Every function has the registry's cost signature ``(n, N, payload_bytes,
+cfg) -> seconds`` with n = processes per node (intra-pod chips), N =
+nodes (pods).  Two modelling conventions (DESIGN.md §6):
+
+* **native** — the "native library" baseline is charged the collective's
+  optimal per-process volume at the *slowest level present* (DCN when
+  N > 1, else ICI) with NO lane concurrency: the paper's premise is that
+  native libraries do not exploit multi-lane communication, so the whole
+  payload crosses a single lane.  Rounds: log₂ p at that level's alpha.
+* **lane** — ``klane_time`` over ``mockup_cost``: node phases at ICI
+  alpha/beta, lane phases at DCN alpha/beta with the full-lane 1/n
+  payload split already folded into the §3 volumes.
+* **lane_pipelined** — ``bucket_pipeline_time`` on the per-lane DCN
+  stripe with the bucket count the dispatcher would actually run
+  (cfg.buckets, 0 = the K* crossover): (K+S-1) waves of one DCN alpha
+  plus the per-bucket bandwidth term; the ICI stages ride under it once
+  the pipeline is full — the §5 simultaneity assumption.
+
+All costs are deterministic in their inputs, so the auto choice is
+reproducible and the recorded Selection can be asserted in tests.
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import (
+    HW, _lg, bucket_pipeline_time, klane_time, mockup_cost,
+    optimal_num_buckets,
+)
+from repro.core.pipeline import ALLGATHER_STAGES, ALLREDUCE_STAGES
+
+__all__ = [
+    "native_cost", "lane_cost", "cost_pipelined_allreduce",
+    "cost_pipelined_allgather", "cost_native_scan", "cost_lane_scan",
+]
+
+_ROUND_FACTOR = {  # rounds multiplier: reduce+broadcast shapes pay 2 phases
+    "allreduce": 2, "reduce": 2, "bcast": 2,
+}
+
+
+def _level(N: int) -> tuple[float, float]:
+    """(alpha, beta) of the slowest level present: DCN iff multi-node."""
+    if N > 1:
+        return HW.alpha_dcn, 1.0 / HW.dcn_bw
+    return HW.alpha_ici, 1.0 / HW.ici_bw
+
+
+def native_cost(coll: str):
+    """Single-lane native baseline for one §3 collective."""
+    def cost(n: int, N: int, c_bytes: float, cfg) -> float:
+        p = max(n * N, 1)
+        alpha, beta = _level(N)
+        rounds = _ROUND_FACTOR.get(coll, 1) * _lg(p)
+        return rounds * alpha + mockup_cost(coll, n, N, c_bytes).optimal_vol \
+            * beta
+    return cost
+
+
+def lane_cost(coll: str):
+    """Full-lane mock-up under the k-lane model (paper §5)."""
+    def cost(n: int, N: int, c_bytes: float, cfg) -> float:
+        return klane_time(
+            mockup_cost(coll, n, N, c_bytes), k=n, elem_bytes=1,
+            alpha_node=HW.alpha_ici, beta_node=1.0 / HW.ici_bw,
+            alpha_lane=HW.alpha_dcn, beta_lane=1.0 / HW.dcn_bw)
+    return cost
+
+
+def cost_pipelined_allreduce(n: int, N: int, c_bytes: float, cfg) -> float:
+    """§5 pipelined allreduce: K buckets × 3 stages on the bottleneck
+    stripe (DCN when multi-node, else the ICI ring is the bottleneck)."""
+    alpha, beta = _level(N)
+    stripe = c_bytes / max(n, 1)
+    K = cfg.buckets if cfg.buckets > 0 \
+        else optimal_num_buckets(stripe, alpha=alpha, beta=beta)
+    return bucket_pipeline_time(stripe, max(K, 1), stages=ALLREDUCE_STAGES,
+                                alpha=alpha, beta=beta)
+
+
+def cost_pipelined_allgather(n: int, N: int, c_bytes: float, cfg) -> float:
+    """§5 pipelined allgather (ZeRO-3 prefetch): B blocks × 2 stages.
+
+    ``c_bytes`` is the per-chip 1/p shard — the bytes the DCN hop moves.
+    """
+    alpha, beta = _level(N)
+    B = cfg.prefetch_blocks if cfg.prefetch_blocks > 0 \
+        else optimal_num_buckets(c_bytes, stages=ALLGATHER_STAGES,
+                                 alpha=alpha, beta=beta, max_buckets=16)
+    return bucket_pipeline_time(c_bytes, max(B, 1), stages=ALLGATHER_STAGES,
+                                alpha=alpha, beta=beta)
+
+
+# -- scan has no mockup_cost entry (the paper lists it without a §3
+#    analysis); charge the emulation's actual all-gather volumes ---------
+
+def cost_native_scan(n: int, N: int, c_bytes: float, cfg) -> float:
+    """Direct algorithm: gather the whole communicator, (p-1)·c moved."""
+    p = max(n * N, 1)
+    alpha, beta = _level(N)
+    return _lg(p) * alpha + (p - 1) * c_bytes * beta
+
+
+def cost_lane_scan(n: int, N: int, c_bytes: float, cfg) -> float:
+    """Scan(node) + striped Exscan(lane) + AG(node) emulation volumes."""
+    t_node = 2 * _lg(n) * HW.alpha_ici \
+        + 2 * (n - 1) * c_bytes / HW.ici_bw          # node scan + final AG
+    t_lane = _lg(N) * HW.alpha_dcn \
+        + (N - 1) / max(N, 1) * (c_bytes / max(n, 1)) / HW.dcn_bw
+    return t_node + t_lane

@@ -1,0 +1,366 @@
+"""Registered implementations of every LaneComm collective.
+
+This module IS the dispatch table that used to live as ``if`` chains in
+``optim/gradsync.py:grad_sync``: each (collective, strategy) cell is one
+``@register_impl`` registration wrapping the §3 mock-ups
+(:mod:`repro.core.collectives`), the §5 pipelined constructions
+(:mod:`repro.core.pipeline`) and the bucketed gradient-sync machinery
+(:mod:`repro.optim.gradsync` — which keeps the layout/packing helpers
+and is now a thin deprecation shim around this table).
+
+Registration legend per collective:
+
+  native           one-shot over the product communicator (the baseline
+                   the paper's decompositions are measured against)
+  lane             full-lane mock-up (Listings 1-6)
+  lane_pipelined   §5 pipelined construction (allreduce/bcast/reduce;
+                   bcast/reduce rings are rooted at lane 0, so they are
+                   never auto-selected)
+  grad_sync        the composite training collective; six strategies
+                   (native/lane/lane_pipelined/lane_int8/lane_zero1/
+                   lane_zero3), the ZeRO ones returning (shard, spec)
+  prefetch_allgather
+                   lane_pipelined (the ZeRO-3 weight prefetch) and
+                   blocking (the monolithic negative control)
+
+New variants (ROADMAP: backward re-gather, ssm ShardedBlocks, zero3
+embeddings) plug in as one registration here instead of editing three
+call sites.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as C
+from repro.core.costmodel import optimal_prefetch_blocks
+from repro.core.lane import LaneTopology
+from repro.core.pipeline import (
+    _pipelined_allreduce_lane, pipelined_allgather_lane,
+    pipelined_bcast_lane, pipelined_reduce_lane,
+)
+from repro.optim.gradsync import (
+    _ag_node, _ar_lane, _ar_lane_int8, _flatten_bucket, _rs_node,
+    _unflatten_bucket, bucket_schedule, resolve_num_buckets, zero3_unshard,
+)
+
+from . import costs
+from .registry import register_impl
+
+__all__ = []  # everything is reached through the registry
+
+
+# ---------------------------------------------------------------------------
+# feasibility predicates (leading-dim divisibility of the §3 mock-ups)
+# ---------------------------------------------------------------------------
+
+def _div_n(n, N, lead):
+    return lead % max(n, 1) == 0
+
+
+def _div_p(n, N, lead):
+    return lead % max(n * N, 1) == 0
+
+
+def _axes(topo: LaneTopology):
+    return (topo.lane_axis, *topo.node_axes)
+
+
+def _nrep(topo: LaneTopology) -> int:
+    r = 1
+    for a in _axes(topo):
+        r *= lax.axis_size(a)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# allreduce
+# ---------------------------------------------------------------------------
+
+@register_impl("allreduce", "native", cost=costs.native_cost("allreduce"))
+def _allreduce_native(comm, x):
+    return C.native_allreduce(x, comm.topo)
+
+
+@register_impl("allreduce", "lane", cost=costs.lane_cost("allreduce"),
+               feasible=_div_n)
+def _allreduce_lane(comm, x):
+    return C.allreduce_lane(x, comm.topo)
+
+
+@register_impl("allreduce", "lane_pipelined",
+               cost=costs.cost_pipelined_allreduce, feasible=_div_n)
+def _allreduce_pipelined(comm, x, *, num_blocks=None):
+    """§5 pipelined allreduce; num_blocks None = cost-model K shrunk to
+    the nearest divisor of the per-chip block count (explicit values keep
+    the legacy strict-divisibility contract)."""
+    n = comm.topo.n()
+    lead = x.shape[0]
+    if num_blocks is None:
+        B = resolve_num_buckets(lead, n, comm.cfg.buckets)
+        while lead % (B * n):
+            B -= 1
+        num_blocks = max(B, 1)
+    return _pipelined_allreduce_lane(x, comm.topo, num_blocks=num_blocks)
+
+
+# ---------------------------------------------------------------------------
+# reduce_scatter / allgather / alltoall / scan
+# ---------------------------------------------------------------------------
+
+@register_impl("reduce_scatter", "native",
+               cost=costs.native_cost("reduce_scatter"), feasible=_div_p)
+def _rs_native(comm, x):
+    return C.native_reduce_scatter(x, comm.topo)
+
+
+@register_impl("reduce_scatter", "lane",
+               cost=costs.lane_cost("reduce_scatter"), feasible=_div_p)
+def _rs_lane(comm, x):
+    return C.reduce_scatter_lane(x, comm.topo)
+
+
+@register_impl("allgather", "native", cost=costs.native_cost("allgather"))
+def _ag_native(comm, x):
+    return C.native_allgather(x, comm.topo)
+
+
+@register_impl("allgather", "lane", cost=costs.lane_cost("allgather"))
+def _ag_lane(comm, x, *, reorder=True):
+    return C.allgather_lane(x, comm.topo, reorder=reorder)
+
+
+@register_impl("alltoall", "native", cost=costs.native_cost("alltoall"),
+               feasible=_div_p)
+def _a2a_native(comm, x):
+    return C.native_alltoall(x, comm.topo)
+
+
+@register_impl("alltoall", "lane", cost=costs.lane_cost("alltoall"),
+               feasible=_div_p)
+def _a2a_lane(comm, x):
+    return C.alltoall_lane(x, comm.topo)
+
+
+@register_impl("scan", "native", cost=costs.cost_native_scan)
+def _scan_native(comm, x):
+    return C.native_scan(x, comm.topo)
+
+
+@register_impl("scan", "lane", cost=costs.cost_lane_scan, feasible=_div_n)
+def _scan_lane(comm, x):
+    return C.scan_lane(x, comm.topo)
+
+
+# ---------------------------------------------------------------------------
+# rooted collectives (SPMD masked-root convention, cf. DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def _is_root(topo, root_lane, root_node):
+    return jnp.logical_and(topo.lane_rank() == root_lane,
+                           topo.node_rank() == root_node)
+
+
+@register_impl("bcast", "native", cost=costs.native_cost("bcast"))
+def _bcast_native(comm, x, *, root_lane=0, root_node=0,
+                  root_replicated=True):
+    """One-shot emulation: mask to the root chip, psum the product
+    communicator (root replication makes any root-lane replica valid)."""
+    topo = comm.topo
+    mask = _is_root(topo, root_lane, root_node)
+    return lax.psum(jnp.where(mask, x, jnp.zeros_like(x)), _axes(topo))
+
+
+@register_impl("bcast", "lane", cost=costs.lane_cost("bcast"),
+               feasible=_div_n)
+def _bcast_lane(comm, x, *, root_lane=0, root_node=0, root_replicated=True):
+    return C.bcast_lane(x, comm.topo, root_lane=root_lane,
+                        root_node=root_node, root_replicated=root_replicated)
+
+
+@register_impl("bcast", "lane_pipelined", auto_ok=False, feasible=_div_n)
+def _bcast_pipelined(comm, x, *, num_blocks, root_lane=0):
+    return pipelined_bcast_lane(x, comm.topo, num_blocks=num_blocks,
+                                root_lane=root_lane)
+
+
+@register_impl("reduce", "native", cost=costs.native_cost("reduce"))
+def _reduce_native(comm, x, *, root_lane=0, root_node=0):
+    topo = comm.topo
+    out = lax.psum(x, _axes(topo))
+    return jnp.where(_is_root(topo, root_lane, root_node), out,
+                     jnp.zeros_like(out))
+
+
+@register_impl("reduce", "lane", cost=costs.lane_cost("reduce"),
+               feasible=_div_n)
+def _reduce_lane(comm, x, *, root_lane=0, root_node=0):
+    return C.reduce_lane(x, comm.topo, root_lane=root_lane,
+                         root_node=root_node)
+
+
+@register_impl("reduce", "lane_pipelined", auto_ok=False, feasible=_div_n)
+def _reduce_pipelined(comm, x, *, num_blocks, root_lane=0):
+    return pipelined_reduce_lane(x, comm.topo, num_blocks=num_blocks,
+                                 root_lane=root_lane)
+
+
+@register_impl("gather", "native", cost=costs.native_cost("gather"))
+def _gather_native(comm, x, *, root_lane=0, root_node=0):
+    topo = comm.topo
+    out = C.native_allgather(x, topo)
+    return jnp.where(_is_root(topo, root_lane, root_node), out,
+                     jnp.zeros_like(out))
+
+
+@register_impl("gather", "lane", cost=costs.lane_cost("gather"))
+def _gather_lane(comm, x, *, root_lane=0, root_node=0):
+    return C.gather_lane(x, comm.topo, root_lane=root_lane,
+                         root_node=root_node)
+
+
+@register_impl("scatter", "native", cost=costs.native_cost("scatter"),
+               feasible=_div_p)
+def _scatter_native(comm, x, *, root_lane=0, root_node=0,
+                    root_replicated=True):
+    """Mask-to-root psum broadcast of the whole buffer, then each chip
+    slices its global-rank block — the SPMD-emulation volume upper bound
+    the cost model charges natives for rooted collectives."""
+    topo = comm.topo
+    p = topo.p()
+    if x.shape[0] % p:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by p={p}")
+    m = x.shape[0] // p
+    mask = _is_root(topo, root_lane, root_node)
+    full = lax.psum(jnp.where(mask, x, jnp.zeros_like(x)), _axes(topo))
+    return lax.dynamic_slice_in_dim(full, topo.global_rank() * m, m, axis=0)
+
+
+@register_impl("scatter", "lane", cost=costs.lane_cost("scatter"),
+               feasible=_div_p)
+def _scatter_lane(comm, x, *, root_lane=0, root_node=0,
+                  root_replicated=True):
+    return C.scatter_lane(x, comm.topo, root_lane=root_lane,
+                          root_node=root_node,
+                          root_replicated=root_replicated)
+
+
+# ---------------------------------------------------------------------------
+# grad_sync — the composite training collective (was gradsync.grad_sync's
+# if-chain; strategy semantics documented in repro/optim/gradsync.py)
+# ---------------------------------------------------------------------------
+
+def _grad_prep(comm, grads, shard_ways: int, num_buckets: int):
+    """Shared bucketing prologue: resolve K, flatten+pad to K·shard_ways."""
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(grads))
+    K = resolve_num_buckets(total, shard_ways, num_buckets)
+    flat, spec = _flatten_bucket(grads, pad_to=K * shard_ways)
+    return K, flat, spec
+
+
+@register_impl("grad_sync", "native", cost=costs.native_cost("allreduce"))
+def _gs_native(comm, grads, *, num_buckets=0):
+    topo = comm.topo
+    nrep = _nrep(topo)
+    return jax.tree.map(lambda g: lax.psum(g, _axes(topo)) / nrep, grads)
+
+
+@register_impl("grad_sync", "lane", cost=costs.lane_cost("allreduce"))
+def _gs_lane(comm, grads, *, num_buckets=0):
+    topo = comm.topo
+    K, flat, spec = _grad_prep(comm, grads, topo.n(), num_buckets)
+    parts = bucket_schedule(
+        flat, K, (_rs_node(topo), _ar_lane(topo), _ag_node(topo)))
+    return _unflatten_bucket(jnp.concatenate(parts) / _nrep(topo), spec)
+
+
+@register_impl("grad_sync", "lane_pipelined",
+               cost=costs.cost_pipelined_allreduce)
+def _gs_pipelined(comm, grads, *, num_buckets=0):
+    topo = comm.topo
+    K, flat, spec = _grad_prep(comm, grads, topo.n(), num_buckets)
+    out = _pipelined_allreduce_lane(flat, topo, num_blocks=K) / _nrep(topo)
+    return _unflatten_bucket(out, spec)
+
+
+@register_impl("grad_sync", "lane_int8", auto_ok=False)
+def _gs_int8(comm, grads, *, num_buckets=0):
+    """Lossy (int8 DCN hop): opt-in only, never auto-selected."""
+    topo = comm.topo
+    K, flat, spec = _grad_prep(comm, grads, topo.n(), num_buckets)
+    parts = bucket_schedule(
+        flat, K, (_rs_node(topo), _ar_lane_int8(topo), _ag_node(topo)))
+    return _unflatten_bucket(jnp.concatenate(parts) / _nrep(topo), spec)
+
+
+@register_impl("grad_sync", "lane_zero1", auto_ok=False)
+def _gs_zero1(comm, grads, *, num_buckets=0):
+    """Returns (node-sharded flat, spec): the caller owns the deferred
+    all-gather (moved past the optimizer — see launch/steps.py)."""
+    topo = comm.topo
+    nrep = _nrep(topo)
+    K, flat, spec = _grad_prep(comm, grads, topo.n(), num_buckets)
+    parts = bucket_schedule(
+        flat, K,
+        (_rs_node(topo), lambda v: lax.psum(v, topo.lane_axis) / nrep))
+    return jnp.concatenate(parts), spec
+
+
+@register_impl("grad_sync", "lane_zero3", auto_ok=False)
+def _gs_zero3(comm, grads, *, num_buckets=0):
+    """Returns (1/p-sharded flat, spec): full RS over BOTH levels; the
+    layer prefetch re-gathers during the next forward (launch/steps.py)."""
+    topo = comm.topo
+    nrep = _nrep(topo)
+    K, flat, spec = _grad_prep(comm, grads, topo.n() * topo.N(), num_buckets)
+    parts = bucket_schedule(
+        flat, K,
+        (_rs_node(topo), lambda v: lax.psum_scatter(
+            v, topo.lane_axis, scatter_dimension=0, tiled=True) / nrep))
+    return jnp.concatenate(parts), spec
+
+
+# ---------------------------------------------------------------------------
+# prefetch_allgather — the ZeRO-3 per-layer weight re-gather
+# ---------------------------------------------------------------------------
+
+def _resolve_blocks(comm, lead: int, num_blocks) -> int:
+    """B for a per-chip stripe of ``lead`` fp32 rows.
+
+    An EXPLICIT num_blocks is strict: it names a shard layout the caller
+    already committed to, so an indivisible value must raise downstream
+    (silently shrinking it would reassemble blocks against the wrong
+    layout — permuted weights).  Only the auto path (None) may shrink:
+    cfg.prefetch_blocks (-1 → 1, the blocking control) or the cost model
+    on the stripe bytes, clamped to a divisor of lead."""
+    if num_blocks is not None:
+        return num_blocks
+    ov = comm.cfg.prefetch_blocks
+    if ov > 0:
+        B = ov
+    elif ov < 0:
+        B = 1
+    else:
+        B = optimal_prefetch_blocks(lead * 4)
+    B = max(1, min(B, lead))
+    while lead % B:
+        B -= 1
+    return B
+
+
+@register_impl("prefetch_allgather", "lane_pipelined",
+               cost=costs.cost_pipelined_allgather)
+def _prefetch_pipelined(comm, shard, *, num_blocks=None):
+    B = _resolve_blocks(comm, shard.shape[0], num_blocks)
+    return pipelined_allgather_lane(shard, comm.topo, num_blocks=B)
+
+
+@register_impl("prefetch_allgather", "blocking", auto_ok=False)
+def _prefetch_blocking(comm, shard, *, num_blocks=None):
+    """Monolithic AG(lane)→AG(node) of the whole shard — the comparator
+    and the negative control of the prefetch-overlap HLO proof."""
+    B = _resolve_blocks(comm, shard.shape[0], num_blocks)
+    return zero3_unshard(shard, comm.topo, B)

@@ -1,0 +1,208 @@
+"""LaneComm — the MPI-style communicator object over a LaneTopology.
+
+The paper's core abstraction is the decomposition of the communication
+domain into node and lane communicators (§2, Listings 1–6).  ``LaneComm``
+makes that abstraction first-class: one object carries the factorization
+(:class:`~repro.core.lane.LaneTopology`), the tuning surface
+(:class:`~repro.comm.config.CommConfig`) and the full collective surface
+— ``allreduce``/``reduce_scatter``/``allgather``/``bcast``/``alltoall``/
+``reduce``/``gather``/``scatter``/``scan`` plus the composite training
+collectives ``grad_sync`` and ``prefetch_allgather``.  Every method
+resolves through the implementation registry
+(:mod:`~repro.comm.registry`); ``strategy="auto"`` ranks the registered
+implementations with the §3/§5 cost model and records the choice so the
+HLO structural checkers (and benchmarks) can assert what actually ran.
+
+Collective methods must be called inside ``jax.shard_map`` with the
+topology's axes manual, exactly like the underlying mock-ups; auto
+ranking resolves n/N at trace time (or from ``mesh`` when given, for
+out-of-shard_map queries like :meth:`LaneComm.select`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+
+from repro.core.lane import LaneTopology
+
+from .config import CommConfig
+from .registry import get_impl, has_impl, iter_impls, strategies_for
+
+__all__ = ["LaneComm", "Selection"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """One recorded auto-dispatch decision (trace-time).
+
+    ranking: ((seconds, strategy), ...) ascending — the full cost table
+    the choice was made from, for benchmarks and failure messages.
+    """
+    collective: str
+    strategy: str
+    payload_bytes: int
+    ranking: tuple
+
+
+def _payload_bytes(x: Any) -> int:
+    """Wire-relevant payload size: leaves' byte sizes summed (grad_sync
+    flattens to fp32, so trees are charged at 4 B/element)."""
+    leaves = jax.tree.leaves(x)
+    if len(leaves) == 1 and hasattr(leaves[0], "dtype"):
+        l = leaves[0]
+        return math.prod(l.shape) * l.dtype.itemsize
+    return sum(math.prod(l.shape) for l in leaves) * 4
+
+
+def _lead(x: Any) -> Optional[int]:
+    """Leading dim for feasibility checks; None for trees (impls pad)."""
+    leaves = jax.tree.leaves(x)
+    if len(leaves) == 1 and getattr(leaves[0], "ndim", 0) >= 1:
+        return leaves[0].shape[0]
+    return None
+
+
+class LaneComm:
+    """The (node × lane) communicator object (see module docstring).
+
+    mesh: optional concrete Mesh for resolving n/N outside shard_map
+    (auto ranking inside shard_map reads trace-time axis sizes instead).
+    selections: Selection records of every auto dispatch, in call order —
+    trace-time Python state, so lower/compile once and then inspect.
+    """
+
+    def __init__(self, topo: LaneTopology, cfg: Optional[CommConfig] = None,
+                 *, mesh=None):
+        self.topo = topo
+        self.cfg = cfg if cfg is not None else CommConfig()
+        self.mesh = mesh
+        self.selections: list[Selection] = []
+
+    # -- sizes -----------------------------------------------------------
+    def sizes(self) -> tuple[int, int]:
+        """(n, N): trace-time axis sizes, or read off ``mesh`` outside."""
+        try:
+            return self.topo.n(), self.topo.N()
+        except Exception:
+            if self.mesh is not None:
+                return self.topo.sizes(self.mesh)
+            raise
+
+    # -- auto-dispatch ---------------------------------------------------
+    def select(self, collective: str, payload_bytes: int, *,
+               n: Optional[int] = None, N: Optional[int] = None,
+               lead: Optional[int] = None) -> tuple[str, tuple]:
+        """Rank auto-eligible registrations by modelled cost.
+
+        Returns (winning strategy, ((seconds, strategy), ...) ascending).
+        Entries are skipped when they are lossy/layout-changing
+        (``auto_ok=False``), have no cost model, or fail their
+        divisibility precondition for ``lead``.
+        """
+        if n is None or N is None:
+            n, N = self.sizes()
+        table = []
+        for e in iter_impls(collective):
+            if not e.auto_ok or e.cost is None:
+                continue
+            if lead is not None and e.feasible is not None \
+                    and not e.feasible(n, N, lead):
+                continue
+            table.append((float(e.cost(n, N, payload_bytes, self.cfg)),
+                          e.strategy))
+        if not table:
+            raise ValueError(
+                f"no auto-dispatchable implementation for {collective!r} "
+                f"(payload {payload_bytes} B, n={n}, N={N}); registered "
+                f"strategies: {strategies_for(collective)}")
+        ranking = tuple(sorted(table))
+        return ranking[0][1], ranking
+
+    @property
+    def last_selection(self) -> Optional[Selection]:
+        return self.selections[-1] if self.selections else None
+
+    # -- dispatch core ---------------------------------------------------
+    def _default_strategy(self, collective: str) -> str:
+        if collective == "prefetch_allgather":
+            # -1 is the blocking negative control of the prefetch proof
+            return "blocking" if self.cfg.prefetch_blocks == -1 \
+                else "lane_pipelined"
+        s = self.cfg.strategy
+        return s if s == "auto" or has_impl(collective, s) else "auto"
+
+    def _dispatch(self, collective: str, x: Any, strategy: Optional[str],
+                  **kw) -> Any:
+        strategy = strategy or self._default_strategy(collective)
+        if strategy == "auto":
+            payload = _payload_bytes(x)
+            strategy, ranking = self.select(collective, payload,
+                                            lead=_lead(x))
+            if self.cfg.record_selections:
+                self.selections.append(
+                    Selection(collective, strategy, payload, ranking))
+        return get_impl(collective, strategy).fn(self, x, **kw)
+
+    # -- the collective surface (paper §3, Listings 1-6 + Scan) ----------
+    def allreduce(self, x, *, strategy: Optional[str] = None, **kw):
+        """Sum over the whole (node × lane) communicator, on every chip."""
+        return self._dispatch("allreduce", x, strategy, **kw)
+
+    def reduce_scatter(self, x, *, strategy: Optional[str] = None, **kw):
+        """Reduce p·m rows; each chip keeps its global-rank block of m."""
+        return self._dispatch("reduce_scatter", x, strategy, **kw)
+
+    def allgather(self, x, *, strategy: Optional[str] = None, **kw):
+        """Concatenate every chip's block in global-rank order."""
+        return self._dispatch("allgather", x, strategy, **kw)
+
+    def bcast(self, x, *, strategy: Optional[str] = None, **kw):
+        """Broadcast the root chip's buffer (SPMD masked-root convention)."""
+        return self._dispatch("bcast", x, strategy, **kw)
+
+    def alltoall(self, x, *, strategy: Optional[str] = None, **kw):
+        """Personalized exchange: destination-rank blocks → source-rank."""
+        return self._dispatch("alltoall", x, strategy, **kw)
+
+    def reduce(self, x, *, strategy: Optional[str] = None, **kw):
+        """Sum valid on the root chip, zeros elsewhere."""
+        return self._dispatch("reduce", x, strategy, **kw)
+
+    def gather(self, x, *, strategy: Optional[str] = None, **kw):
+        """All blocks on the root chip in global-rank order, zeros elsewhere."""
+        return self._dispatch("gather", x, strategy, **kw)
+
+    def scatter(self, x, *, strategy: Optional[str] = None, **kw):
+        """Each chip receives its global-rank block of the root's buffer."""
+        return self._dispatch("scatter", x, strategy, **kw)
+
+    def scan(self, x, *, strategy: Optional[str] = None, **kw):
+        """Inclusive prefix sum by consecutive global rank (MPI_Scan)."""
+        return self._dispatch("scan", x, strategy, **kw)
+
+    # -- composite training collectives ----------------------------------
+    def grad_sync(self, grads, *, strategy: Optional[str] = None,
+                  num_buckets: Optional[int] = None):
+        """Synchronize (mean) a gradient pytree over the batch axes.
+
+        Returns the fully-reduced tree, or (sharded_flat, spec) for the
+        ZeRO strategies — see the registered implementations in
+        :mod:`repro.comm.impls` for the per-strategy contracts.
+        ``num_buckets``: None = ``cfg.buckets``; 0 = cost-model auto.
+        """
+        nb = self.cfg.buckets if num_buckets is None else num_buckets
+        return self._dispatch("grad_sync", grads, strategy, num_buckets=nb)
+
+    def prefetch_allgather(self, shard, *, strategy: Optional[str] = None,
+                           num_blocks: Optional[int] = None):
+        """Re-gather a 1/p ZeRO-3 stripe to the full flat vector.
+
+        Default strategy follows ``cfg.prefetch_blocks``: -1 dispatches
+        to the monolithic ``"blocking"`` gather (the negative control),
+        anything else to the §5 ``"lane_pipelined"`` AG(lane)→AG(node).
+        """
+        return self._dispatch("prefetch_allgather", shard, strategy,
+                              num_blocks=num_blocks)

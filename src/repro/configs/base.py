@@ -135,11 +135,23 @@ SHAPES = {
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
+    """One training/serving cell.
+
+    The communication fields (``gradsync``/``gradsync_buckets``/
+    ``fsdp_prefetch``) are the legacy knobs behind
+    ``repro.comm.CommConfig.from_run`` — the valid ``gradsync`` values
+    are whatever the repro.comm registry has registered (this docstring
+    is completed from the registry at import time, so new registrations
+    are self-documenting):
+
+    gradsync strategies: {gradsync_strategies}
+    """
     model: ModelConfig
     shape: ShapeConfig
     fsdp: bool = False             # shard params over the data axis too
     remat: str = "none"            # none | full | dots
-    # native | lane | lane_pipelined | lane_int8 | lane_zero1 | lane_zero3
+    # valid values derive from the repro.comm registry — see the class
+    # docstring (filled from strategies_for("grad_sync") at import)
     gradsync: str = "native"
     # gradient-sync bucket count; 0 = cost-model auto (§5 latency/bandwidth
     # crossover, core.costmodel.optimal_num_buckets)
@@ -154,6 +166,19 @@ class RunConfig:
     microbatch: int = 0            # 0 = no grad accumulation
     # serving
     decode_seq_shard: bool = True  # shard KV cache seq dim over model axis
+
+
+def _fill_rundoc() -> None:
+    """Complete RunConfig's docstring from the live registry (satellite:
+    valid-strategy lists are DERIVED, never hard-coded)."""
+    if not RunConfig.__doc__:        # stripped under python -OO
+        return
+    from repro.comm import strategies_for
+    names = " | ".join((*strategies_for("grad_sync"), "auto"))
+    RunConfig.__doc__ = RunConfig.__doc__.format(gradsync_strategies=names)
+
+
+_fill_rundoc()
 
 
 # ---------------------------------------------------------------------------

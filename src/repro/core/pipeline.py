@@ -205,6 +205,22 @@ def _lane_ring_allreduce(v, topo: LaneTopology):
 
 
 def pipelined_allreduce_lane(x, topo: LaneTopology, *, num_blocks: int):
+    """DEPRECATED direct entry point — use
+    ``repro.comm.LaneComm.allreduce(x, strategy="lane_pipelined")``.
+
+    Thin shim over the real implementation (bit-identical: it IS the same
+    function the registry dispatches to); warns once per process."""
+    from repro._deprecation import warn_once
+    warn_once(
+        "repro.core.pipeline.pipelined_allreduce_lane",
+        "direct pipelined_allreduce_lane(...) use is deprecated; route "
+        "through repro.comm.LaneComm.allreduce(x, "
+        "strategy=\"lane_pipelined\", num_blocks=...) so the strategy "
+        "registry (and its cost-model auto-dispatch) sees the call")
+    return _pipelined_allreduce_lane(x, topo, num_blocks=num_blocks)
+
+
+def _pipelined_allreduce_lane(x, topo: LaneTopology, *, num_blocks: int):
     """Pipelined full-lane ALLREDUCE — the §5 recipe applied to Listing 4.
 
     The monolithic full-lane allreduce (collectives.allreduce_lane) runs

@@ -5,14 +5,17 @@
                        control at 4k×256) — grads accumulate in fp32.
 `build_train_step_lane` — the paper's technique as a first-class backend:
                        shard_map manual over the batch axes (pod, data),
-                       GSPMD auto over "model"; gradient sync runs through
-                       repro.optim.gradsync (native / lane / lane_int8 /
-                       lane_zero1).  Params replicated over batch axes in
-                       this path (≤ ~10B models).
+                       GSPMD auto over "model"; all collectives run
+                       through a repro.comm.LaneComm, and the per-strategy
+                       step CONSTRUCTION dispatches through the same
+                       registry (@register_impl("train_step", ...) below)
+                       — no strategy if-chains.  Params replicated over
+                       batch axes in the non-ZeRO flavors (≤ ~10B models).
 `build_prefill_step` / `build_decode_step` — serving.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 from typing import Optional
@@ -21,15 +24,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import CommConfig, LaneComm, get_impl, register_impl
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import LaneTopology, optimal_prefetch_blocks
-from repro.core.pipeline import pipelined_allgather_lane
 from repro.models import init_model, loss_fn, prefill, decode_step
 from repro.models.transformer import ShardedBlocks
-from repro.optim import AdamWConfig, adamw_init, adamw_update, grad_sync
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import global_norm
 from repro.optim.gradsync import (
-    _unflatten_bucket, _flatten_bucket, resolve_num_buckets,
-    zero1_param_shard, zero1_unshard, zero3_unshard,
+    _unflatten_bucket, _flatten_bucket, decay_mask_flat, resolve_num_buckets,
+    zero1_param_shard, zero1_unshard, zero3_param_shard,
 )
 from .mesh import batch_axes
 
@@ -101,146 +105,221 @@ def build_train_step(cfg: ModelConfig, run: RunConfig,
 # ---------------------------------------------------------------------------
 # lane-decomposed train step (the paper's technique, swappable)
 # ---------------------------------------------------------------------------
+#
+# Per-strategy step CONSTRUCTION dispatches through the repro.comm
+# registry too: each flavor is one @register_impl("train_step", ...)
+# below, so a new gradsync variant is a registration here plus its
+# grad_sync impl in repro/comm/impls.py — never an if-chain edit.  The
+# builder contract: fn(comm: LaneComm, ctx: StepContext) -> step where
+# step(params, opt_state, tokens, labels, extra=None) -> (loss, params,
+# opt_state), traced inside shard_map with ctx.ba manual.
+
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Everything a registered train-step builder needs besides the comm."""
+    cfg: ModelConfig
+    run: RunConfig
+    opt: AdamWConfig
+    mesh: object
+    ba: tuple
+    single: bool                   # one batch axis: no distinct lane level
+
 
 def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
                           mesh, param_specs):
-    """Manual over batch axes; grad sync via repro.optim.gradsync.
+    """Manual over batch axes; collectives via repro.comm.LaneComm.
 
-    gradsync strategies: native | lane | lane_pipelined | lane_int8 |
-    lane_zero1.  All lane strategies bucket the flat gradient vector
-    (K = run.gradsync_buckets, 0 = cost-model auto) so the DCN lane hop of
-    one bucket overlaps the ICI node collective of the next (§5 pipeline).
-    lane_zero1 keeps grads + moments data-sharded through the optimizer and
-    all-gathers the *updated parameters* (the paper's trailing AllGather
-    moved past the update — same bytes, sharded optimizer memory); its
-    shard layout is bucket-major, so param sharding/unsharding goes
-    through gradsync.zero1_param_shard / zero1_unshard with the same K.
-    lane_zero3 additionally keeps the scanned layer weights sharded 1/p
-    per chip (zero3_shard_blocks layout) and re-gathers them LAYER BY
-    LAYER inside the forward scan via the pipelined AG(lane)→AG(node)
-    (core.pipeline.pipelined_allgather_lane), with a one-layer prefetch
-    buffer so layer i+1's gather overlaps layer i's compute
-    (run.fsdp_prefetch: 0 = cost-model block count, >0 = override,
-    -1 = blocking negative control).  Gradients for the stack need no
-    separate sync: the gather's AD transpose IS the lane_zero3
-    reduce-scatter.
+    The step flavor is resolved from the train_step registry by
+    ``run.gradsync`` (valid names: ``repro.comm.strategies_for
+    ("train_step")`` — native/lane/lane_pipelined/lane_int8/auto share
+    the replicated-parameter step, lane_zero1/lane_zero3 build the
+    sharded-optimizer steps; see the registrations below).  All lane
+    strategies bucket the flat gradient vector (K = run.gradsync_buckets
+    via CommConfig.from_run, 0 = cost-model auto) so the DCN lane hop of
+    one bucket overlaps the ICI node collective of the next (§5
+    pipeline); ``"auto"`` lets the cost model pick the sync strategy per
+    payload and records the choice on the returned comm's ``selections``.
+    On a single-batch-axis mesh the node level is trivial and every
+    replicated flavor degrades to the native one-shot psum.
+    ``param_specs`` is accepted for call-site compatibility but unused:
+    the caller owns the shard_map in/out specs of the returned step.
     """
     ba = batch_axes(mesh)
-    if run.gradsync == "lane_zero3" and len(ba) < 2:
+    single = len(ba) == 1
+    # single-axis meshes get an empty node level (n = 1): the lane axis
+    # IS the communicator, matching the paper's N-node/1-per-node corner
+    topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
+    comm = LaneComm(topo, CommConfig.from_run(run), mesh=mesh)
+    ctx = StepContext(cfg, run, opt, mesh, ba, single)
+    builder = get_impl("train_step", run.gradsync)
+    return builder.fn(comm, ctx), topo
+
+
+def _make_loss(ctx: StepContext):
+    def lf(p, tok, lab, ex):
+        return loss_fn(p, ctx.cfg, tok, lab, extra_embeds=ex,
+                       remat=ctx.run.remat)
+    return lf
+
+
+def _register_replicated(strategy: str):
+    @register_impl("train_step", strategy, auto_ok=False)
+    def _build(comm, ctx, _strategy=strategy):
+        """Replicated-parameter step: full grad sync + tree AdamW."""
+        lf = _make_loss(ctx)
+        eff = "native" if ctx.single else _strategy
+
+        def step(params, opt_state, tokens, labels, extra=None):
+            loss, grads = jax.value_and_grad(lf)(params, tokens, labels,
+                                                 extra)
+            loss = jax.lax.pmean(loss, ctx.ba)
+            grads = comm.grad_sync(grads, strategy=eff)
+            new_params, new_opt = adamw_update(ctx.opt, grads, opt_state,
+                                               params)
+            return loss, new_params, new_opt
+        return step
+    return _build
+
+
+for _s in ("native", "lane", "lane_pipelined", "lane_int8", "auto"):
+    _register_replicated(_s)
+
+
+@register_impl("train_step", "lane_zero1", auto_ok=False)
+def _build_zero1(comm, ctx: StepContext):
+    """ZeRO-1 step: data-sharded flat grads + moments through the
+    optimizer; the paper's trailing AllGather moves PAST the update
+    (same bytes, applied to fresh params, moments stay sharded).  The
+    shard layout is bucket-major, so param sharding/unsharding goes
+    through gradsync.zero1_param_shard / zero1_unshard with the same K.
+    Optimizer semantics match the unsharded adamw_update exactly: the
+    TRUE global grad norm is one extra scalar psum over the shard norms
+    and weight decay follows the per-element matrices-only mask."""
+    if ctx.single:
+        return get_impl("train_step", "native").fn(comm, ctx)
+    lf = _make_loss(ctx)
+    topo, opt, run = comm.topo, ctx.opt, ctx.run
+
+    def step(params, opt_state, tokens, labels, extra=None):
+        loss, grads = jax.value_and_grad(lf)(params, tokens, labels, extra)
+        loss = jax.lax.pmean(loss, ctx.ba)
+        total = sum(math.prod(p.shape) for p in jax.tree.leaves(params))
+        K = resolve_num_buckets(total, topo.n(), run.gradsync_buckets)
+        shard_flat, spec = comm.grad_sync(grads, strategy="lane_zero1",
+                                          num_buckets=K)
+        pflat, pspec = _flatten_bucket(params, pad_to=K * topo.n())
+        mine = zero1_param_shard(pflat, topo, K)
+        dmask = zero1_param_shard(
+            decay_mask_flat(params, pad_to=K * topo.n()), topo, K)
+        # true global grad norm: shards are disjoint over the node level
+        # and lane-replicated, so ONE scalar psum over the node axes sums
+        # the per-shard square norms to the full-tree norm (padding
+        # contributes zeros)
+        gnorm = jnp.sqrt(jax.lax.psum(jnp.sum(jnp.square(shard_flat)),
+                                      topo.node_axes))
+        scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+        # sharded moments: opt_state here is the *sharded* flat state
+        newp_shard, new_opt = _adamw_flat(opt, shard_flat, opt_state, mine,
+                                          scale=scale, decay_mask=dmask)
+        full = zero1_unshard(newp_shard, topo, K)
+        new_params = _unflatten_bucket(full, pspec)
+        return loss, new_params, new_opt
+    return step
+
+
+@register_impl("train_step", "lane_zero3", auto_ok=False)
+def _build_zero3(comm, ctx: StepContext):
+    """ZeRO-3/FSDP step: the scanned layer stack stays sharded 1/p per
+    chip (zero3_shard_blocks layout) and is re-gathered LAYER BY LAYER
+    inside the forward scan via comm.prefetch_allgather — the pipelined
+    AG(lane)→AG(node) with a one-layer prefetch buffer so layer i+1's
+    gather overlaps layer i's compute (run.fsdp_prefetch: 0 = cost-model
+    block count, >0 = override, -1 = blocking negative control, which
+    dispatches to the registry's "blocking" gather).  Gradients for the
+    stack need no separate sync: the gather's AD transpose IS the
+    lane_zero3 reduce-scatter.  Optimizer semantics match native: one
+    scalar psum over the (lane × node) shard norms recovers the true
+    global grad norm for clipping, and the flat decay mask reproduces
+    matrices-only weight decay."""
+    ba, run, opt = ctx.ba, ctx.run, ctx.opt
+    if len(ba) < 2:
         # zero3 shards over the (lane × node) product and its gather
         # pipeline needs the two levels to be DISTINCT axes; there is no
         # sensible single-axis degradation (unlike the other strategies,
-        # which fall back to native below)
+        # which fall back to native)
         raise ValueError(
             "lane_zero3 needs distinct lane and node batch axes (a "
             "multi-pod mesh); use native or lane_zero1 on single-"
             f"batch-axis meshes (got batch axes {ba})")
-    topo = LaneTopology(node_axes=ba[1:] or ba, lane_axis=ba[0]) \
-        if len(ba) > 1 else LaneTopology(node_axes=(ba[0],), lane_axis=ba[0])
-    # single-pod fallback: treat "data" as the lane axis with a trivial
-    # node level — handled by strategy below
-    single = len(ba) == 1
-    strategy = run.gradsync
+    topo = comm.topo
+    lf = _make_loss(ctx)
+    n_, N_ = topo.sizes(ctx.mesh)
+    spec3 = zero3_layer_spec(ctx.cfg)
+    B3 = resolve_prefetch_blocks(spec3.layer_elems, n_, N_,
+                                 run.fsdp_prefetch)
+    blocking = run.fsdp_prefetch == -1
 
-    def lf(p, tok, lab, ex):
-        return loss_fn(p, cfg, tok, lab, extra_embeds=ex, remat=run.remat)
+    def gather_layer(x):
+        return unflatten_layer(comm.prefetch_allgather(x, num_blocks=B3),
+                               spec3)
 
-    if strategy == "lane_zero3":
-        n_, N_ = topo.sizes(mesh)
-        spec3 = zero3_layer_spec(cfg)
-        B3 = resolve_prefetch_blocks(spec3.layer_elems, n_, N_,
-                                     run.fsdp_prefetch)
-        blocking = run.fsdp_prefetch == -1
+    def step(params, opt_state, tokens, labels, extra=None):
+        """lane_zero3 train step.
 
-        def gather_layer(x):
-            full = (zero3_unshard(x, topo, B3) if blocking
-                    else pipelined_allgather_lane(x, topo, num_blocks=B3))
-            return unflatten_layer(full, spec3)
+        params["blocks"] is this chip's shard — any shape reshapeable
+        to (L, B·s), e.g. the local block of the host-side
+        (L, B, n·N, s) layout from zero3_shard_blocks.  opt_state is
+        the split {"rest", "blocks"} state of zero3_opt_init.  The
+        returned params keep the blocks SHARDED (same shape as the
+        input): ZeRO-3 never materializes full parameters outside the
+        per-layer prefetch window.
+        """
+        bshape = params["blocks"].shape
+        shards = params["blocks"].reshape(spec3.num_layers, -1)
+        rest = {k: v for k, v in params.items() if k != "blocks"}
 
-        def per_replica_zero3(params, opt_state, tokens, labels, extra=None):
-            """lane_zero3 train step.
+        def lf3(rest_p, sh):
+            p = dict(rest_p)
+            p["blocks"] = ShardedBlocks(sh, gather_layer,
+                                        prefetch=not blocking)
+            return lf(p, tokens, labels, extra)
 
-            params["blocks"] is this chip's shard — any shape reshapeable
-            to (L, B·s), e.g. the local block of the host-side
-            (L, B, n·N, s) layout from zero3_shard_blocks.  opt_state is
-            the split {"rest", "blocks"} state of zero3_opt_init.  The
-            returned params keep the blocks SHARDED (same shape as the
-            input): ZeRO-3 never materializes full parameters outside the
-            per-layer prefetch window.
-            """
-            # NOTE optimizer-semantics parity with lane_zero1, not native:
-            # the flat sharded AdamW (_adamw_flat) does no global-norm
-            # clipping (a true global norm needs an extra cross-shard
-            # psum) and applies weight decay uniformly, incl. norm gains;
-            # the rest-params clip by their own partial norm.  Exact-
-            # native comparisons neutralize both (see the zero3 test
-            # case); sharded clipping is a ROADMAP follow-up.
-            bshape = params["blocks"].shape
-            shards = params["blocks"].reshape(spec3.num_layers, -1)
-            rest = {k: v for k, v in params.items() if k != "blocks"}
-
-            def lf3(rest_p, sh):
-                p = dict(rest_p)
-                p["blocks"] = ShardedBlocks(sh, gather_layer,
-                                            prefetch=not blocking)
-                return lf(p, tokens, labels, extra)
-
-            loss, (g_rest, g_sh) = jax.value_and_grad(
-                lf3, argnums=(0, 1))(rest, shards)
-            loss = jax.lax.pmean(loss, ba)
-            # the gather's transpose already reduce-scattered g_sh over
-            # (lane × node) — sum over replicas; only the mean is left
-            g_sh = g_sh / _axprod(ba)
-            g_rest = grad_sync(g_rest, topo, "lane",
-                               num_buckets=run.gradsync_buckets)
-            new_rest, new_opt_rest = adamw_update(
-                opt, g_rest, opt_state["rest"], rest)
-            ob = opt_state["blocks"]
-            newp, nob = _adamw_flat(
-                opt, g_sh.reshape(-1),
-                {"m": ob["m"].reshape(-1), "v": ob["v"].reshape(-1),
-                 "count": ob["count"]},
-                shards.reshape(-1))
-            new_params = dict(new_rest)
-            new_params["blocks"] = newp.reshape(bshape)
-            new_opt = {"rest": new_opt_rest,
-                       "blocks": {"m": nob["m"].reshape(ob["m"].shape),
-                                  "v": nob["v"].reshape(ob["v"].shape),
-                                  "count": nob["count"]}}
-            return loss, new_params, new_opt
-
-        return per_replica_zero3, topo
-
-    def per_replica(params, opt_state, tokens, labels, extra):
-        loss, grads = jax.value_and_grad(lf)(params, tokens, labels, extra)
+        loss, (g_rest, g_sh) = jax.value_and_grad(
+            lf3, argnums=(0, 1))(rest, shards)
         loss = jax.lax.pmean(loss, ba)
-        if single or strategy == "native":
-            grads = jax.tree.map(
-                lambda g: jax.lax.psum(g, ba) / _axprod(ba), grads)
-            new_params, new_opt = adamw_update(opt, grads, opt_state, params)
-            return loss, new_params, new_opt
-        if strategy == "lane_zero1":
-            total = sum(math.prod(p.shape)
-                        for p in jax.tree.leaves(params))
-            K = resolve_num_buckets(total, topo.n(), run.gradsync_buckets)
-            shard_flat, spec = grad_sync(grads, topo, "lane_zero1",
-                                         num_buckets=K)
-            pflat, pspec = _flatten_bucket(params, pad_to=K * topo.n())
-            mine = zero1_param_shard(pflat, topo, K)
-            # sharded moments: opt_state here is the *sharded* flat state
-            newp_shard, new_opt = _adamw_flat(opt, shard_flat, opt_state, mine)
-            full = zero1_unshard(newp_shard, topo, K)
-            new_params = _unflatten_bucket(full, pspec)
-            return loss, new_params, new_opt
-        grads = grad_sync(grads, topo, strategy,
-                          num_buckets=run.gradsync_buckets)
-        new_params, new_opt = adamw_update(opt, grads, opt_state, params)
+        # the gather's transpose already reduce-scattered g_sh over
+        # (lane × node) — sum over replicas; only the mean is left
+        g_sh = g_sh / _axprod(ba)
+        g_rest = comm.grad_sync(g_rest, strategy="lane")
+        # true global grad norm over rest + blocks: the 1/p stripes are
+        # disjoint, so one scalar psum over BOTH levels totals their
+        # square norms; g_rest is fully reduced (replicated), added once
+        gsq_sh = jax.lax.psum(jnp.sum(jnp.square(g_sh)),
+                              (topo.lane_axis, *topo.node_axes))
+        gnorm = jnp.sqrt(gsq_sh + global_norm(g_rest) ** 2)
+        scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+        new_rest, new_opt_rest = adamw_update(
+            opt, g_rest, opt_state["rest"], rest, grad_norm=gnorm)
+        shard_len = shards.shape[1]
+        dmask = jnp.tile(
+            zero3_param_shard(
+                _zero3_decay_mask(spec3, pad_to=shard_len * topo.p()),
+                topo, B3),
+            spec3.num_layers)
+        ob = opt_state["blocks"]
+        newp, nob = _adamw_flat(
+            opt, g_sh.reshape(-1),
+            {"m": ob["m"].reshape(-1), "v": ob["v"].reshape(-1),
+             "count": ob["count"]},
+            shards.reshape(-1), scale=scale, decay_mask=dmask)
+        new_params = dict(new_rest)
+        new_params["blocks"] = newp.reshape(bshape)
+        new_opt = {"rest": new_opt_rest,
+                   "blocks": {"m": nob["m"].reshape(ob["m"].shape),
+                              "v": nob["v"].reshape(ob["v"].shape),
+                              "count": nob["count"]}}
         return loss, new_params, new_opt
-
-    in_specs = (jax.tree.map(lambda s: _strip_batch(s, ba), param_specs),
-                None, P(ba, None), P(ba, None), None)
-    # NOTE: with auto={"model"} GSPMD still handles the TP dimension.
-    return per_replica, topo
+    return step
 
 
 def _axprod(axes):
@@ -250,20 +329,44 @@ def _axprod(axes):
     return n
 
 
-def _strip_batch(spec, ba):
-    return spec
+def _zero3_decay_mask(spec3, pad_to: int):
+    """Per-layer 0/1 decay mask in the flat layer layout: 1 where the
+    stacked (L, ...) leaf has ndim >= 2 (len(shape[1:]) >= 1) — the
+    leaves adamw_update decays in the replicated step.  Padding is 0."""
+    parts = [jnp.full((math.prod(s),), 1.0 if len(s) >= 1 else 0.0,
+                      jnp.float32)
+             for s, _ in spec3.metas]
+    m = jnp.concatenate(parts)
+    pad = pad_to - m.shape[0]
+    if pad:
+        m = jnp.concatenate([m, jnp.zeros((pad,), jnp.float32)])
+    return m
 
 
-def _adamw_flat(opt: AdamWConfig, g, state, p):
-    """AdamW on a flat fp32 shard (ZeRO-1)."""
+def _adamw_flat(opt: AdamWConfig, g, state, p, *, scale=None,
+                decay_mask=None):
+    """AdamW on a flat fp32 shard (ZeRO-1 / ZeRO-3).
+
+    scale: global-norm clip factor — the CALLER computes it from the true
+    global norm (one extra scalar psum over shard norms) so every shard
+    clips by the same full-model scale, exactly like adamw_update; None
+    skips clipping.  decay_mask: 0/1 per-element mask of the leaves
+    adamw_update would decay (matrices; see gradsync.decay_mask_flat);
+    None decays every element uniformly (legacy behavior, kept for bare
+    callers)."""
     from repro.optim.adamw import cosine_lr
     count = state["count"] + 1
     lr = cosine_lr(opt, count)
+    if scale is not None:
+        g = g * scale
     m = opt.b1 * state["m"] + (1 - opt.b1) * g
     v = opt.b2 * state["v"] + (1 - opt.b2) * jnp.square(g)
     c1 = 1 - opt.b1 ** count.astype(jnp.float32)
     c2 = 1 - opt.b2 ** count.astype(jnp.float32)
-    step = (m / c1) / (jnp.sqrt(v / c2) + opt.eps) + opt.weight_decay * p
+    decay = opt.weight_decay * p
+    if decay_mask is not None:
+        decay = decay * decay_mask
+    step = (m / c1) / (jnp.sqrt(v / c2) + opt.eps) + decay
     return p - lr * step, {"m": m, "v": v, "count": count}
 
 

@@ -47,10 +47,18 @@ def global_norm(tree):
                         for g in jax.tree.leaves(tree)))
 
 
-def adamw_update(cfg: AdamWConfig, grads, state, params):
-    """Returns (new_params, new_state).  All math in fp32; params keep dtype."""
+def adamw_update(cfg: AdamWConfig, grads, state, params, *, grad_norm=None):
+    """Returns (new_params, new_state).  All math in fp32; params keep dtype.
+
+    grad_norm: override for the clipping norm — sharded-optimizer callers
+    (launch/steps.py ZeRO paths) pass the TRUE global norm computed with
+    an extra scalar psum over shard norms, so a partial tree (e.g. the
+    zero3 rest-params) clips by the full-model norm exactly like the
+    unsharded optimizer.  None = compute from ``grads`` (the default,
+    correct when ``grads`` is the whole tree).
+    """
     count = state["count"] + 1
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
     lr = cosine_lr(cfg, count)
     c1 = 1 - cfg.b1 ** count.astype(jnp.float32)

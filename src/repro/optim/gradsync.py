@@ -42,6 +42,13 @@ bandwidth crossover, ``core.costmodel.optimal_num_buckets``, overridable
 via ``RunConfig.gradsync_buckets``).  K collectives per level instead of
 one trades latency (K·alpha) for pipeline overlap of the ICI and DCN
 levels — the k-lane model's simultaneity term; see DESIGN.md §3.
+
+The strategy DISPATCH lives in the :mod:`repro.comm` registry now (one
+``@register_impl("grad_sync", ...)`` per strategy in repro/comm/impls.py,
+DESIGN.md §6); this module keeps the shared machinery — flatten/pad,
+bucket schedule, int8 packing, ZeRO shard layouts — plus a deprecated
+``grad_sync`` shim over :class:`repro.comm.LaneComm` for old callers.
+``STRATEGIES`` is derived from the registry (module ``__getattr__``).
 """
 from __future__ import annotations
 
@@ -54,10 +61,16 @@ from jax import lax
 
 from repro.core import LaneTopology, optimal_num_buckets
 from repro.core.collectives import _ag_seq, _rs_seq
-from repro.core.pipeline import pipelined_allreduce_lane
 
-STRATEGIES = ("native", "lane", "lane_pipelined", "lane_int8", "lane_zero1",
-              "lane_zero3")
+
+def __getattr__(name):
+    # STRATEGIES is derived from the repro.comm registry (the strategy
+    # table lives there now), lazily to avoid a module-level import cycle
+    # — new registrations are self-documenting here too.
+    if name == "STRATEGIES":
+        from repro.comm import strategies_for
+        return strategies_for("grad_sync")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _flatten_bucket(tree, pad_to: int):
@@ -287,64 +300,59 @@ def zero3_unshard(shard, topo: LaneTopology, num_blocks: int):
 
 
 # ---------------------------------------------------------------------------
-# entry point
+# optimizer-layout helper (shared by the sharded-AdamW call sites)
+# ---------------------------------------------------------------------------
+
+def decay_mask_flat(tree, pad_to: int):
+    """0/1 fp32 mask over the ``_flatten_bucket`` layout of ``tree``:
+    1 where the element's source leaf has ndim >= 2 — exactly the leaves
+    ``adamw_update`` applies weight decay to.  Padding is 0 (never
+    decayed).  Lets the flat sharded AdamW (launch/steps.py:_adamw_flat)
+    reproduce the tree optimizer's matrices-only decay per element."""
+    leaves = jax.tree.leaves(tree)
+    mask = jnp.concatenate([
+        jnp.full((math.prod(l.shape),),
+                 1.0 if l.ndim >= 2 else 0.0, jnp.float32)
+        for l in leaves])
+    pad = (-mask.shape[0]) % pad_to
+    if pad:
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), jnp.float32)])
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# entry point — DEPRECATED shim over repro.comm.LaneComm
 # ---------------------------------------------------------------------------
 
 def grad_sync(grads: Any, topo: LaneTopology, strategy: str = "native",
               *, num_buckets: int = 0):
-    """Synchronize (mean) gradients over the (lane × node) batch axes.
+    """DEPRECATED: construct a :class:`repro.comm.LaneComm` and call
+    ``comm.grad_sync(...)`` instead.
 
+    Synchronize (mean) gradients over the (lane × node) batch axes.
     Must be called inside shard_map with topo's axes manual.  Returns the
     fully-reduced tree for native/lane/lane_pipelined/lane_int8, or
     (sharded_flat, spec) for lane_zero1 / lane_zero3 (see steps.py for
-    the deferred all-gather / the per-layer prefetch re-gather).  ``num_buckets``: 0 = cost-model auto (§5 crossover);
-    callers that must agree on the padded layout across call sites (the
-    ZeRO-1 optimizer state) should resolve K once via resolve_num_buckets
-    and pass it explicitly.
+    the deferred all-gather / the per-layer prefetch re-gather).
+    ``num_buckets``: 0 = cost-model auto (§5 crossover); callers that
+    must agree on the padded layout across call sites (the ZeRO-1
+    optimizer state) should resolve K once via resolve_num_buckets and
+    pass it explicitly.
+
+    The shim delegates verbatim to the registry implementation LaneComm
+    dispatches to — bit-identical results by construction (pinned by the
+    conformance grid's gradsync_shim_bitident cases) — and warns once per
+    process.  The per-strategy implementations (and the valid-strategy
+    list in the unknown-strategy error) live in :mod:`repro.comm.impls`.
     """
-    axes = (topo.lane_axis, *topo.node_axes)
-    nrep = 1
-    for a in axes:
-        nrep *= lax.axis_size(a)
-
-    if strategy == "native":
-        return jax.tree.map(lambda g: lax.psum(g, axes) / nrep, grads)
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown gradsync strategy {strategy!r}; "
-                         f"have {STRATEGIES}")
-
-    n_node = topo.n()
-    # zero3 scatters over the full p = n·N product; the others over n only
-    shard_ways = n_node * topo.N() if strategy == "lane_zero3" else n_node
-    total = sum(math.prod(l.shape) for l in jax.tree.leaves(grads))
-    K = resolve_num_buckets(total, shard_ways, num_buckets)
-    # every bucket must stay divisible by the shard ways after the K-way split
-    flat, spec = _flatten_bucket(grads, pad_to=K * shard_ways)
-
-    if strategy == "lane_pipelined":
-        out = pipelined_allreduce_lane(flat, topo, num_blocks=K) / nrep
-        return _unflatten_bucket(out, spec)
-
-    if strategy == "lane":
-        parts = bucket_schedule(
-            flat, K, (_rs_node(topo), _ar_lane(topo), _ag_node(topo)))
-        return _unflatten_bucket(jnp.concatenate(parts) / nrep, spec)
-
-    if strategy == "lane_int8":
-        parts = bucket_schedule(
-            flat, K, (_rs_node(topo), _ar_lane_int8(topo), _ag_node(topo)))
-        return _unflatten_bucket(jnp.concatenate(parts) / nrep, spec)
-
-    if strategy == "lane_zero1":
-        parts = bucket_schedule(
-            flat, K,
-            (_rs_node(topo), lambda v: lax.psum(v, topo.lane_axis) / nrep))
-        return jnp.concatenate(parts), spec   # caller owns the deferred AG
-
-    if strategy == "lane_zero3":
-        parts = bucket_schedule(
-            flat, K,
-            (_rs_node(topo), lambda v: lax.psum_scatter(
-                v, topo.lane_axis, scatter_dimension=0, tiled=True) / nrep))
-        return jnp.concatenate(parts), spec   # 1/p stripe; layer prefetch
-        # re-gathers during the next forward (launch/steps.py)
+    from repro._deprecation import warn_once
+    from repro.comm import CommConfig, LaneComm
+    warn_once(
+        "repro.optim.gradsync.grad_sync",
+        "grad_sync(grads, topo, strategy) is deprecated; construct "
+        "repro.comm.LaneComm(topo, CommConfig(...)) once and call "
+        "comm.grad_sync(grads, strategy=...) — strategies now resolve "
+        "through the repro.comm registry")
+    comm = LaneComm(topo, CommConfig(strategy=strategy,
+                                     buckets=num_buckets))
+    return comm.grad_sync(grads, strategy=strategy, num_buckets=num_buckets)

@@ -1,5 +1,11 @@
 """Conformance grid for EVERY lane collective (paper §3, Listings 1-6).
 
+All cases drive the collectives through the :class:`repro.comm.LaneComm`
+communicator object (strategy="lane"), so the grid conformance-tests the
+registry dispatch path end to end — plus dedicated cases pinning that
+the DEPRECATED entry points (``optim.gradsync.grad_sync``, direct
+``pipelined_allreduce_lane``) stay bit-identical to the LaneComm path.
+
 Where ``collective_cases`` hand-picks representative scenarios, this
 module *generates* a dense grid: each of the lane collectives
 (bcast/reduce/scan/gather/scatter/alltoall plus allreduce/RS/AG) against
@@ -27,11 +33,8 @@ import jax                    # noqa: E402
 import jax.numpy as jnp       # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import (      # noqa: E402
-    LaneTopology, allreduce_lane, reduce_scatter_lane, allgather_lane,
-    bcast_lane, alltoall_lane, reduce_lane, gather_lane, scatter_lane,
-    scan_lane,
-)
+from repro.comm import CommConfig, LaneComm  # noqa: E402
+from repro.core import LaneTopology  # noqa: E402
 from repro.core import ref as _ref  # noqa: E402
 
 
@@ -113,95 +116,116 @@ def _replicate_root_node(xs, root_lane, n):
 # ---------------------------------------------------------------------------
 # m (rows per divisibility unit) is odd everywhere — the grid's payloads
 # are exactly the minimal-divisibility sizes, never "nice" powers of two.
+# Every builder goes through LaneComm with the explicit "lane" strategy:
+# the registry dispatch is part of what the grid certifies.
 
 def _b_allreduce(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3 * n, 2, dt, seed)
-    out = _run(mesh, topo, lambda x: allreduce_lane(x, topo), xs, dt)
+    out = _run(mesh, topo, lambda x: comm.allreduce(x, strategy="lane"),
+               xs, dt)
     _check(out, _ref.oracle_allreduce(xs), dt)
 
 
 def _b_reduce_scatter(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     p = n * N
     xs = _payload(p, 3 * p, 2, dt, seed)
-    out = _run(mesh, topo, lambda x: reduce_scatter_lane(x, topo), xs, dt)
+    out = _run(mesh, topo, lambda x: comm.reduce_scatter(x, strategy="lane"),
+               xs, dt)
     _check(out, _ref.oracle_reduce_scatter(xs), dt)
 
 
 def _b_allgather(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3, 2, dt, seed)
-    out = _run(mesh, topo, lambda x: allgather_lane(x, topo), xs, dt)
+    out = _run(mesh, topo, lambda x: comm.allgather(x, strategy="lane"),
+               xs, dt)
     _check(out, _ref.oracle_allgather(xs), dt)
 
 
 def _b_bcast(mesh, topo, dt, seed, root_lane=0):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _replicate_root_node(_payload(n * N, 3 * n, 2, dt, seed),
                               root_lane, n)
     out = _run(mesh, topo,
-               lambda x: bcast_lane(x, topo, root_lane=root_lane), xs, dt)
+               lambda x: comm.bcast(x, strategy="lane",
+                                    root_lane=root_lane), xs, dt)
     _check(out, _ref.oracle_bcast(xs, root=root_lane * n), dt)
 
 
 def _b_bcast_unreplicated(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3 * n, 2, dt, seed)
     out = _run(mesh, topo,
-               lambda x: bcast_lane(x, topo, root_replicated=False), xs, dt)
+               lambda x: comm.bcast(x, strategy="lane",
+                                    root_replicated=False), xs, dt)
     _check(out, _ref.oracle_bcast(xs, root=0), dt)
 
 
 def _b_reduce(mesh, topo, dt, seed, root_lane=0, root_node=0):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3 * n, 2, dt, seed)
     out = _run(mesh, topo,
-               lambda x: reduce_lane(x, topo, root_lane=root_lane,
+               lambda x: comm.reduce(x, strategy="lane", root_lane=root_lane,
                                      root_node=root_node), xs, dt)
     _check(out, _ref.oracle_reduce(xs, root=root_lane * n + root_node), dt)
 
 
 def _b_scan(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3 * n, 2, dt, seed)
-    out = _run(mesh, topo, lambda x: scan_lane(x, topo), xs, dt)
+    out = _run(mesh, topo, lambda x: comm.scan(x, strategy="lane"), xs, dt)
     _check(out, _ref.oracle_scan(xs), dt)
 
 
 def _b_gather(mesh, topo, dt, seed, root_lane=0, root_node=0):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     xs = _payload(n * N, 3, 2, dt, seed)
     out = _run(mesh, topo,
-               lambda x: gather_lane(x, topo, root_lane=root_lane,
+               lambda x: comm.gather(x, strategy="lane", root_lane=root_lane,
                                      root_node=root_node), xs, dt)
     _check(out, _ref.oracle_gather(xs, root=root_lane * n + root_node), dt)
 
 
 def _b_scatter(mesh, topo, dt, seed, root_lane=0):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     p = n * N
     xs = _replicate_root_node(_payload(p, 3 * p, 2, dt, seed), root_lane, n)
     out = _run(mesh, topo,
-               lambda x: scatter_lane(x, topo, root_lane=root_lane), xs, dt)
+               lambda x: comm.scatter(x, strategy="lane",
+                                      root_lane=root_lane), xs, dt)
     _check(out, _ref.oracle_scatter(xs, root=root_lane * n), dt)
 
 
 def _b_scatter_unreplicated(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     p = n * N
     xs = _payload(p, 3 * p, 2, dt, seed)
     out = _run(mesh, topo,
-               lambda x: scatter_lane(x, topo, root_replicated=False),
+               lambda x: comm.scatter(x, strategy="lane",
+                                      root_replicated=False),
                xs, dt)
     _check(out, _ref.oracle_scatter(xs, root=0), dt)
 
 
 def _b_alltoall(mesh, topo, dt, seed):
     n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
     p = n * N
     xs = _payload(p, 3 * p, 2, dt, seed)
-    out = _run(mesh, topo, lambda x: alltoall_lane(x, topo), xs, dt)
+    out = _run(mesh, topo, lambda x: comm.alltoall(x, strategy="lane"),
+               xs, dt)
     _check(out, _ref.oracle_alltoall(xs), dt)
 
 
@@ -278,29 +302,131 @@ _add("scatter", "t2", "f32", 213, suffix="_unreplicated",
 
 # divisibility preconditions: a leading dim that violates the mock-up's
 # contract must raise ValueError at trace time, not silently misshard
-def _expect_value_error(topo_key, fn, rows):
+# (the explicit-strategy dispatch path must NOT swallow them either)
+def _expect_value_error(topo_key, coll, rows):
     mesh, topo = _make(topo_key)
+    comm = LaneComm(topo, mesh=mesh)
     n, N = topo.sizes(mesh)
     xs = _payload(n * N, rows, 2, "f32", 99)
     try:
-        _run(mesh, topo, lambda x: fn(x, topo), xs, "f32")
+        _run(mesh, topo,
+             lambda x: getattr(comm, coll)(x, strategy="lane"), xs, "f32")
     except ValueError:
         return
-    raise AssertionError(f"{fn.__name__} accepted indivisible rows={rows}")
+    raise AssertionError(f"{coll} accepted indivisible rows={rows}")
 
 
 _register("allreduce_indivisible_raises__t2",
-          lambda: _expect_value_error("t2", allreduce_lane, 3))     # n=2∤3
+          lambda: _expect_value_error("t2", "allreduce", 3))        # n=2∤3
 _register("alltoall_indivisible_raises__t2",
-          lambda: _expect_value_error("t2", alltoall_lane, 12))     # p=8∤12
+          lambda: _expect_value_error("t2", "alltoall", 12))        # p=8∤12
 _register("scatter_indivisible_raises__t2",
-          lambda: _expect_value_error("t2", scatter_lane, 12))
+          lambda: _expect_value_error("t2", "scatter", 12))
 _register("reduce_scatter_indivisible_raises__t2",
-          lambda: _expect_value_error("t2", reduce_scatter_lane, 12))
+          lambda: _expect_value_error("t2", "reduce_scatter", 12))
 _register("bcast_indivisible_raises__t3",
-          lambda: _expect_value_error("t3", bcast_lane, 3))         # n=4∤3
+          lambda: _expect_value_error("t3", "bcast", 3))            # n=4∤3
 _register("scan_indivisible_raises__t3",
-          lambda: _expect_value_error("t3", scan_lane, 5))
+          lambda: _expect_value_error("t3", "scan", 5))
+
+
+# an unknown strategy must fail with the REGISTRY's list (derived, not
+# hard-coded), before any tracing happens
+def _unknown_strategy_lists_registry():
+    from repro.comm import strategies_for
+    mesh, topo = _make("t2")
+    comm = LaneComm(topo, mesh=mesh)
+    xs = _payload(8, 2, 2, "f32", 98)
+    try:
+        _run(mesh, topo,
+             lambda x: comm.allreduce(x, strategy="lane_future"), xs, "f32")
+    except ValueError as e:
+        msg = str(e)
+        assert "lane_future" in msg and "registered strategies" in msg, msg
+        for s in strategies_for("allreduce"):
+            assert s in msg, (s, msg)
+        return
+    raise AssertionError("unknown strategy was dispatched")
+
+
+_register("comm_unknown_strategy_lists_registry__t2",
+          _unknown_strategy_lists_registry)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: every legacy entry point must stay BIT-identical to
+# the LaneComm path (they delegate to the same registered impl; these
+# cases pin that the delegation itself doesn't drift)
+# ---------------------------------------------------------------------------
+
+def _b_gradsync_shim_bitident(strategy, num_buckets=3, topo_key="t3"):
+    import warnings
+
+    def run():
+        from repro.optim import grad_sync
+        mesh, topo = _make(topo_key)
+        # the gradsync topology treats only "data" as the node level
+        topo = LaneTopology(node_axes=(topo.node_axes[0],),
+                            lane_axis=topo.lane_axis)
+        comm = LaneComm(topo, CommConfig(strategy=strategy,
+                                         buckets=num_buckets), mesh=mesh)
+        n, N = topo.sizes(mesh)
+        xs = _payload(n * N, 37, 2, "f32", 97)  # odd rows: padding active
+
+        def both(x):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                legacy = grad_sync(x, topo, strategy,
+                                   num_buckets=num_buckets)
+            new = comm.grad_sync(x, strategy=strategy,
+                                 num_buckets=num_buckets)
+            if isinstance(legacy, tuple):      # ZeRO: (shard, spec)
+                return legacy[0], new[0]
+            return legacy, new
+
+        spec = P((topo.lane_axis, *topo.node_axes))
+        flat = jnp.asarray(xs.reshape(-1, 2), jnp.float32)
+        arr = jax.device_put(flat, jax.sharding.NamedSharding(mesh, spec))
+        sm = jax.shard_map(both, mesh=mesh, in_specs=spec,
+                           out_specs=(P(), P()), check_vma=False)
+        legacy, new = jax.jit(sm)(arr)
+        np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+    return run
+
+
+for _strategy in ("native", "lane", "lane_pipelined", "lane_int8",
+                  "lane_zero1", "lane_zero3"):
+    _register(f"gradsync_shim_bitident_{_strategy}__t3",
+              _b_gradsync_shim_bitident(_strategy))
+
+
+def _pipelined_allreduce_shim_bitident():
+    import warnings
+    from repro.core.pipeline import pipelined_allreduce_lane
+    mesh, topo = _make("t2")
+    comm = LaneComm(topo, mesh=mesh)
+    n, N = topo.sizes(mesh)
+    B = 3
+    xs = _payload(n * N, B * n * 2, 2, "f32", 96)
+
+    def both(x):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = pipelined_allreduce_lane(x, topo, num_blocks=B)
+        new = comm.allreduce(x, strategy="lane_pipelined", num_blocks=B)
+        return legacy, new
+
+    spec = P((topo.lane_axis, *topo.node_axes))
+    flat = jnp.asarray(xs.reshape(-1, 2), jnp.float32)
+    arr = jax.device_put(flat, jax.sharding.NamedSharding(mesh, spec))
+    sm = jax.shard_map(both, mesh=mesh, in_specs=spec,
+                       out_specs=(P(), P()), check_vma=False)
+    legacy, new = jax.jit(sm)(arr)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+
+_register("pipelined_allreduce_shim_bitident__t2",
+          _pipelined_allreduce_shim_bitident)
 
 
 def main(argv):

@@ -1,0 +1,125 @@
+"""Public-surface lock for ``repro.comm`` (satellite: CI/tooling).
+
+Snapshot of the exported names AND their signatures: any addition,
+removal, or signature change to the communicator API must edit this file
+deliberately — the point of an API redesign is that the surface stops
+drifting by accident.  Wired into ``make ci`` (tier1 plus its own
+``api-surface`` leg).
+
+The snapshot strings are ``str(inspect.signature(...))`` with
+``from __future__ import annotations``-style quoting, exactly as the
+modules produce them.
+"""
+import inspect
+
+import repro.comm as comm
+
+EXPECTED_EXPORTS = {
+    "LaneComm":
+        "(topo: 'LaneTopology', cfg: 'Optional[CommConfig]' = None, *, "
+        "mesh=None)",
+    "CommConfig":
+        "(strategy: 'str' = 'auto', buckets: 'int' = 0, prefetch_blocks: "
+        "'int' = 0, compression: 'str' = 'none', record_selections: 'bool' "
+        "= True) -> None",
+    "Selection":
+        "(collective: 'str', strategy: 'str', payload_bytes: 'int', "
+        "ranking: 'tuple') -> None",
+    "ImplEntry":
+        "(collective: 'str', strategy: 'str', fn: 'Callable', cost: "
+        "'Optional[Callable]' = None, auto_ok: 'bool' = True, feasible: "
+        "'Optional[Callable]' = None) -> None",
+    "register_impl":
+        "(collective: 'str', strategy: 'str', *, cost: 'Optional[Callable]'"
+        " = None, auto_ok: 'bool' = True, feasible: 'Optional[Callable]' = "
+        "None, override: 'bool' = False) -> 'Callable'",
+    "get_impl": "(collective: 'str', strategy: 'str') -> 'ImplEntry'",
+    "has_impl": "(collective: 'str', strategy: 'str') -> 'bool'",
+    "iter_impls": "(collective: 'str') -> 'tuple[ImplEntry, ...]'",
+    "strategies_for": "(collective: 'str') -> 'tuple[str, ...]'",
+    "registered_collectives": "() -> 'tuple[str, ...]'",
+}
+
+EXPECTED_LANECOMM_METHODS = {
+    "__init__":
+        "(self, topo: 'LaneTopology', cfg: 'Optional[CommConfig]' = None, "
+        "*, mesh=None)",
+    "sizes": "(self) -> 'tuple[int, int]'",
+    "select":
+        "(self, collective: 'str', payload_bytes: 'int', *, n: "
+        "'Optional[int]' = None, N: 'Optional[int]' = None, lead: "
+        "'Optional[int]' = None) -> 'tuple[str, tuple]'",
+    "allreduce": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "reduce_scatter": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "allgather": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "bcast": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "alltoall": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "reduce": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "gather": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "scatter": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "scan": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "grad_sync":
+        "(self, grads, *, strategy: 'Optional[str]' = None, num_buckets: "
+        "'Optional[int]' = None)",
+    "prefetch_allgather":
+        "(self, shard, *, strategy: 'Optional[str]' = None, num_blocks: "
+        "'Optional[int]' = None)",
+}
+
+# the registered strategy tables are surface too: a lost registration is
+# an API break for every consumer that names the strategy
+EXPECTED_STRATEGIES = {
+    "allreduce": ("native", "lane", "lane_pipelined"),
+    "reduce_scatter": ("native", "lane"),
+    "allgather": ("native", "lane"),
+    "alltoall": ("native", "lane"),
+    "scan": ("native", "lane"),
+    "bcast": ("native", "lane", "lane_pipelined"),
+    "reduce": ("native", "lane", "lane_pipelined"),
+    "gather": ("native", "lane"),
+    "scatter": ("native", "lane"),
+    "grad_sync": ("native", "lane", "lane_pipelined", "lane_int8",
+                  "lane_zero1", "lane_zero3"),
+    "prefetch_allgather": ("lane_pipelined", "blocking"),
+}
+
+
+def test_exported_names_locked():
+    assert set(comm.__all__) == set(EXPECTED_EXPORTS)
+    # everything in __all__ resolves, nothing extra leaks a signature drift
+    for name, sig in EXPECTED_EXPORTS.items():
+        assert str(inspect.signature(getattr(comm, name))) == sig, name
+
+
+def test_lanecomm_method_surface_locked():
+    public = {n for n in vars(comm.LaneComm)
+              if not n.startswith("_") or n == "__init__"}
+    public.discard("last_selection")            # property, checked below
+    assert public == set(EXPECTED_LANECOMM_METHODS)
+    for name, sig in EXPECTED_LANECOMM_METHODS.items():
+        got = str(inspect.signature(getattr(comm.LaneComm, name)))
+        assert got == sig, (name, got)
+    assert isinstance(inspect.getattr_static(comm.LaneComm,
+                                             "last_selection"), property)
+
+
+def test_registered_strategy_tables_locked():
+    import repro.launch.steps  # noqa: F401 - registers train_step flavors
+    for coll, strategies in EXPECTED_STRATEGIES.items():
+        assert comm.strategies_for(coll) == strategies, coll
+    assert comm.strategies_for("train_step") == (
+        "native", "lane", "lane_pipelined", "lane_int8", "auto",
+        "lane_zero1", "lane_zero3")
+    assert set(comm.registered_collectives()) == \
+        set(EXPECTED_STRATEGIES) | {"train_step"}
+
+
+def test_auto_eligibility_locked():
+    """Lossy / layout-changing impls must never become auto-selectable
+    without a deliberate edit here."""
+    entries = {e.strategy: e for e in comm.iter_impls("grad_sync")}
+    assert {s for s, e in entries.items() if e.auto_ok and e.cost} == \
+        {"native", "lane", "lane_pipelined"}
+    assert not entries["lane_int8"].auto_ok
+    assert not entries["lane_zero1"].auto_ok
+    assert not entries["lane_zero3"].auto_ok

@@ -1,0 +1,357 @@
+"""Single-device tests for the repro.comm communicator API: registry
+contract, cost-model auto-dispatch ranking, CommConfig bridging, the
+deprecation shims' exactly-once warning + bit-identity, and the sharded
+AdamW parity fix (satellites).  Multi-device behavior runs in the
+subprocess suites (collective/conformance cases)."""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro._deprecation import reset_warned
+from repro.comm import (CommConfig, LaneComm, get_impl, has_impl,
+                        iter_impls, register_impl, strategies_for)
+from repro.core import LaneTopology
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+def test_unknown_strategy_error_derives_from_registry():
+    with pytest.raises(ValueError) as ei:
+        get_impl("grad_sync", "lane_future")
+    msg = str(ei.value)
+    assert "registered strategies" in msg
+    for s in strategies_for("grad_sync"):
+        assert s in msg
+
+
+def test_unknown_collective_lists_collectives():
+    with pytest.raises(ValueError, match="registered collectives"):
+        get_impl("allfuture", "lane")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_impl("grad_sync", "native")(lambda comm, x: x)
+    # override is the deliberate escape hatch
+    orig = get_impl("grad_sync", "native")
+    try:
+        register_impl("grad_sync", "native", override=True)(
+            lambda comm, x: x)
+        assert get_impl("grad_sync", "native").fn is not orig.fn
+    finally:
+        register_impl("grad_sync", "native", cost=orig.cost,
+                      auto_ok=orig.auto_ok, feasible=orig.feasible,
+                      override=True)(orig.fn)
+
+
+def test_strategies_tuple_is_lazy_registry_view():
+    from repro.optim import gradsync
+    assert gradsync.STRATEGIES == strategies_for("grad_sync")
+    with pytest.raises(AttributeError):
+        gradsync.NOPE
+
+
+def test_runconfig_docstring_derives_strategy_list():
+    from repro.configs.base import RunConfig
+    for s in strategies_for("grad_sync"):
+        assert s in RunConfig.__doc__
+    assert "auto" in RunConfig.__doc__
+
+
+# ---------------------------------------------------------------------------
+# cost-model auto-dispatch (pure ranking — no devices needed)
+# ---------------------------------------------------------------------------
+
+def _comm(**cfg):
+    return LaneComm(LaneTopology(node_axes=("data",), lane_axis="pod"),
+                    CommConfig(**cfg))
+
+
+def test_select_small_payload_prefers_unpipelined_lane():
+    # below the §5 crossover pipelining pays pure latency
+    best, ranking = _comm().select("allreduce", 16 << 10, n=2, N=2)
+    assert best == "lane"
+    assert [t for t, _ in ranking] == sorted(t for t, _ in ranking)
+
+
+def test_select_large_payload_prefers_pipelined():
+    best, _ = _comm().select("allreduce", 32 << 20, n=2, N=2)
+    assert best == "lane_pipelined"
+    best, _ = _comm().select("grad_sync", 32 << 20, n=2, N=2)
+    assert best == "lane_pipelined"
+
+
+def test_select_excludes_lossy_and_layout_changing():
+    _, ranking = _comm().select("grad_sync", 1 << 20, n=2, N=2)
+    names = {s for _, s in ranking}
+    assert names == {"native", "lane", "lane_pipelined"}
+
+
+def test_select_respects_feasibility():
+    # lead not divisible by n: the lane decompositions are skipped
+    best, ranking = _comm().select("allreduce", 12, n=2, N=2, lead=3)
+    assert best == "native" and {s for _, s in ranking} == {"native"}
+
+
+def test_select_single_node_native_beats_lane():
+    # N=1: the lane phase is a phantom (2 DCN alphas for nothing)
+    _, ranking = _comm().select("allreduce", 1 << 20, n=8, N=1)
+    cost = {s: t for t, s in ranking}
+    assert cost["native"] < cost["lane"]
+
+
+def test_select_deterministic():
+    a = _comm().select("grad_sync", 123456, n=4, N=2)
+    b = _comm().select("grad_sync", 123456, n=4, N=2)
+    assert a == b
+
+
+def test_bucket_override_enters_pipelined_cost():
+    # a forced giant K makes the pipelined model pay K alphas
+    loose = _comm(buckets=64).select("allreduce", 16 << 10, n=2, N=2)[1]
+    tight = _comm().select("allreduce", 16 << 10, n=2, N=2)[1]
+    assert {s: t for t, s in loose}["lane_pipelined"] > \
+        {s: t for t, s in tight}["lane_pipelined"]
+
+
+# ---------------------------------------------------------------------------
+# CommConfig bridging
+# ---------------------------------------------------------------------------
+
+def test_commconfig_from_run():
+    from repro.configs import resolve
+    from repro.configs.base import RunConfig, SHAPES
+    run = RunConfig(model=resolve("llama3.2-3b", smoke=True),
+                    shape=SHAPES["train_4k"], gradsync="lane_int8",
+                    gradsync_buckets=7, fsdp_prefetch=-1)
+    cfg = CommConfig.from_run(run)
+    assert cfg.strategy == "lane_int8" and cfg.buckets == 7
+    assert cfg.prefetch_blocks == -1 and cfg.compression == "int8"
+
+
+def test_commconfig_rejects_unknown_compression():
+    with pytest.raises(ValueError, match="compression"):
+        CommConfig(compression="fp4")
+
+
+def test_commconfig_rejects_typod_strategy():
+    # a typo'd default strategy must fail at CONSTRUCTION, not silently
+    # fall back to auto at dispatch time
+    with pytest.raises(ValueError, match="not registered"):
+        CommConfig(strategy="lane_pipelinde")
+    # any name registered for SOME collective is a valid default
+    CommConfig(strategy="blocking")
+    CommConfig(strategy="lane_zero3")
+
+
+def test_prefetch_explicit_num_blocks_is_strict():
+    """An explicit num_blocks names a committed shard layout: an
+    indivisible value must raise (silent shrinking would reassemble a
+    permuted weight vector), unlike the auto path which may clamp."""
+    mesh, topo = _tiny_mesh()
+    comm = LaneComm(topo, mesh=mesh)
+    x = jnp.arange(8, dtype=jnp.float32)
+    sm = jax.shard_map(lambda s: comm.prefetch_allgather(s, num_blocks=3),
+                       mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)
+    with pytest.raises(ValueError, match="not divisible"):
+        jax.jit(sm)(x)
+    # the auto path on the same shard resolves a feasible B instead
+    sm_auto = jax.shard_map(lambda s: comm.prefetch_allgather(s),
+                            mesh=mesh, in_specs=P(), out_specs=P(),
+                            check_vma=False)
+    np.testing.assert_array_equal(np.asarray(jax.jit(sm_auto)(x)),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_prefetch_default_strategy_follows_blocking_knob():
+    assert _comm(prefetch_blocks=-1)._default_strategy(
+        "prefetch_allgather") == "blocking"
+    assert _comm()._default_strategy("prefetch_allgather") == \
+        "lane_pipelined"
+    # a cfg strategy not registered for a collective falls back to auto
+    assert _comm(strategy="lane_zero3")._default_strategy("allreduce") == \
+        "auto"
+    assert has_impl("grad_sync", "lane_zero3")
+    assert _comm(strategy="lane_zero3")._default_strategy("grad_sync") == \
+        "lane_zero3"
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: exactly-once warning + bit-identity (satellite)
+# ---------------------------------------------------------------------------
+
+def _tiny_mesh():
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    return mesh, topo
+
+
+def test_grad_sync_shim_warns_exactly_once_and_matches_comm():
+    from repro.optim import grad_sync
+    mesh, topo = _tiny_mesh()
+    comm = LaneComm(topo, mesh=mesh)
+    x = jnp.arange(8, dtype=jnp.float32)
+
+    def legacy(g):
+        return grad_sync(g, topo, "lane")
+
+    def modern(g):
+        return comm.grad_sync(g, strategy="lane")
+
+    def run(f, tag):
+        sm = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_vma=False)
+        return np.asarray(jax.jit(sm)(x))
+
+    reset_warned()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out1 = run(legacy, "a")
+        out2 = run(legacy, "b")       # second trace: latch must hold
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)
+                and "grad_sync" in str(x.message)]
+    assert len(deps) == 1, [str(d.message) for d in deps]
+    assert "repro.comm.LaneComm" in str(deps[0].message)
+    np.testing.assert_array_equal(out1, out2)
+    np.testing.assert_array_equal(out1, run(modern, "c"))  # bit-identical
+
+
+def test_pipelined_allreduce_shim_warns_exactly_once_and_matches_comm():
+    from repro.core.pipeline import pipelined_allreduce_lane
+    mesh, topo = _tiny_mesh()
+    comm = LaneComm(topo, mesh=mesh)
+    x = jnp.arange(6, dtype=jnp.float32)
+
+    def run(f):
+        sm = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_vma=False)
+        return np.asarray(jax.jit(sm)(x))
+
+    reset_warned()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out1 = run(lambda g: pipelined_allreduce_lane(g, topo,
+                                                      num_blocks=2))
+        out2 = run(lambda g: pipelined_allreduce_lane(g, topo,
+                                                      num_blocks=3))
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)
+                and "pipelined_allreduce_lane" in str(x.message)]
+    assert len(deps) == 1, [str(d.message) for d in deps]
+    np.testing.assert_array_equal(
+        out1, run(lambda g: comm.allreduce(g, strategy="lane_pipelined",
+                                           num_blocks=2)))
+    np.testing.assert_array_equal(
+        out2, run(lambda g: comm.allreduce(g, strategy="lane_pipelined",
+                                           num_blocks=3)))
+
+
+def test_auto_dispatch_records_selection_at_trace_time():
+    mesh, topo = _tiny_mesh()
+    comm = LaneComm(topo, CommConfig(strategy="auto"), mesh=mesh)
+    x = jnp.arange(8, dtype=jnp.float32)
+    sm = jax.shard_map(lambda g: comm.grad_sync(g), mesh=mesh,
+                       in_specs=P(), out_specs=P(), check_vma=False)
+    out = np.asarray(jax.jit(sm)(x))
+    sel = comm.last_selection
+    assert sel is not None and sel.collective == "grad_sync"
+    assert sel.payload_bytes == 32
+    # n=N=1: whatever wins must still BE the recorded ranking argmin
+    assert sel.strategy == sel.ranking[0][1]
+    np.testing.assert_allclose(out, np.arange(8, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sharded-AdamW parity (satellite: _adamw_flat fix, single-device algebra)
+# ---------------------------------------------------------------------------
+
+def test_adamw_flat_matches_tree_update_with_clipping_and_decay():
+    """With the true global-norm scale and the decay mask, the flat
+    sharded AdamW reproduces adamw_update element-for-element — clipping
+    ACTIVE and matrices-only weight decay."""
+    from repro.launch.steps import _adamw_flat
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    from repro.optim.adamw import global_norm
+    from repro.optim.gradsync import (_flatten_bucket, _unflatten_bucket,
+                                      decay_mask_flat)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32),
+              "g": jnp.asarray(rng.normal(size=(9,)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(6, 4)) * 3, jnp.float32),
+             "g": jnp.asarray(rng.normal(size=(9,)) * 3, jnp.float32)}
+    opt = AdamWConfig(clip_norm=0.5, weight_decay=0.1)   # clipping ACTIVE
+    want, _ = adamw_update(opt, grads, adamw_init(params), params)
+
+    gflat, spec = _flatten_bucket(grads, pad_to=7)       # padding exercised
+    pflat, pspec = _flatten_bucket(params, pad_to=7)
+    mask = decay_mask_flat(params, pad_to=7)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+    state = {"m": jnp.zeros_like(gflat), "v": jnp.zeros_like(gflat),
+             "count": jnp.zeros((), jnp.int32)}
+    newp, nst = _adamw_flat(opt, gflat, state, pflat, scale=scale,
+                            decay_mask=mask)
+    got = _unflatten_bucket(newp, pspec)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(got[k]),
+                                   np.asarray(want[k]), rtol=1e-6,
+                                   atol=1e-7, err_msg=k)
+    # the moments pin the clip SCALE (params alone are ~scale-invariant
+    # through m/√v): m must equal the clipped-gradient first moment
+    _, wantst = adamw_update(opt, grads, adamw_init(params), params)
+    mflatN, _ = _flatten_bucket(wantst["m"], pad_to=7)
+    np.testing.assert_allclose(np.asarray(nst["m"]), np.asarray(mflatN),
+                               rtol=1e-6, atol=1e-8)
+    # without the mask the 1-D leaf would be (wrongly) decayed — guard
+    # that the mask is actually doing work in this fixture (the warmup
+    # lr at step 1 is ~3e-6, so the spurious decay is lr·wd·|p| ~ 1e-7)
+    newp_nomask, _ = _adamw_flat(opt, gflat, state, pflat, scale=scale)
+    got_nomask = _unflatten_bucket(newp_nomask, pspec)
+    assert np.abs(np.asarray(got_nomask["g"])
+                  - np.asarray(want["g"])).max() > 1e-8
+
+
+def test_adamw_update_accepts_external_grad_norm():
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    from repro.optim.adamw import global_norm
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(4, 4)) * 5, jnp.float32)}
+    opt = AdamWConfig(clip_norm=0.3)
+    a, sa = adamw_update(opt, grads, adamw_init(params), params)
+    b, sb = adamw_update(opt, grads, adamw_init(params), params,
+                         grad_norm=global_norm(grads))
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    # a DIFFERENT norm must change the clip scale — visible in the
+    # moments (the step-1 param delta is scale-invariant: m/√v cancels)
+    _, sc = adamw_update(opt, grads, adamw_init(params), params,
+                         grad_norm=global_norm(grads) * 10)
+    np.testing.assert_array_equal(np.asarray(sa["m"]["w"]),
+                                  np.asarray(sb["m"]["w"]))
+    assert np.abs(np.asarray(sa["m"]["w"])
+                  - np.asarray(sc["m"]["w"])).max() > 0
+
+
+def test_decay_mask_flat_layout():
+    from repro.optim.gradsync import decay_mask_flat
+    tree = {"a": jnp.zeros((2, 3)), "b": jnp.zeros((4,)),
+            "c": jnp.zeros((1, 1, 2))}
+    m = np.asarray(decay_mask_flat(tree, pad_to=5))
+    # _flatten_bucket order is jax.tree.flatten order: a, b, c; pad to 15
+    want = np.concatenate([np.ones(6), np.zeros(4), np.ones(2),
+                           np.zeros(3)])
+    np.testing.assert_array_equal(m, want)
+
+
+def test_impl_entries_have_feasibility_where_divisibility_matters():
+    feas = {e.strategy: e.feasible for e in iter_impls("allreduce")}
+    assert feas["native"] is None
+    assert feas["lane"] is not None and feas["lane"](2, 2, 3) is False
+    assert feas["lane"](2, 2, 4) is True

@@ -445,16 +445,21 @@ def test_bench_schema_flags_missing_strategy():
     import sys, pathlib
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     from benchmarks.check_bench_schema import check, REQUIRED_STRATEGIES
-    row = {"strategy": "native", "num_buckets": 0, "avg_us": 1.0,
-           "min_us": 1.0, "max_abs_err_vs_native": 0.0,
+    from repro.comm import strategies_for
+    # the requirement is DERIVED from the registry (satellite contract):
+    # a silently-unregistered impl shrinks neither list unnoticed
+    assert REQUIRED_STRATEGIES == set(strategies_for("grad_sync")) | {"auto"}
+    row = {"strategy": "native", "selected": "native", "num_buckets": 0,
+           "avg_us": 1.0, "min_us": 1.0, "max_abs_err_vs_native": 0.0,
            "model_pred_us": 1.0, "hlo_concurrent": False,
            "hlo_concurrent_pairs": 0}
     doc = {"mesh": "2x4", "payload_elems": 1, "payload_bytes": 4,
            "auto_num_buckets": 1, "cost_model": {}, "smoke": True,
            "reps": 1, "hlo_per_computation": {}, "structure_ok": True,
+           "strategies_registered": sorted(REQUIRED_STRATEGIES - {"auto"}),
            "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES]}
     assert check(doc) == []
-    # dropping any required strategy fails the build
+    # dropping any required strategy (incl. the auto row) fails the build
     for s in REQUIRED_STRATEGIES:
         bad = dict(doc, results=[r for r in doc["results"]
                                  if r["strategy"] != s])
@@ -462,8 +467,9 @@ def test_bench_schema_flags_missing_strategy():
         assert errs and "stopped emitting" in errs[0], (s, errs)
     # a regressed structural check fails too
     assert check(dict(doc, structure_ok=False))
-    # a full (non-smoke) run must also carry lane_int8
-    assert check(dict(doc, smoke=False))
+    # a bench emitted against a stale (now-unregistered) strategy is caught
+    assert any("no longer matches" in e for e in check(
+        dict(doc, strategies_registered=["lane_future"])))
     # and a row losing a field is caught
     broken = dict(doc, results=doc["results"][:1]
                   + [dict(doc["results"][1])])
