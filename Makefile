@@ -18,11 +18,18 @@
 #   bench-schema  — fails the build if the benchmark silently stopped
 #                   emitting a strategy or a row field; the required
 #                   strategy list derives from the repro.comm registry
+#   train-smoke   — drives the TRAINING DRIVER (launch/train.py) across
+#                   every registered gradsync strategy on the 8-device
+#                   multi-pod CPU mesh with a save→restore round-trip,
+#                   so a strategy the driver can't actually serve fails
+#                   the build (the strategy list derives from the
+#                   registry; incl. auto and the ZeRO layouts)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema test
+.PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema \
+	train-smoke test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -54,4 +61,8 @@ bench:
 bench-schema:
 	$(PY) -m benchmarks.check_bench_schema
 
-ci: tier1 props-det api-surface bench-smoke bench-schema
+# sets its own 8-device flag internally (before jax import)
+train-smoke:
+	$(PY) -m repro.launch.train_smoke
+
+ci: tier1 props-det api-surface bench-smoke bench-schema train-smoke

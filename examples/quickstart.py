@@ -23,9 +23,14 @@ from repro.launch.train import main as train_main             # noqa: E402
 def main():
     ckpt = "/tmp/repro_quickstart_ckpt"
     print("=== 1. train a reduced llama3.2 on synthetic tokens ===")
+    # --gradsync accepts every strategy in the repro.comm train_step
+    # registry ("auto" = cost-model dispatch; on a single device it
+    # degrades to the native one-shot psum).  On a multi-pod mesh add
+    # e.g. --gradsync lane_zero3 --pods 2 for the sharded-master FSDP
+    # path — checkpoints stay restorable across chip counts either way.
     train_main(["--arch", "llama3.2-3b", "--smoke", "--steps", "60",
                 "--batch", "8", "--seq", "64", "--ckpt", ckpt,
-                "--log-every", "15"])
+                "--log-every", "15", "--gradsync", "auto"])
 
     print("\n=== 2. restore + greedy generation ===")
     from repro.checkpoint import restore_checkpoint

@@ -1,2 +1,4 @@
+from .layouts import (CheckpointLayout, Zero1CheckpointLayout,
+                      Zero3CheckpointLayout, REPLICATED)
 from .store import save_checkpoint, restore_checkpoint, latest_step, \
     AsyncCheckpointer

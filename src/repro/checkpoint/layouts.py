@@ -1,0 +1,207 @@
+"""Checkpoint shard-layout adapters: canonical on disk, sharded in HBM.
+
+The ZeRO train steps keep their master state in topology-dependent
+layouts — ZeRO-1 moments as a node-sharded bucket-major flat vector,
+ZeRO-3 layer stacks in the (L, B, p, s) master layout of
+``launch.steps.zero3_shard_blocks`` — and B, p and the padding all change
+when the mesh changes.  A checkpoint that stored those arrays verbatim
+would only restore onto the exact chip count that wrote it, which is the
+opposite of what an elastic fleet needs (Träff's k-lane follow-up:
+decompositions must survive topology change).
+
+So the store canonicalizes: every master leaf is written in a
+topology-FREE canonical form (the unpadded flat element order of the
+parameter tree — exactly the order ``gradsync.zero1_unshard`` /
+``gradsync.zero3_unshard`` reassemble on-device, pinned bit-for-bit by
+the ``*_ckpt_canonical_matches_unshard`` conformance cases), and restore
+re-pads and re-shapes into the layout of the CURRENT mesh.  Both
+directions are pure reshapes/transposes of host numpy arrays — no float
+is ever converted, so a checkpoint written at p chips restores
+bit-identically onto p′ chips.
+
+A ``CheckpointLayout`` is threaded through ``save_checkpoint`` /
+``restore_checkpoint`` / ``AsyncCheckpointer`` (repro.checkpoint.store);
+the manifest records ``layout.manifest_entry()`` so a restore under the
+wrong layout kind fails loudly instead of silently mis-shaping.  Which
+layout a given run needs is answered by
+``LaneComm.param_layout`` + the factories in ``launch.steps``
+(``zero1_checkpoint_layout`` / ``zero3_checkpoint_layout``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["CheckpointLayout", "Zero1CheckpointLayout",
+           "Zero3CheckpointLayout", "REPLICATED"]
+
+
+def _path_keys(path) -> tuple:
+    """Key names along a jax tree path (DictKey.key / SequenceKey.idx)."""
+    out = []
+    for k in path:
+        out.append(getattr(k, "key", getattr(k, "name", getattr(k, "idx",
+                                                                k))))
+    return tuple(out)
+
+
+class CheckpointLayout:
+    """Identity layout: every leaf is already canonical (replicated
+    trees).  Base class for the shard-aware layouts below; the store
+    calls ``to_canonical``/``from_canonical`` per leaf with the leaf's
+    tree path, and records/validates ``manifest_entry``."""
+
+    kind = "replicated"
+
+    def manifest_entry(self) -> dict:
+        return {"kind": self.kind}
+
+    def check_manifest(self, entry: dict) -> None:
+        """Raise ValueError when a checkpoint's recorded layout is not
+        restorable under this layout (kind or canonical-geometry drift).
+        Manifests from before the layout field default to replicated."""
+        got = (entry or {}).get("kind", "replicated")
+        if got != self.kind:
+            raise ValueError(
+                f"checkpoint layout mismatch: manifest records layout "
+                f"{got!r} but restore was asked for {self.kind!r}; "
+                f"restore with the layout of the run that WROTE the "
+                f"checkpoint (strategy layouts: LaneComm.param_layout)")
+
+    def to_canonical(self, path, leaf):
+        return leaf
+
+    def from_canonical(self, path, leaf):
+        return leaf
+
+
+REPLICATED = CheckpointLayout()
+
+
+class Zero1CheckpointLayout(CheckpointLayout):
+    """ZeRO-1 flat optimizer moments (``m``/``v``): on-device the padded
+    flat vector lives node-sharded in the bucket-major layout of
+    ``gradsync.zero1_param_shard`` — host-global shape (n·K·s,) in
+    (chip, bucket, s) order.  Canonical form: the unpadded flat
+    parameter order, i.e. the (K, n, s) ← (n, K, s) transpose that
+    ``gradsync.zero1_unshard`` performs on-device, then the padding
+    stripped."""
+
+    kind = "zero1"
+
+    def __init__(self, total_elems: int, num_buckets: int, n: int):
+        if total_elems <= 0 or num_buckets < 1 or n < 1:
+            raise ValueError((total_elems, num_buckets, n))
+        self.total_elems = int(total_elems)
+        self.num_buckets = int(num_buckets)
+        self.n = int(n)
+        self.padded = -(-self.total_elems
+                        // (num_buckets * n)) * (num_buckets * n)
+        self.shard_elems = self.padded // (num_buckets * n)   # s
+
+    def manifest_entry(self) -> dict:
+        return {"kind": self.kind, "total_elems": self.total_elems,
+                "num_buckets": self.num_buckets, "n": self.n}
+
+    def check_manifest(self, entry: dict) -> None:
+        super().check_manifest(entry)
+        want = entry.get("total_elems", self.total_elems)
+        if want != self.total_elems:
+            raise ValueError(
+                f"zero1 checkpoint holds {want} canonical elements but "
+                f"the restoring run expects {self.total_elems} (different "
+                f"model?)")
+
+    def _is_master(self, path, leaf) -> bool:
+        keys = _path_keys(path)
+        return bool(keys) and keys[-1] in ("m", "v") \
+            and getattr(leaf, "ndim", None) == 1
+
+    def to_canonical(self, path, leaf):
+        if not (self._is_master(path, leaf)
+                and leaf.shape[0] == self.padded):
+            return leaf
+        a = np.asarray(leaf)
+        K, n, s = self.num_buckets, self.n, self.shard_elems
+        return np.ascontiguousarray(
+            a.reshape(n, K, s).transpose(1, 0, 2)).reshape(-1)[
+                :self.total_elems]
+
+    def from_canonical(self, path, leaf):
+        if not (self._is_master(path, leaf)
+                and leaf.shape[0] == self.total_elems):
+            return leaf
+        a = np.asarray(leaf)
+        pad = self.padded - self.total_elems
+        if pad:
+            a = np.concatenate([a, np.zeros((pad,), a.dtype)])
+        K, n, s = self.num_buckets, self.n, self.shard_elems
+        return np.ascontiguousarray(
+            a.reshape(K, n, s).transpose(1, 0, 2)).reshape(-1)
+
+
+class Zero3CheckpointLayout(CheckpointLayout):
+    """ZeRO-3 layer-stack masters (params ``blocks`` and the matching
+    moment arrays): on-device/host-global shape is the bucket-major
+    (L, B, p, s) of ``launch.steps.zero3_shard_blocks``.  That layout is
+    already the per-layer flat (bucket, chip, s) element order
+    ``gradsync.zero3_unshard`` reassembles (DESIGN.md §5 zero-copy layout
+    choice), so canonicalization is a plain reshape to (L, B·p·s) plus
+    stripping the padding: canonical form (L, layer_elems)."""
+
+    kind = "zero3"
+
+    def __init__(self, num_layers: int, layer_elems: int, num_blocks: int,
+                 num_shards: int):
+        if min(num_layers, layer_elems, num_blocks, num_shards) < 1:
+            raise ValueError((num_layers, layer_elems, num_blocks,
+                              num_shards))
+        self.num_layers = int(num_layers)                  # L
+        self.layer_elems = int(layer_elems)                # D (unpadded)
+        self.num_blocks = int(num_blocks)                  # B
+        self.num_shards = int(num_shards)                  # p = n·N
+        bp = self.num_blocks * self.num_shards
+        padded = -(-self.layer_elems // bp) * bp
+        self.shard_elems = padded // bp                    # s
+        self.master_shape = (self.num_layers, self.num_blocks,
+                             self.num_shards, self.shard_elems)
+
+    def manifest_entry(self) -> dict:
+        return {"kind": self.kind, "num_layers": self.num_layers,
+                "layer_elems": self.layer_elems,
+                "num_blocks": self.num_blocks,
+                "num_shards": self.num_shards}
+
+    def check_manifest(self, entry: dict) -> None:
+        super().check_manifest(entry)
+        for field in ("num_layers", "layer_elems"):
+            want = entry.get(field, getattr(self, field))
+            if want != getattr(self, field):
+                raise ValueError(
+                    f"zero3 checkpoint {field}={want} but the restoring "
+                    f"run expects {getattr(self, field)} (different "
+                    f"model?); num_blocks/num_shards MAY differ (elastic "
+                    f"restore), canonical geometry may not")
+
+    def _in_blocks(self, path) -> bool:
+        return "blocks" in _path_keys(path)
+
+    def to_canonical(self, path, leaf):
+        if not (self._in_blocks(path)
+                and tuple(getattr(leaf, "shape", ())) == self.master_shape):
+            return leaf
+        a = np.asarray(leaf)
+        return np.ascontiguousarray(
+            a.reshape(self.num_layers, -1)[:, :self.layer_elems])
+
+    def from_canonical(self, path, leaf):
+        if not (self._in_blocks(path)
+                and tuple(getattr(leaf, "shape", ()))
+                == (self.num_layers, self.layer_elems)):
+            return leaf
+        a = np.asarray(leaf)
+        pad = self.master_shape[1] * self.master_shape[2] \
+            * self.master_shape[3] - self.layer_elems
+        if pad:
+            a = np.concatenate(
+                [a, np.zeros((self.num_layers, pad), a.dtype)], axis=1)
+        return np.ascontiguousarray(a).reshape(self.master_shape)

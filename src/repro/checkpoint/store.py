@@ -1,21 +1,30 @@
 """Sharded, atomic, async checkpointing with cross-mesh restore.
 
 Layout:   <dir>/step_<N>/
-             manifest.json           tree structure, shapes, dtypes, step
+             manifest.json           tree structure, shapes, dtypes, step,
+                                     and the shard LAYOUT of the writer
              arr_<i>.npy             one file per leaf (host-local fetch)
           <dir>/step_<N>.tmp/        written first, renamed when complete
 The rename is the commit point — a crash mid-write never corrupts the
 latest complete checkpoint (restart scans for the largest committed step).
 
-Cross-mesh restore: leaves are stored as full (unsharded) arrays; on load
-they are device_put against the *current* mesh's shardings, so a 512-chip
-checkpoint restarts on 256 chips (elastic shrink after pod loss) or any
-other divisor mesh without conversion.  At real scale the np.save per leaf
-becomes a per-shard write keyed by shard index — the manifest format
-already records shapes/dtypes independently of the shard layout.
+Cross-mesh restore: leaves are stored in a topology-FREE canonical form —
+full arrays for replicated state, the unpadded flat parameter order for
+the ZeRO master layouts (see :mod:`repro.checkpoint.layouts`) — and on
+load they are re-laid-out for the *current* mesh and device_put against
+its shardings, so a 512-chip checkpoint restarts on 256 chips (elastic
+shrink after pod loss) or any other mesh without conversion, including a
+``lane_zero3`` run whose (L, B, p, s) master geometry changed with p.
+Canonicalization is pure reshape/transpose — restores are bit-identical.
+At real scale the np.save per leaf becomes a per-shard write keyed by
+shard index — the manifest format already records canonical shapes/dtypes
+independently of the shard layout.
 
 AsyncCheckpointer: serializes the save on a worker thread; the train loop
 only blocks on fetching arrays to host (device_get), not on disk I/O.
+Worker errors are re-raised by ``wait()`` (and by the next ``save()``),
+and ``error`` exposes the pending failure so emergency paths (SIGTERM)
+can surface it even when they must not raise.
 """
 from __future__ import annotations
 
@@ -28,13 +37,27 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from .layouts import CheckpointLayout, REPLICATED
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+def _flatten_with_paths(tree):
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [p for p, _ in pairs]
+    leaves = [l for _, l in pairs]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    layout: Optional[CheckpointLayout] = None) -> str:
+    """Write ``tree`` atomically; master leaves canonicalize through
+    ``layout`` (None = replicated identity) so the files on disk are
+    mesh-independent."""
+    layout = layout or REPLICATED
     base = pathlib.Path(ckpt_dir)
     base.mkdir(parents=True, exist_ok=True)
     tmp = base / f"step_{step}.tmp"
@@ -42,11 +65,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    leaves, treedef = _flatten(tree)
+    paths, leaves, treedef = _flatten_with_paths(tree)
     manifest = {"step": step, "treedef": str(treedef),
-                "leaves": []}
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
+                "layout": layout.manifest_entry(), "leaves": []}
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        arr = layout.to_canonical(path,
+                                  np.asarray(jax.device_get(leaf)))
         np.save(tmp / f"arr_{i}.npy", arr)
         manifest["leaves"].append({"shape": list(arr.shape),
                                    "dtype": str(arr.dtype)})
@@ -71,20 +95,38 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore_checkpoint(ckpt_dir: str, tree_like: Any, step: int | None = None,
-                       shardings: Any = None) -> tuple[Any, int]:
+                       shardings: Any = None,
+                       layout: Optional[CheckpointLayout] = None
+                       ) -> tuple[Any, int]:
     """Restore into the structure of `tree_like`; device_put against
     `shardings` (a matching tree) when given — this is where cross-mesh
-    resharding happens."""
+    resharding happens.  ``layout`` describes the CURRENT run's master
+    layout: the stored canonical leaves are re-laid-out through
+    ``layout.from_canonical`` (the manifest's recorded layout must agree
+    in kind and canonical geometry; B/p may differ — elastic restore)."""
+    layout = layout or REPLICATED
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     d = pathlib.Path(ckpt_dir) / f"step_{step}"
-    leaves, treedef = _flatten(tree_like)
+    manifest = json.loads((d / "manifest.json").read_text())
+    layout.check_manifest(manifest.get("layout"))
+    paths, refs, treedef = _flatten_with_paths(tree_like)
+    if len(manifest["leaves"]) != len(refs):
+        raise ValueError(
+            f"checkpoint {d} holds {len(manifest['leaves'])} leaves but "
+            f"the restore target tree has {len(refs)}")
     out = []
-    for i, ref in enumerate(leaves):
-        arr = np.load(d / f"arr_{i}.npy")
-        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+    for i, (path, ref) in enumerate(zip(paths, refs)):
+        arr = layout.from_canonical(path, np.load(d / f"arr_{i}.npy"))
+        if tuple(arr.shape) != tuple(ref.shape):
+            # a bare assert here vanishes under ``python -O`` and the
+            # mismatch would surface as silent corruption steps later
+            raise ValueError(
+                f"checkpoint leaf {i} ({d / f'arr_{i}.npy'}) restores to "
+                f"shape {tuple(arr.shape)} but the target tree expects "
+                f"{tuple(ref.shape)} — mesh/layout mismatch?")
         out.append(arr)
     tree = jax.tree.unflatten(treedef, out)
     if shardings is not None:
@@ -105,13 +147,24 @@ def keep_last_k(ckpt_dir: str, k: int = 3) -> None:
 
 class AsyncCheckpointer:
     """One background writer; at most one save in flight (later saves wait,
-    which back-pressures rather than stacking host copies)."""
+    which back-pressures rather than stacking host copies).  ``layout``
+    is threaded into every ``save_checkpoint`` so ZeRO master state
+    canonicalizes off the critical path."""
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    def __init__(self, ckpt_dir: str, keep: int = 3,
+                 layout: Optional[CheckpointLayout] = None):
         self.dir = ckpt_dir
         self.keep = keep
+        self.layout = layout or REPLICATED
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The pending worker failure, if any (peek without raising —
+        the SIGTERM emergency path reports it even when raising would
+        mask the original exception)."""
+        return self._err
 
     def save(self, step: int, tree: Any) -> None:
         self.wait()
@@ -120,7 +173,8 @@ class AsyncCheckpointer:
 
         def work():
             try:
-                save_checkpoint(self.dir, step, host_tree)
+                save_checkpoint(self.dir, step, host_tree,
+                                layout=self.layout)
                 keep_last_k(self.dir, self.keep)
             except BaseException as e:  # noqa: BLE001
                 self._err = e

@@ -19,6 +19,7 @@ tests/test_api_surface.py.
 """
 from .config import CommConfig
 from .lanecomm import LaneComm, Selection
+from .layout import param_layout_kind, register_param_layout
 from .registry import (
     ImplEntry, get_impl, has_impl, iter_impls, register_impl,
     registered_collectives, strategies_for,
@@ -29,4 +30,5 @@ __all__ = [
     "LaneComm", "CommConfig", "Selection",
     "ImplEntry", "register_impl", "get_impl", "has_impl", "iter_impls",
     "strategies_for", "registered_collectives",
+    "register_param_layout", "param_layout_kind",
 ]

@@ -125,6 +125,25 @@ class LaneComm:
     def last_selection(self) -> Optional[Selection]:
         return self.selections[-1] if self.selections else None
 
+    # -- parameter layout ------------------------------------------------
+    def param_layout(self, strategy: Optional[str] = None) -> str:
+        """Master-parameter layout kind the registered train step for
+        ``strategy`` (default: ``cfg.strategy``) expects on THIS topology:
+        ``"replicated"`` | ``"zero1"`` | ``"zero3"``.
+
+        Mirrors the step builders' single-batch-axis degradation: with an
+        empty node level (no distinct intra-node axes) ZeRO-1 falls back
+        to the replicated native step, so its layout answer degrades the
+        same way.  Drivers and the checkpoint store key their state init
+        and shard specs off this answer instead of hard-coding a strategy
+        → layout mapping (see repro.checkpoint.layouts).
+        """
+        from .layout import param_layout_kind
+        kind = param_layout_kind(strategy or self.cfg.strategy)
+        if kind == "zero1" and not self.topo.node_axes:
+            return "replicated"
+        return kind
+
     # -- dispatch core ---------------------------------------------------
     def _default_strategy(self, collective: str) -> str:
         if collective == "prefetch_allgather":

@@ -145,14 +145,24 @@ class RunConfig:
     are self-documenting):
 
     gradsync strategies: {gradsync_strategies}
+
+    ``plan`` names a dry-run sharding PLAN ("default" | "tp0" — which
+    axes join the batch product, launch/dryrun.py), NOT a gradsync
+    strategy; the two used to share the ``gradsync`` field, which
+    bypassed the registry validation below.
     """
     model: ModelConfig
     shape: ShapeConfig
     fsdp: bool = False             # shard params over the data axis too
     remat: str = "none"            # none | full | dots
     # valid values derive from the repro.comm registry — see the class
-    # docstring (filled from strategies_for("grad_sync") at import)
+    # docstring (filled from strategies_for("grad_sync") at import) —
+    # and are VALIDATED at construction (__post_init__): an unknown
+    # strategy fails here, not three layers down inside a step builder
     gradsync: str = "native"
+    # dry-run sharding plan name (launch/dryrun.py); free-form tag, the
+    # dryrun layer owns its meaning
+    plan: str = "default"
     # gradient-sync bucket count; 0 = cost-model auto (§5 latency/bandwidth
     # crossover, core.costmodel.optimal_num_buckets)
     gradsync_buckets: int = 0
@@ -166,6 +176,21 @@ class RunConfig:
     microbatch: int = 0            # 0 = no grad accumulation
     # serving
     decode_seq_shard: bool = True  # shard KV cache seq dim over model axis
+
+    def __post_init__(self):
+        # registry-derived validation: dryrun used to smuggle plan names
+        # through this field, silently skipping the check every other
+        # consumer relied on.  Union of the grad_sync and train_step
+        # tables (a strategy may register only a step builder); "auto"
+        # is meta — it dispatches per call, so it has no grad_sync cell
+        from repro.comm import strategies_for
+        valid = dict.fromkeys((*strategies_for("grad_sync"),
+                               *strategies_for("train_step"), "auto"))
+        if self.gradsync not in valid:
+            raise ValueError(
+                f"unknown gradsync strategy {self.gradsync!r}; registered "
+                f"strategies: {tuple(valid)} (plan names belong in "
+                f"RunConfig.plan)")
 
 
 def _fill_rundoc() -> None:

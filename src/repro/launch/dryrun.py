@@ -76,9 +76,12 @@ def plan(cfg: ModelConfig, shape: ShapeConfig, mesh, *, micro_override=0,
         micro = max(1, b_loc // rows)
     if micro_override:
         micro = micro_override
+    # the sharding PLAN rides its own field; gradsync goes through a real
+    # registry strategy ("auto" = cost-model dispatch) so the unknown-
+    # strategy validation of RunConfig.__post_init__ stays armed
     return RunConfig(model=cfg, shape=shape, fsdp=fsdp,
                      remat="full" if shape.kind == "train" else "none",
-                     microbatch=micro, gradsync=plan_name)
+                     microbatch=micro, gradsync="auto", plan=plan_name)
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, ba=None):
@@ -442,7 +445,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "hlo_stats": stats,            # trip-count-corrected totals
         "hlo_bytes": len(hlo),
     }
-    result["plan"] = plan_name
+    result["plan"] = run.plan
     if out_dir is not None:
         import gzip
         out_dir.mkdir(parents=True, exist_ok=True)

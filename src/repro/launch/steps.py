@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import CommConfig, LaneComm, get_impl, register_impl
+from repro.comm import (CommConfig, LaneComm, get_impl, register_impl,
+                        register_param_layout)
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import LaneTopology, optimal_prefetch_blocks
 from repro.models import init_model, loss_fn, prefill, decode_step
@@ -143,6 +144,11 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     replicated flavor degrades to the native one-shot psum.
     ``param_specs`` is accepted for call-site compatibility but unused:
     the caller owns the shard_map in/out specs of the returned step.
+
+    Returns ``(step, comm)``: the comm carries the topology
+    (``comm.topo``), the recorded auto ``Selection``s, and the
+    ``param_layout`` answer the driver keys its master state / shard
+    specs / checkpoint layout off (see ``init_lane_train_state``).
     """
     ba = batch_axes(mesh)
     single = len(ba) == 1
@@ -152,7 +158,7 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     comm = LaneComm(topo, CommConfig.from_run(run), mesh=mesh)
     ctx = StepContext(cfg, run, opt, mesh, ba, single)
     builder = get_impl("train_step", run.gradsync)
-    return builder.fn(comm, ctx), topo
+    return builder.fn(comm, ctx), comm
 
 
 def _make_loss(ctx: StepContext):
@@ -163,6 +169,8 @@ def _make_loss(ctx: StepContext):
 
 
 def _register_replicated(strategy: str):
+    register_param_layout(strategy, "replicated")
+
     @register_impl("train_step", strategy, auto_ok=False)
     def _build(comm, ctx, _strategy=strategy):
         """Replicated-parameter step: full grad sync + tree AdamW."""
@@ -183,6 +191,9 @@ def _register_replicated(strategy: str):
 
 for _s in ("native", "lane", "lane_pipelined", "lane_int8", "auto"):
     _register_replicated(_s)
+
+
+register_param_layout("lane_zero1", "zero1")
 
 
 @register_impl("train_step", "lane_zero1", auto_ok=False)
@@ -225,6 +236,9 @@ def _build_zero1(comm, ctx: StepContext):
         new_params = _unflatten_bucket(full, pspec)
         return loss, new_params, new_opt
     return step
+
+
+register_param_layout("lane_zero3", "zero3")
 
 
 @register_impl("train_step", "lane_zero3", auto_ok=False)
@@ -496,6 +510,116 @@ def zero3_opt_init(params, n: int, N: int, fsdp_prefetch: int = 0):
     return {"rest": adamw_init(rest),
             "blocks": {"m": zeros, "v": zeros,
                        "count": jnp.zeros((), jnp.int32)}}
+
+
+# ---------------------------------------------------------------------------
+# driver-side master state: layout-aware init + shard specs + ckpt layout
+# ---------------------------------------------------------------------------
+#
+# Everything the training driver must agree on with the jitted step —
+# which master layout the params/optimizer state live in, the shard_map
+# in/out PartitionSpecs of that layout, and the checkpoint layout that
+# canonicalizes it — is derived HERE from the same LaneComm.param_layout
+# answer the step builders register, so a new strategy's driver wiring is
+# its register_param_layout(...) line, not a fourth if-chain.
+
+@dataclasses.dataclass
+class LaneTrainState:
+    """Host-side master state for one lane train-step flavor.
+
+    params/opt_state: host (global-view) arrays in the step's master
+        layout — device_put against ``to_shardings(mesh)`` before use.
+    pspecs/ospecs: the matching shard_map in/out PartitionSpec trees.
+    ckpt_layout: the repro.checkpoint layout that canonicalizes this
+        state on disk (thread into AsyncCheckpointer/restore_checkpoint).
+    """
+    params: object
+    opt_state: object
+    pspecs: object
+    ospecs: object
+    ckpt_layout: object
+
+    def to_shardings(self, mesh):
+        from jax.sharding import NamedSharding
+        mk = lambda specs: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return mk(self.pspecs), mk(self.ospecs)
+
+
+def zero1_checkpoint_layout(params, n: int, num_buckets: int = 0):
+    """Checkpoint layout of the lane_zero1 flat optimizer moments (the
+    SAME K/padding resolution as zero1_opt_init and the train step)."""
+    from repro.checkpoint import Zero1CheckpointLayout
+    total = sum(math.prod(p.shape) for p in jax.tree.leaves(params))
+    K = resolve_num_buckets(total, n, num_buckets)
+    return Zero1CheckpointLayout(total, K, n)
+
+
+def zero3_checkpoint_layout(cfg: ModelConfig, n: int, N: int,
+                            fsdp_prefetch: int = 0):
+    """Checkpoint layout of the lane_zero3 (L, B, p, s) masters (the SAME
+    B resolution as zero3_shard_blocks / zero3_opt_init / the step)."""
+    from repro.checkpoint import Zero3CheckpointLayout
+    spec3 = zero3_layer_spec(cfg)
+    B = resolve_prefetch_blocks(spec3.layer_elems, n, N, fsdp_prefetch)
+    return Zero3CheckpointLayout(spec3.num_layers, spec3.layer_elems, B,
+                                 max(n * N, 1))
+
+
+def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
+                          params, comm: LaneComm = None) -> LaneTrainState:
+    """Master state + specs + checkpoint layout for ``run.gradsync``.
+
+    ``params`` is the replicated init_model tree; the ZeRO flavors
+    re-lay it out host-side (zero3_shard_blocks) and build fresh sharded
+    optimizer state.  Pass the ``comm`` returned by
+    ``build_train_step_lane`` so the layout/topology decision is read off
+    the SAME object the step was built against (None re-derives it from
+    the mesh — identical by construction, for callers without a step).
+    """
+    from repro.checkpoint import REPLICATED
+    if comm is None:
+        ba = batch_axes(mesh)
+        topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
+        comm = LaneComm(topo, CommConfig.from_run(run), mesh=mesh)
+    topo = comm.topo
+    kind = comm.param_layout(run.gradsync)
+    n, N = topo.sizes(mesh)
+    pspecs = jax.tree.map(lambda _: P(), params)
+    if kind == "replicated":
+        opt = adamw_init(params)
+        return LaneTrainState(params, opt, pspecs,
+                              jax.tree.map(lambda _: P(), opt), REPLICATED)
+    if kind == "zero1":
+        layout = zero1_checkpoint_layout(params, n, run.gradsync_buckets)
+        opt = {"m": jnp.zeros((layout.padded,), jnp.float32),
+               "v": jnp.zeros((layout.padded,), jnp.float32),
+               "count": jnp.zeros((), jnp.int32)}
+        ospecs = {"m": P(topo.node_axes), "v": P(topo.node_axes),
+                  "count": P()}
+        return LaneTrainState(params, opt, pspecs, ospecs, layout)
+    assert kind == "zero3", kind
+    shards, B = zero3_shard_blocks(params["blocks"], n, N,
+                                   run.fsdp_prefetch)
+    layout = zero3_checkpoint_layout(cfg, n, N, run.fsdp_prefetch)
+    if tuple(shards.shape) != layout.master_shape or B != layout.num_blocks:
+        # both sides derive B/padding from the layer element count; if
+        # the real block tree and zero3_layer_spec ever disagree the
+        # checkpoint would silently record the wrong geometry
+        raise ValueError(
+            f"zero3 master layout drift: sharded blocks {shards.shape} "
+            f"(B={B}) vs checkpoint layout {layout.master_shape} "
+            f"(B={layout.num_blocks})")
+    p3 = {k: v for k, v in params.items() if k != "blocks"}
+    p3["blocks"] = shards
+    opt = zero3_opt_init(params, n, N, run.fsdp_prefetch)
+    master_spec = P(None, None, (*topo.node_axes, topo.lane_axis), None)
+    pspecs = jax.tree.map(lambda _: P(), p3)
+    pspecs["blocks"] = master_spec
+    ospecs = jax.tree.map(lambda _: P(), opt)
+    ospecs["blocks"]["m"] = ospecs["blocks"]["v"] = master_spec
+    return LaneTrainState(p3, opt, pspecs, ospecs, layout)
 
 
 # ---------------------------------------------------------------------------

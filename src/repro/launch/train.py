@@ -1,16 +1,33 @@
 """Training driver: end-to-end loop with checkpoint/restart + fault hooks.
 
+The step resolves through the ``repro.comm`` "train_step" registry
+(``build_train_step_lane``): ``--gradsync`` accepts every registered
+strategy (derived from the registry, incl. ``auto`` and the ZeRO
+flavors), ``--gradsync-buckets`` / ``--fsdp-prefetch`` are the §5 tuning
+knobs, and the master parameter/optimizer layout (replicated vs ZeRO-1
+flat moments vs the ZeRO-3 (L, B, p, s) layer masters) follows
+``LaneComm.param_layout`` via ``launch.steps.init_lane_train_state`` —
+checkpoints canonicalize through the matching layout so a ``lane_zero3``
+checkpoint written at p chips restores bit-identically at p′ chips.
+
 Examples
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
-      --steps 50 --batch 8 --seq 128 --ckpt runs/ckpt_demo
+      --steps 50 --batch 8 --seq 128 --ckpt runs/ckpt_demo \
+      --gradsync lane_zero3 --pods 2
   (production: same entry point under one process per host with
    jax.distributed.initialize(); the mesh comes from launch/mesh.py)
 
 Fault tolerance exercised here and in tests:
   * resume: picks up from the latest committed checkpoint (data pipeline
     is (seed, step)-keyed so the token stream continues exactly)
-  * SIGTERM → emergency checkpoint before exit (preemption handling)
-  * async checkpoint writer off the critical path
+  * SIGTERM → emergency checkpoint before exit (preemption handling);
+    the emergency save records the last COMPLETED step, never a step
+    that raised or was interrupted mid-flight
+  * elastic restart: ``--lose-chips`` re-plans the mesh around lost
+    devices (runtime.elastic) and the layout-aware restore re-shards the
+    canonical checkpoint onto the survivors
+  * async checkpoint writer off the critical path; worker errors surface
+    on the emergency path instead of dying with the daemon thread
 """
 from __future__ import annotations
 
@@ -21,34 +38,68 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import resolve, RunConfig, SHAPES
+from repro.configs import resolve, RunConfig
 from repro.configs.base import ShapeConfig
 from repro.models import init_model
-from repro.optim import AdamWConfig, adamw_init
+from repro.optim import AdamWConfig
 from repro.checkpoint import AsyncCheckpointer, restore_checkpoint, \
     latest_step
 from repro.data import make_loader
-from repro.launch.mesh import batch_axes, mesh_sizes
-from repro.launch import sharding as sh
-from repro.launch.steps import build_train_step
+from repro.launch.mesh import batch_axes
+from repro.launch.steps import build_train_step_lane, init_lane_train_state
+from repro.runtime.elastic import plan_elastic_mesh
 
 
-def make_mesh_auto(batch: int = 1 << 30):
+def make_mesh_auto(batch: int = 1 << 30, pods: int = 1):
+    """Widest (data, model) factorization of the local devices that still
+    divides ``batch``; ``pods > 1`` adds the cross-DCN "pod" axis (the
+    lane level) as the outermost batch axis."""
     n = len(jax.devices())
+    pods = max(pods, 1)
+    if n % pods:
+        raise ValueError(f"{n} devices not divisible into {pods} pods")
+    if pods > 1 and batch % pods:
+        # fail here with the real reason, not deep inside shard_map's
+        # divisibility machinery
+        raise ValueError(
+            f"global batch {batch} not divisible by the {pods}-pod lane "
+            f"axis; pick a batch divisible by --pods")
+    per = n // pods
+    d = 1
+    while d * 2 <= per and per % (d * 2) == 0 \
+            and batch % (pods * d * 2) == 0:
+        d *= 2
+    m = per // d
+    if pods > 1:
+        return jax.make_mesh((pods, d, m), ("pod", "data", "model"))
     if n == 1:
         return jax.make_mesh((1, 1), ("data", "model"))
-    # widest data axis that still divides the batch
-    d = 1
-    while d * 2 <= n and n % (d * 2) == 0 and batch % (d * 2) == 0:
-        d *= 2
-    m = n // d
     return jax.make_mesh((d, m), ("data", "model"))
 
 
+def _tree_alive(tree) -> bool:
+    """False when any leaf buffer was deleted (donated into a step call
+    that raised) — an emergency save would die on device_get."""
+    return all(not (hasattr(l, "is_deleted") and l.is_deleted())
+               for l in jax.tree.leaves(tree))
+
+
+def _resolve_pods(pods: int, gradsync: str) -> int:
+    """0 = auto: lane_zero3 needs distinct lane/node batch axes, so give
+    it a pod axis whenever the device count allows; everything else
+    defaults to the single-pod mesh."""
+    if pods:
+        return pods
+    n = len(jax.devices())
+    if gradsync == "lane_zero3" and n >= 4 and n % 2 == 0:
+        return 2
+    return 1
+
+
 def main(argv=None):
+    from repro.comm import strategies_for
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -59,41 +110,74 @@ def main(argv=None):
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--seed", type=int, default=0)
+    # strategy surface: choices DERIVE from the train_step registry, so a
+    # new registration is immediately drivable (and testable) from here
+    ap.add_argument("--gradsync", default="native",
+                    choices=list(strategies_for("train_step")),
+                    help="gradient-sync / parameter-layout strategy "
+                         "(registry-derived; 'auto' = cost model)")
+    ap.add_argument("--gradsync-buckets", type=int, default=0,
+                    help="bucket count K; 0 = cost-model auto")
+    ap.add_argument("--fsdp-prefetch", type=int, default=0,
+                    help="lane_zero3 gather blocks B; 0 = auto, "
+                         "-1 = blocking negative control")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="pod (lane) axis size; 0 = auto (lane_zero3 "
+                         "gets 2 when devices allow, else 1)")
+    ap.add_argument("--lose-chips", default="",
+                    help="comma-separated flat device indices to treat "
+                         "as lost: re-plan the mesh around them "
+                         "(elastic restart on survivors)")
     args = ap.parse_args(argv)
 
     cfg = resolve(args.arch, smoke=args.smoke)
-    mesh = make_mesh_auto(args.batch)
+    mesh = make_mesh_auto(args.batch,
+                          _resolve_pods(args.pods, args.gradsync))
+    if args.lose_chips:
+        lost = [int(x) for x in args.lose_chips.split(",") if x != ""]
+        em = plan_elastic_mesh(mesh.axis_names, mesh.devices.shape, lost)
+        mesh = em.make()
+        print(f"elastic mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}"
+              f" (lost {em.lost})")
     ba = batch_axes(mesh)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     run = RunConfig(model=cfg, shape=shape, remat=args.remat,
-                    microbatch=args.microbatch)
+                    gradsync=args.gradsync,
+                    gradsync_buckets=args.gradsync_buckets,
+                    fsdp_prefetch=args.fsdp_prefetch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
 
-    params = init_model(jax.random.PRNGKey(args.seed), cfg)
-    opt_state = adamw_init(params)
-    pspecs = sh.param_pspecs(params, cfg, mesh, fsdp=False)
-    pshard = sh.to_shardings(pspecs, mesh)
-    oshard = sh.to_shardings(sh.opt_pspecs(pspecs), mesh)
-    params = jax.tree.map(jax.device_put, params, pshard)
-    opt_state = jax.tree.map(jax.device_put, opt_state, oshard)
+    # step first (it validates strategy × topology, e.g. lane_zero3 on a
+    # single-batch-axis mesh), then the layout-matched master state
+    step, comm = build_train_step_lane(cfg, run, opt_cfg, mesh, None)
+    params0 = init_model(jax.random.PRNGKey(args.seed), cfg)
+    st = init_lane_train_state(cfg, run, mesh, params0, comm=comm)
+    pshard, oshard = st.to_shardings(mesh)
 
     start_step = 0
-    ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+    ckpt = AsyncCheckpointer(args.ckpt, layout=st.ckpt_layout) \
+        if args.ckpt else None
     if args.ckpt and latest_step(args.ckpt) is not None:
+        # the host-side st trees are only the shape/layout targets here —
+        # don't device_put a full init state just to overwrite it
         (params, opt_state), start_step = restore_checkpoint(
-            args.ckpt, (params, opt_state),
-            shardings=(pshard, oshard))
-        print(f"resumed from step {start_step}")
+            args.ckpt, (st.params, st.opt_state),
+            shardings=(pshard, oshard), layout=st.ckpt_layout)
+        print(f"resumed from step {start_step} "
+              f"(layout {st.ckpt_layout.kind})")
+    else:
+        params = jax.tree.map(jax.device_put, st.params, pshard)
+        opt_state = jax.tree.map(jax.device_put, st.opt_state, oshard)
 
-    tok_sh = NamedSharding(mesh, P(ba or None, None))
+    dspec = P(ba)
     step_fn = jax.jit(
-        build_train_step(cfg, run, opt_cfg, ba),
-        in_shardings=(pshard, oshard, tok_sh, tok_sh, None),
-        out_shardings=(NamedSharding(mesh, P()), pshard, oshard),
+        jax.shard_map(step, mesh=mesh,
+                      in_specs=(st.pspecs, st.ospecs, dspec, dspec, None),
+                      out_specs=(P(), st.pspecs, st.ospecs),
+                      check_vma=False),
         donate_argnums=(0, 1))
 
     loader = make_loader(cfg, args.seq, args.batch, seed=args.seed)
@@ -105,13 +189,16 @@ def main(argv=None):
 
     t0 = time.time()
     losses = []
-    s = start_step
+    done = start_step        # last COMPLETED step count (emergency save)
+    saved = start_step       # largest step known committed
     try:
         for s in range(start_step, args.steps):
             toks, labels = loader.batch_at(s)
             loss, params, opt_state = step_fn(
                 params, opt_state, jnp.asarray(toks), jnp.asarray(labels),
                 None)
+            done = s + 1     # only after the step returned — a raise or
+            #                  SIGTERM mid-step must not claim step s
             if s % args.log_every == 0 or s == args.steps - 1:
                 lv = float(loss)
                 losses.append(lv)
@@ -119,16 +206,48 @@ def main(argv=None):
                 tps = (s - start_step + 1) * args.batch * args.seq / dt
                 print(f"step {s:5d}  loss {lv:8.4f}  tok/s {tps:9.0f}",
                       flush=True)
-            if ckpt and (s + 1) % args.ckpt_every == 0:
-                ckpt.save(s + 1, (params, opt_state))
+            if ckpt and done % args.ckpt_every == 0:
+                ckpt.save(done, (params, opt_state))
+                saved = done
             if terminate["now"]:
                 print("SIGTERM: emergency checkpoint")
                 break
     finally:
         signal.signal(signal.SIGTERM, old)
+        # whether the loop is already unwinding an exception MUST be read
+        # before the except below makes it the "current" exception
+        unwinding = sys.exc_info()[1] is not None
         if ckpt:
-            ckpt.save(s + 1, (params, opt_state))
-            ckpt.wait()
+            try:
+                if done > saved and _tree_alive((params, opt_state)):
+                    ckpt.save(done, (params, opt_state))
+                elif done > saved:
+                    # a raise INSIDE step done+1 deleted the state (it was
+                    # donated into the failing call): nothing to save —
+                    # say so instead of crashing on dead buffers
+                    print(f"emergency checkpoint skipped: state of step "
+                          f"{done} was donated into the failing step; "
+                          f"latest committed checkpoint is step {saved}",
+                          file=sys.stderr, flush=True)
+                ckpt.wait()
+            except BaseException as e:  # noqa: BLE001
+                # surface the writer failure; only re-raise when it would
+                # not mask the exception already unwinding the loop
+                print(f"CHECKPOINT ERROR: save at step {done} failed: "
+                      f"{e!r}", file=sys.stderr, flush=True)
+                if not unwinding:
+                    raise
+    if start_step >= args.steps:
+        # resuming a finished run: the loop never ran — nothing to
+        # report (and nothing was checkpointed above)
+        print(f"nothing to do: resumed at step {start_step} >= "
+              f"--steps {args.steps}")
+        return 0
+    if not losses:
+        # stopped (SIGTERM) before the first log boundary — real work
+        # may still have been checkpointed above
+        print(f"stopped at step {done} before the first log boundary")
+        return 0
     if len(losses) >= 2 and losses[-1] >= losses[0]:
         print(f"WARNING: loss did not decrease ({losses[0]:.3f} → "
               f"{losses[-1]:.3f})")

@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import (device count locks
+# at first backend init) — this module is a standalone CI entry point.
+"""CI leg: the training driver must actually RUN every registered
+gradsync strategy, with a save → restore round-trip.
+
+For each strategy in the ``train_step`` registry (derived, never
+hard-coded — a new registration is automatically covered, a lost one
+fails the schema checks instead) this drives
+``repro.launch.train --smoke`` twice on the 8-device multi-pod CPU mesh:
+a fresh 2-step run that commits a checkpoint, then a resumed 3-step run
+that must restore it (the driver prints ``resumed from step 2``; a
+restore failure raises).  A strategy the driver cannot serve — missing
+layout registration, broken state init, un-restorable checkpoint —
+fails the build here rather than surviving as a benchmark-only artifact.
+
+Usage:  python -m repro.launch.train_smoke   (wired into ``make ci``)
+"""
+import sys                                                    # noqa: E402
+import tempfile                                               # noqa: E402
+
+
+def main(argv=None) -> int:
+    from repro.checkpoint import latest_step
+    from repro.comm import strategies_for
+    from repro.launch.train import main as train_main
+    import repro.launch.steps  # noqa: F401 - registers train_step table
+
+    strategies = strategies_for("train_step")
+    fails = []
+    for s in strategies:
+        print(f"=== train-smoke {s} ===", flush=True)
+        try:
+            with tempfile.TemporaryDirectory() as td:
+                ck = f"{td}/ck"
+                base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                        "--seq", "32", "--ckpt", ck, "--ckpt-every", "2",
+                        "--log-every", "1", "--gradsync", s, "--pods", "2"]
+                rc = train_main([*base, "--steps", "2"])
+                assert rc == 0 and latest_step(ck) == 2, \
+                    (rc, latest_step(ck))
+                rc = train_main([*base, "--steps", "3"])    # restore path
+                assert rc == 0 and latest_step(ck) == 3, \
+                    (rc, latest_step(ck))
+        except Exception as e:  # noqa: BLE001
+            fails.append(s)
+            print(f"FAIL {s}: {e!r}", flush=True)
+        else:
+            print(f"PASS {s}", flush=True)
+    print(f"train-smoke: {len(strategies) - len(fails)}/{len(strategies)} "
+          f"strategies OK" + (f"; FAILED {fails}" if fails else ""))
+    return len(fails)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -953,6 +953,67 @@ def zero3_train_step_matches_native_clipping():
 
 
 @case
+def zero3_ckpt_canonical_matches_unshard():
+    """The checkpoint store's host-side zero3 canonicalization IS
+    gradsync.zero3_unshard: laying a canonical vector out as the
+    (L, B, p, s) master, scattering the per-chip stripes, and
+    reassembling them with the on-device collective recovers the
+    canonical element order BIT-exactly (incl. the zero padding)."""
+    from repro.checkpoint import Zero3CheckpointLayout
+    from repro.optim.gradsync import zero3_unshard
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    D, B, p = 53, 2, 4
+    layout = Zero3CheckpointLayout(num_layers=1, layer_elems=D,
+                                   num_blocks=B, num_shards=p)
+    rng = np.random.default_rng(77)
+    canonical = rng.normal(size=(1, D)).astype(np.float32)
+    master = jax.tree_util.tree_map_with_path(
+        layout.from_canonical, {"blocks": canonical})["blocks"]
+    assert master.shape == layout.master_shape == (1, B, p, 56 // (B * p))
+
+    sm = jax.shard_map(
+        lambda m: zero3_unshard(m.reshape(-1), topo, B),
+        mesh=mesh, in_specs=P(None, None, ("data", "pod"), None),
+        out_specs=P(), check_vma=False)
+    flat = np.asarray(jax.jit(sm)(master))
+    assert np.array_equal(flat, master.reshape(-1))        # bit-exact
+    assert np.array_equal(flat[:D], canonical[0])
+    # and the store's save-side canonicalization inverts it bit-exactly
+    back = jax.tree_util.tree_map_with_path(
+        layout.to_canonical, {"blocks": master})["blocks"]
+    assert np.array_equal(back, canonical)
+
+
+@case
+def zero1_ckpt_canonical_matches_unshard():
+    """Same pin for ZeRO-1: the host (n, K, s) ↔ (K, n, s) transpose of
+    the checkpoint layout reproduces gradsync.zero1_unshard bit-exactly
+    on the node-sharded flat optimizer state."""
+    from repro.checkpoint import Zero1CheckpointLayout
+    from repro.optim.gradsync import zero1_unshard
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    total, K, n = 53, 3, 2
+    layout = Zero1CheckpointLayout(total, K, n)
+    rng = np.random.default_rng(78)
+    canonical = rng.normal(size=(total,)).astype(np.float32)
+    host = jax.tree_util.tree_map_with_path(
+        layout.from_canonical, {"m": canonical})["m"]
+    assert host.shape == (layout.padded,)
+
+    sm = jax.shard_map(lambda m: zero1_unshard(m, topo, K),
+                       mesh=mesh, in_specs=P(("data",)), out_specs=P(),
+                       check_vma=False)
+    flat = np.asarray(jax.jit(sm)(host))
+    assert np.array_equal(flat[:total], canonical)         # bit-exact
+    assert np.all(flat[total:] == 0)
+    back = jax.tree_util.tree_map_with_path(
+        layout.to_canonical, {"m": host})["m"]
+    assert np.array_equal(back, canonical)
+
+
+@case
 def quorum_mean_drops_pod():
     from repro.runtime import quorum_mean
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))

@@ -12,6 +12,8 @@ modules produce them.
 """
 import inspect
 
+import pytest
+
 import repro.comm as comm
 
 EXPECTED_EXPORTS = {
@@ -38,6 +40,8 @@ EXPECTED_EXPORTS = {
     "iter_impls": "(collective: 'str') -> 'tuple[ImplEntry, ...]'",
     "strategies_for": "(collective: 'str') -> 'tuple[str, ...]'",
     "registered_collectives": "() -> 'tuple[str, ...]'",
+    "register_param_layout": "(strategy: 'str', kind: 'str') -> 'None'",
+    "param_layout_kind": "(strategy: 'str') -> 'str'",
 }
 
 EXPECTED_LANECOMM_METHODS = {
@@ -64,6 +68,7 @@ EXPECTED_LANECOMM_METHODS = {
     "prefetch_allgather":
         "(self, shard, *, strategy: 'Optional[str]' = None, num_blocks: "
         "'Optional[int]' = None)",
+    "param_layout": "(self, strategy: 'Optional[str]' = None) -> 'str'",
 }
 
 # the registered strategy tables are surface too: a lost registration is
@@ -112,6 +117,21 @@ def test_registered_strategy_tables_locked():
         "lane_zero1", "lane_zero3")
     assert set(comm.registered_collectives()) == \
         set(EXPECTED_STRATEGIES) | {"train_step"}
+
+
+def test_param_layout_table_locked():
+    """Every registered train-step strategy declares its master layout;
+    the ZeRO flavors are the only non-replicated ones (checkpoints ever
+    written depend on these answers — see repro.checkpoint.layouts)."""
+    import repro.launch.steps  # noqa: F401 - registers layouts
+    expected = {"native": "replicated", "lane": "replicated",
+                "lane_pipelined": "replicated", "lane_int8": "replicated",
+                "auto": "replicated", "lane_zero1": "zero1",
+                "lane_zero3": "zero3"}
+    for strategy, kind in expected.items():
+        assert comm.param_layout_kind(strategy) == kind, strategy
+    with pytest.raises(ValueError, match="no param layout"):
+        comm.param_layout_kind("nope")
 
 
 def test_auto_eligibility_locked():

@@ -1,8 +1,14 @@
-"""Checkpoint atomicity/resume, async writer, train-driver integration
-(loss decreases; restart continues), serving engine, hlo_stats counter."""
+"""Checkpoint atomicity/resume, async writer, shard-layout round-trips,
+train-driver integration and the restart matrix (resume-at-completion,
+crash/SIGTERM step accounting, zero3 elastic-shrink restore via the
+multi-device subprocess cases), serving engine, hlo_stats counter."""
 import json
+import os
 import pathlib
 import shutil
+import signal
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -10,8 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import (save_checkpoint, restore_checkpoint,
-                              latest_step, AsyncCheckpointer)
+                              latest_step, AsyncCheckpointer,
+                              Zero1CheckpointLayout, Zero3CheckpointLayout)
 from repro.checkpoint.store import keep_last_k
+from repro.testing import driver_cases
 
 
 def _tree(seed=0):
@@ -69,6 +77,210 @@ def test_train_driver_and_resume(tmp_path):
                "--log-every", "4"])
     assert rc == 0
     assert latest_step(ck) == 16
+
+
+def _canon_tree(layout, tree):
+    return jax.tree_util.tree_map_with_path(layout.to_canonical, tree)
+
+
+def _master_tree(layout, tree):
+    return jax.tree_util.tree_map_with_path(layout.from_canonical, tree)
+
+
+def test_zero3_layout_elastic_roundtrip_bit_identical():
+    """The elastic-shrink acceptance at the layout level: canonical →
+    (L, B, p, s) master at p=4 → canonical → master at p′=2 (different
+    B′, s′, padding) → canonical, every hop bit-exact for params-like
+    AND moment-like leaves."""
+    rng = np.random.default_rng(0)
+    canon = {"blocks": rng.normal(size=(3, 100)).astype(np.float32)}
+    a = Zero3CheckpointLayout(num_layers=3, layer_elems=100,
+                              num_blocks=2, num_shards=4)
+    b = Zero3CheckpointLayout(num_layers=3, layer_elems=100,
+                              num_blocks=3, num_shards=2)
+    master_a = _master_tree(a, canon)
+    assert master_a["blocks"].shape == a.master_shape
+    np.testing.assert_array_equal(
+        _canon_tree(a, master_a)["blocks"], canon["blocks"])
+    master_b = _master_tree(b, _canon_tree(a, master_a))
+    assert master_b["blocks"].shape == b.master_shape \
+        != a.master_shape
+    np.testing.assert_array_equal(
+        _canon_tree(b, master_b)["blocks"], canon["blocks"])
+    # non-master leaves (scalars, rest params) pass through untouched
+    assert b.from_canonical((), np.float32(3.5)) == np.float32(3.5)
+
+
+def test_zero1_layout_elastic_roundtrip_bit_identical():
+    rng = np.random.default_rng(1)
+    canon = {"m": rng.normal(size=(53,)).astype(np.float32),
+             "count": np.zeros((), np.int32)}
+    a = Zero1CheckpointLayout(total_elems=53, num_buckets=3, n=2)
+    b = Zero1CheckpointLayout(total_elems=53, num_buckets=2, n=4)
+    ma = _master_tree(a, canon)
+    assert ma["m"].shape == (a.padded,) and ma["count"].shape == ()
+    np.testing.assert_array_equal(_canon_tree(a, ma)["m"], canon["m"])
+    mb = _master_tree(b, _canon_tree(a, ma))
+    assert mb["m"].shape == (b.padded,) != ma["m"].shape
+    np.testing.assert_array_equal(_canon_tree(b, mb)["m"], canon["m"])
+
+
+def test_restore_layout_kind_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, _tree())
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_checkpoint(
+            tmp_path, jax.tree.map(np.asarray, _tree()),
+            layout=Zero3CheckpointLayout(1, 8, 1, 2))
+
+
+def test_restore_shape_mismatch_raises_valueerror(tmp_path):
+    """A bare assert would vanish under ``python -O`` — the mismatch must
+    be a ValueError naming the leaf and both shapes."""
+    save_checkpoint(tmp_path, 1, _tree())
+    bad = jax.tree.map(np.asarray, _tree())
+    bad["a"] = np.zeros((4, 5), np.float32)
+    with pytest.raises(ValueError, match=r"leaf 0.*\(4, 5\)") as ei:
+        restore_checkpoint(tmp_path, bad)
+    assert "(4, 3)" in str(ei.value)
+
+
+def test_async_checkpointer_worker_error_propagates(tmp_path):
+    target = tmp_path / "not_a_dir"
+    target.write_text("occupied")          # mkdir in the worker will fail
+    ck = AsyncCheckpointer(str(target))
+    ck.save(1, _tree())
+    with pytest.raises(FileExistsError):
+        ck.wait()
+    assert ck.error is None                # error consumed by the raise
+
+
+# ---------------------------------------------------------------------------
+# driver restart matrix (single-device legs; the multi-pod zero3/elastic
+# legs run through the 8-device subprocess cases below)
+# ---------------------------------------------------------------------------
+
+_DRIVER_ARGS = ["--arch", "llama3.2-3b", "--smoke", "--batch", "4",
+                "--seq", "32", "--log-every", "2"]
+
+
+class _HookedLoader:
+    """Wraps the real loader; fires ``hook(step)`` before each batch."""
+
+    def __init__(self, inner, hook):
+        self._inner, self._hook = inner, hook
+
+    def batch_at(self, step):
+        self._hook(step)
+        return self._inner.batch_at(step)
+
+
+def _hook_loader(monkeypatch, hook):
+    import repro.launch.train as T
+    real = T.make_loader
+
+    def make(*a, **kw):
+        return _HookedLoader(real(*a, **kw), hook)
+
+    monkeypatch.setattr(T, "make_loader", make)
+
+
+def test_resume_at_completion_is_noop(tmp_path, capsys):
+    """start_step >= --steps: the loop never runs — no losses[0]
+    IndexError, and the finally block must NOT write a spurious
+    step_{start+1} checkpoint."""
+    from repro.launch.train import main
+    ck = str(tmp_path / "ck")
+    assert main([*_DRIVER_ARGS, "--steps", "4", "--ckpt", ck,
+                 "--ckpt-every", "2"]) == 0
+    assert latest_step(ck) == 4
+    assert main([*_DRIVER_ARGS, "--steps", "4", "--ckpt", ck]) == 0
+    out = capsys.readouterr().out
+    assert "nothing to do" in out
+    assert latest_step(ck) == 4
+    assert not (tmp_path / "ck" / "step_5").exists()
+
+
+def test_crash_saves_last_completed_step(tmp_path, monkeypatch):
+    """A raise inside step k must checkpoint step k (k steps completed),
+    never k+1 — saving k+1 would make resume SKIP the failed step."""
+    from repro.launch.train import main
+    ck = str(tmp_path / "ck")
+
+    def hook(step):
+        if step == 2:
+            raise RuntimeError("injected data failure")
+
+    _hook_loader(monkeypatch, hook)
+    with pytest.raises(RuntimeError, match="injected"):
+        main([*_DRIVER_ARGS, "--steps", "6", "--ckpt", ck])
+    assert latest_step(ck) == 2            # steps 0 and 1 completed
+
+
+def test_sigterm_emergency_checkpoint(tmp_path, monkeypatch, capsys):
+    """Preemption: SIGTERM mid-run → finish the in-flight step, commit an
+    emergency checkpoint for the COMPLETED count, exit cleanly."""
+    from repro.launch.train import main
+    ck = str(tmp_path / "ck")
+
+    def hook(step):
+        if step == 2:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    _hook_loader(monkeypatch, hook)
+    assert main([*_DRIVER_ARGS, "--steps", "20", "--ckpt", ck]) == 0
+    assert "SIGTERM: emergency checkpoint" in capsys.readouterr().out
+    assert latest_step(ck) == 3            # step 2 completed, then broke
+
+
+def test_sigterm_emergency_surfaces_worker_error(tmp_path, monkeypatch,
+                                                 capsys):
+    """An AsyncCheckpointer worker failure on the emergency path must be
+    REPORTED and re-raised, not die silently with the daemon thread."""
+    import repro.checkpoint.store as store
+    from repro.launch.train import main
+    ck = str(tmp_path / "ck")
+
+    def boom(*a, **kw):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(store, "save_checkpoint", boom)
+
+    def hook(step):
+        if step == 1:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    _hook_loader(monkeypatch, hook)
+    with pytest.raises(RuntimeError, match="disk full"):
+        main([*_DRIVER_ARGS, "--steps", "20", "--ckpt", ck])
+    assert "CHECKPOINT ERROR" in capsys.readouterr().err
+
+
+def _driver_results():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.run_driver_cases"],
+        capture_output=True, text=True, timeout=2400)
+    results = {"__stderr__": (f"rc={proc.returncode}\n"
+                              + "\n".join(proc.stderr.splitlines()[-15:]))}
+    for line in proc.stdout.splitlines():
+        if line.startswith(("PASS ", "FAIL ")):
+            status, rest = line.split(" ", 1)
+            results[rest.split(":")[0].strip()] = (status, line)
+    return results
+
+
+_DRIVER_RESULTS = None
+
+
+@pytest.mark.parametrize("case", sorted(driver_cases.CASES))
+def test_driver_restart_case(case):
+    global _DRIVER_RESULTS
+    if _DRIVER_RESULTS is None:
+        _DRIVER_RESULTS = _driver_results()
+    assert case in _DRIVER_RESULTS, \
+        f"case {case} produced no result (subprocess crash?):\n" \
+        f"{_DRIVER_RESULTS['__stderr__']}"
+    status, line = _DRIVER_RESULTS[case]
+    assert status == "PASS", line
 
 
 def test_serving_engine_completes():

@@ -151,6 +151,24 @@ def test_commconfig_rejects_typod_strategy():
     CommConfig(strategy="lane_zero3")
 
 
+def test_runconfig_rejects_unknown_gradsync():
+    """RunConfig validates gradsync against the registry at construction
+    — dryrun used to smuggle PLAN names ("default"/"tp0") through this
+    field, which silently bypassed every downstream strategy check; plans
+    now ride the separate ``plan`` field."""
+    from repro.configs import resolve
+    from repro.configs.base import RunConfig, SHAPES
+    cfg = resolve("llama3.2-3b", smoke=True)
+    for bad in ("tp0", "default", "lane_pipelinde"):
+        with pytest.raises(ValueError, match="unknown gradsync"):
+            RunConfig(model=cfg, shape=SHAPES["train_4k"], gradsync=bad)
+    # plan names are legal on the plan field, with a real strategy riding
+    # gradsync (what dryrun.plan() does now)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], gradsync="auto",
+                    plan="tp0")
+    assert run.plan == "tp0" and run.gradsync == "auto"
+
+
 def test_prefetch_explicit_num_blocks_is_strict():
     """An explicit num_blocks names a committed shard layout: an
     indivisible value must raise (silent shrinking would reassemble a
