@@ -19,11 +19,16 @@ import sys
 
 TOP_KEYS = {"mesh", "payload_elems", "payload_bytes", "auto_num_buckets",
             "strategies_registered", "cost_model", "smoke", "reps",
-            "results", "hlo_per_computation", "structure_ok"}
+            "results", "family_results", "families_registered",
+            "hlo_per_computation", "structure_ok"}
 
 ROW_KEYS = {"strategy", "selected", "num_buckets", "avg_us", "min_us",
             "max_abs_err_vs_native", "model_pred_us", "hlo_concurrent",
             "hlo_concurrent_pairs"}
+
+FAMILY_ROW_KEYS = {"family", "arch", "layer_elems", "extra_elems",
+                   "num_layers", "num_blocks", "avg_us", "min_us",
+                   "gather_exact", "hlo_concurrent"}
 
 
 def required_strategies() -> set:
@@ -32,7 +37,16 @@ def required_strategies() -> set:
     return set(strategies_for("grad_sync")) | {"auto"}
 
 
+def required_families() -> set:
+    """The block-stack registry IS the family requirement: a model family
+    that silently loses its lane_zero3 registration (or its benchmark
+    row) fails the build here."""
+    from repro.models.blockstack import block_stack_families
+    return set(block_stack_families())
+
+
 REQUIRED_STRATEGIES = required_strategies()
+REQUIRED_FAMILIES = required_families()
 
 
 def check(doc: dict) -> list[str]:
@@ -59,6 +73,24 @@ def check(doc: dict) -> list[str]:
     if stale:
         errs.append(f"bench ran against a registry that no longer matches: "
                     f"{sorted(stale)} (re-run benchmarks.run --smoke)")
+    frows = doc.get("family_results", [])
+    if not isinstance(frows, list):
+        frows = []
+    for i, row in enumerate(frows):
+        mk = FAMILY_ROW_KEYS - set(row)
+        if mk:
+            errs.append(f"family_results[{i}] missing {sorted(mk)}")
+    fhave = {r.get("family") for r in frows}
+    fgone = REQUIRED_FAMILIES - fhave
+    if fgone:
+        errs.append(f"benchmark stopped emitting zero3 family rows: "
+                    f"{sorted(fgone)} (block_stack registry requires "
+                    f"{sorted(REQUIRED_FAMILIES)}, have {sorted(fhave)})")
+    fstale = set(doc.get("families_registered", [])) - REQUIRED_FAMILIES
+    if fstale:
+        errs.append(f"bench ran against a block-stack registry that no "
+                    f"longer matches: {sorted(fstale)} (re-run "
+                    f"benchmarks.run --smoke)")
     if not doc.get("structure_ok", False):
         errs.append("structure_ok is false: the §5 overlap (or a negative "
                     "control) regressed — see the benchmark output")

@@ -45,6 +45,67 @@ from repro.launch import hlo_stats
 POD = 4                               # chips per pod on the 2×4 bench mesh
 
 
+def bench_families(mesh, topo, reps, warmup):
+    """Per-family lane_zero3 rows: time ONE layer's pipelined prefetch
+    gather (the zero3 hot path) for every registered block-stack family's
+    smoke arch, verify the gather reproduces the master row bit-exactly,
+    and structurally verify the DCN/ICI overlap of the gather pipeline
+    on the optimized HLO.  The family list derives from the block-stack
+    registry (check_bench_schema re-derives it: a silently-dropped
+    family fails the build)."""
+    from repro.configs import resolve
+    from repro.launch.steps import zero3_stack_layouts
+    from repro.models import init_model
+    from repro.models.blockstack import (block_stack_spec,
+                                         family_smoke_archs, shard_stack,
+                                         split_params)
+    n, N = topo.sizes(mesh)
+    rows = []
+    for fam, arch in family_smoke_archs().items():
+        cfg = resolve(arch, smoke=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        lays = zero3_stack_layouts(cfg)
+        stack, extras, _ = split_params(block_stack_spec(cfg), params)
+        B = 2                         # >=2 so the gather pipeline exists
+        master, _ = shard_stack(stack, n, N, B)
+        comm = LaneComm(topo, mesh=mesh)
+        L = master.shape[0]
+
+        def f(m, L=L, B=B, comm=comm):
+            return comm.prefetch_allgather(m.reshape(L, -1)[0],
+                                           num_blocks=B)
+
+        fn = jax.jit(jax.shard_map(
+            f, mesh=mesh,
+            in_specs=P(None, None, (*topo.node_axes, topo.lane_axis),
+                       None),
+            out_specs=P(), check_vma=False))
+        arr = jax.device_put(
+            np.asarray(master),
+            NamedSharding(mesh, P(None, None,
+                                  (*topo.node_axes, topo.lane_axis),
+                                  None)))
+        hlo = fn.lower(arr).compile().as_text()
+        conc = hlo_stats.collective_concurrency(hlo, pod_size=POD)
+        out = np.asarray(fn(arr))
+        want = np.asarray(master).reshape(L, -1)[0]
+        exact = bool(np.array_equal(out, want))
+        avg, best = time_fn(fn, arr, reps=reps, warmup=warmup)
+        row = {"family": fam, "arch": arch,
+               "layer_elems": lays["blocks"].row_elems,
+               "extra_elems": lays["extras"].row_elems,
+               "num_layers": L, "num_blocks": B,
+               "avg_us": round(avg, 2), "min_us": round(best, 2),
+               "gather_exact": exact,
+               "hlo_concurrent": conc["concurrent"]}
+        rows.append(row)
+        print(f"zero3[{fam:7s}] {arch:22s} D={row['layer_elems']:8d} "
+              f"min={best:9.1f}us overlap="
+              f"{'YES' if conc['concurrent'] else 'no'} exact={exact}",
+              flush=True)
+    return rows
+
+
 def build(mesh, topo, strategy, num_buckets):
     """(jitted fn, comm) — the comm records any auto-dispatch selection."""
     comm = LaneComm(topo, CommConfig(buckets=num_buckets), mesh=mesh)
@@ -152,8 +213,14 @@ def main(argv=None) -> int:
               f"overlap={'YES' if conc['concurrent'] else 'no':3s} "
               f"pairs={len(conc['pairs'])}", flush=True)
 
+    family_rows = bench_families(mesh, topo, reps, warmup)
+
     # structural acceptance: pipelined/bucketed overlap possible, serial not
     ok = True
+    for frow in family_rows:
+        if not (frow["gather_exact"] and frow["hlo_concurrent"]):
+            print(f"FAMILY FAIL: {frow}")
+            ok = False
     for row in results:
         eff = row["selected"]
         if eff == "native":
@@ -183,6 +250,8 @@ def main(argv=None) -> int:
                            optimal_num_buckets(elems * 4 / topo_n)},
         "smoke": bool(args.smoke), "reps": reps,
         "results": results,
+        "family_results": family_rows,
+        "families_registered": [r["family"] for r in family_rows],
         "hlo_per_computation": hlo_checks,
         "structure_ok": ok,
     }

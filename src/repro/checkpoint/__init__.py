@@ -1,4 +1,5 @@
 from .layouts import (CheckpointLayout, Zero1CheckpointLayout,
-                      Zero3CheckpointLayout, REPLICATED)
+                      Zero3CheckpointLayout, REPLICATED,
+                      concat_flat_order, split_flat_order)
 from .store import save_checkpoint, restore_checkpoint, latest_step, \
-    AsyncCheckpointer
+    load_canonical, AsyncCheckpointer

@@ -3,7 +3,7 @@
 The ZeRO train steps keep their master state in topology-dependent
 layouts — ZeRO-1 moments as a node-sharded bucket-major flat vector,
 ZeRO-3 layer stacks in the (L, B, p, s) master layout of
-``launch.steps.zero3_shard_blocks`` — and B, p and the padding all change
+``repro.models.blockstack.shard_stack`` — and B, p and the padding change
 when the mesh changes.  A checkpoint that stored those arrays verbatim
 would only restore onto the exact chip count that wrote it, which is the
 opposite of what an elastic fleet needs (Träff's k-lane follow-up:
@@ -32,7 +32,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["CheckpointLayout", "Zero1CheckpointLayout",
-           "Zero3CheckpointLayout", "REPLICATED"]
+           "Zero3CheckpointLayout", "REPLICATED",
+           "concat_flat_order", "split_flat_order"]
 
 
 def _path_keys(path) -> tuple:
@@ -140,21 +141,30 @@ class Zero1CheckpointLayout(CheckpointLayout):
 
 
 class Zero3CheckpointLayout(CheckpointLayout):
-    """ZeRO-3 layer-stack masters (params ``blocks`` and the matching
-    moment arrays): on-device/host-global shape is the bucket-major
-    (L, B, p, s) of ``launch.steps.zero3_shard_blocks``.  That layout is
-    already the per-layer flat (bucket, chip, s) element order
-    ``gradsync.zero3_unshard`` reassembles (DESIGN.md §5 zero-copy layout
-    choice), so canonicalization is a plain reshape to (L, B·p·s) plus
-    stripping the padding: canonical form (L, layer_elems)."""
+    """ZeRO-3 stack masters (params ``blocks``/``extras`` and the
+    matching moment arrays): on-device/host-global shape is the
+    bucket-major (L, B, p, s) of ``repro.models.blockstack.shard_stack``.
+    That layout is already the per-layer flat (bucket, chip, s) element
+    order ``gradsync.zero3_unshard`` reassembles (DESIGN.md §5 zero-copy
+    layout choice), so canonicalization is a plain reshape to (L, B·p·s)
+    plus stripping the padding: canonical form (L, layer_elems).
+
+    The ``extras`` pseudo-layer (embeddings/final-norm sharded as one
+    more stack row — DESIGN.md §8) carries its own geometry
+    (``extra_elems``/``extra_blocks``, master (1, Be, p, se)); layouts
+    from before the extras stack (``extra_elems=0``) stay constructible
+    and restore checkpoints that never recorded one."""
 
     kind = "zero3"
 
     def __init__(self, num_layers: int, layer_elems: int, num_blocks: int,
-                 num_shards: int):
+                 num_shards: int, extra_elems: int = 0,
+                 extra_blocks: int = 0):
         if min(num_layers, layer_elems, num_blocks, num_shards) < 1:
             raise ValueError((num_layers, layer_elems, num_blocks,
                               num_shards))
+        if (extra_elems > 0) != (extra_blocks > 0):
+            raise ValueError((extra_elems, extra_blocks))
         self.num_layers = int(num_layers)                  # L
         self.layer_elems = int(layer_elems)                # D (unpadded)
         self.num_blocks = int(num_blocks)                  # B
@@ -164,17 +174,34 @@ class Zero3CheckpointLayout(CheckpointLayout):
         self.shard_elems = padded // bp                    # s
         self.master_shape = (self.num_layers, self.num_blocks,
                              self.num_shards, self.shard_elems)
+        self.extra_elems = int(extra_elems)                # De (unpadded)
+        self.extra_blocks = int(extra_blocks)              # Be
+        if self.extra_elems:
+            bpe = self.extra_blocks * self.num_shards
+            padded_e = -(-self.extra_elems // bpe) * bpe
+            self.extra_shard_elems = padded_e // bpe       # se
+            self.extra_master_shape = (1, self.extra_blocks,
+                                       self.num_shards,
+                                       self.extra_shard_elems)
+        else:
+            self.extra_shard_elems = 0
+            self.extra_master_shape = None
 
     def manifest_entry(self) -> dict:
-        return {"kind": self.kind, "num_layers": self.num_layers,
-                "layer_elems": self.layer_elems,
-                "num_blocks": self.num_blocks,
-                "num_shards": self.num_shards}
+        entry = {"kind": self.kind, "num_layers": self.num_layers,
+                 "layer_elems": self.layer_elems,
+                 "num_blocks": self.num_blocks,
+                 "num_shards": self.num_shards}
+        if self.extra_elems:
+            entry["extra_elems"] = self.extra_elems
+            entry["extra_blocks"] = self.extra_blocks
+        return entry
 
     def check_manifest(self, entry: dict) -> None:
         super().check_manifest(entry)
-        for field in ("num_layers", "layer_elems"):
-            want = entry.get(field, getattr(self, field))
+        for field in ("num_layers", "layer_elems", "extra_elems"):
+            want = entry.get(field, 0 if field == "extra_elems"
+                             else getattr(self, field))
             if want != getattr(self, field):
                 raise ValueError(
                     f"zero3 checkpoint {field}={want} but the restoring "
@@ -185,23 +212,85 @@ class Zero3CheckpointLayout(CheckpointLayout):
     def _in_blocks(self, path) -> bool:
         return "blocks" in _path_keys(path)
 
+    def _in_extras(self, path) -> bool:
+        return "extras" in _path_keys(path)
+
     def to_canonical(self, path, leaf):
-        if not (self._in_blocks(path)
-                and tuple(getattr(leaf, "shape", ())) == self.master_shape):
-            return leaf
-        a = np.asarray(leaf)
-        return np.ascontiguousarray(
-            a.reshape(self.num_layers, -1)[:, :self.layer_elems])
+        shape = tuple(getattr(leaf, "shape", ()))
+        if self._in_blocks(path) and shape == self.master_shape:
+            a = np.asarray(leaf)
+            return np.ascontiguousarray(
+                a.reshape(self.num_layers, -1)[:, :self.layer_elems])
+        if self.extra_elems and self._in_extras(path) \
+                and shape == self.extra_master_shape:
+            a = np.asarray(leaf)
+            return np.ascontiguousarray(
+                a.reshape(1, -1)[:, :self.extra_elems])
+        return leaf
 
     def from_canonical(self, path, leaf):
-        if not (self._in_blocks(path)
-                and tuple(getattr(leaf, "shape", ()))
-                == (self.num_layers, self.layer_elems)):
-            return leaf
+        shape = tuple(getattr(leaf, "shape", ()))
+        if self._in_blocks(path) \
+                and shape == (self.num_layers, self.layer_elems):
+            return self._pad_to_master(leaf, self.master_shape,
+                                       self.layer_elems)
+        if self.extra_elems and self._in_extras(path) \
+                and shape == (1, self.extra_elems):
+            return self._pad_to_master(leaf, self.extra_master_shape,
+                                       self.extra_elems)
+        return leaf
+
+    @staticmethod
+    def _pad_to_master(leaf, master_shape, elems):
         a = np.asarray(leaf)
-        pad = self.master_shape[1] * self.master_shape[2] \
-            * self.master_shape[3] - self.layer_elems
+        pad = master_shape[1] * master_shape[2] * master_shape[3] - elems
         if pad:
             a = np.concatenate(
-                [a, np.zeros((self.num_layers, pad), a.dtype)], axis=1)
-        return np.ascontiguousarray(a).reshape(self.master_shape)
+                [a, np.zeros((master_shape[0], pad), a.dtype)], axis=1)
+        return np.ascontiguousarray(a).reshape(master_shape)
+
+
+# ---------------------------------------------------------------------------
+# canonical flat order (cross-layout restore primitives)
+# ---------------------------------------------------------------------------
+#
+# Every layout above canonicalizes to the same underlying element order:
+# the unpadded flat concatenation of the parameter tree's leaves, leaf by
+# leaf, row-major.  That shared order is what makes a checkpoint written
+# under ONE strategy layout restorable into ANOTHER (zero3 -> zero1 ->
+# replicated and back): lift the stored canonical arrays to the
+# replicated tree with these primitives, then re-lay them out through the
+# destination layout.  The orchestration (which needs the model's tree
+# structure) lives in launch/steps.py:restore_lane_train_state; these
+# helpers are model-free array plumbing, kept here so the flat-order
+# contract sits next to the layouts that depend on it.
+
+def concat_flat_order(leaves) -> np.ndarray:
+    """Leaves -> ONE unpadded fp32 canonical flat vector (the
+    ``gradsync._flatten_bucket`` element order, host-side)."""
+    if not leaves:
+        return np.zeros((0,), np.float32)
+    return np.concatenate(
+        [np.asarray(l).reshape(-1).astype(np.float32) for l in leaves])
+
+
+def split_flat_order(flat, shapes, dtypes=None) -> list:
+    """Inverse of :func:`concat_flat_order`: split a canonical flat
+    vector back into leaves of ``shapes`` (cast to ``dtypes`` when
+    given).  Raises ValueError when the element counts disagree — the
+    "shapes genuinely differ" guard of cross-layout restore."""
+    flat = np.asarray(flat).reshape(-1)
+    total = sum(int(np.prod(s)) for s in shapes)
+    if flat.shape[0] != total:
+        raise ValueError(
+            f"canonical flat vector holds {flat.shape[0]} elements but "
+            f"the target leaves need {total} (different model?)")
+    out, ofs = [], 0
+    for i, s in enumerate(shapes):
+        sz = int(np.prod(s))
+        leaf = flat[ofs:ofs + sz].reshape(s)
+        if dtypes is not None:
+            leaf = leaf.astype(dtypes[i])
+        out.append(leaf)
+        ofs += sz
+    return out

@@ -134,6 +134,32 @@ def restore_checkpoint(ckpt_dir: str, tree_like: Any, step: int | None = None,
     return tree, step
 
 
+def peek_manifest(ckpt_dir: str, step: int | None = None
+                  ) -> tuple[dict, int]:
+    """Read one checkpoint's manifest only (no arrays) — enough to decide
+    the layout kind before committing to a full load."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = pathlib.Path(ckpt_dir) / f"step_{step}"
+    return json.loads((d / "manifest.json").read_text()), step
+
+
+def load_canonical(ckpt_dir: str, step: int | None = None
+                   ) -> tuple[dict, list, int]:
+    """Read one checkpoint's manifest and its RAW canonical leaves, with
+    no layout validation or re-layout — the cross-layout restore path
+    (launch/steps.py:restore_lane_train_state) pairs these against a
+    source-layout template and lifts them to the replicated form through
+    the canonical flat order.  Returns (manifest, [np arrays], step)."""
+    manifest, step = peek_manifest(ckpt_dir, step)
+    d = pathlib.Path(ckpt_dir) / f"step_{step}"
+    arrays = [np.load(d / f"arr_{i}.npy")
+              for i in range(len(manifest["leaves"]))]
+    return manifest, arrays, step
+
+
 def keep_last_k(ckpt_dir: str, k: int = 3) -> None:
     base = pathlib.Path(ckpt_dir)
     if not base.exists():

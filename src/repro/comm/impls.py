@@ -23,9 +23,14 @@ Registration legend per collective:
                    lane_pipelined (the ZeRO-3 weight prefetch) and
                    blocking (the monolithic negative control)
 
-New variants (ROADMAP: backward re-gather, ssm ShardedBlocks, zero3
-embeddings) plug in as one registration here instead of editing three
-call sites.
+Model families plug into the ZeRO-3 runtime through the SAME registry
+seam under the ``"block_stack"`` collective (one
+``@register_block_stack(family)`` per family — see
+:mod:`repro.models.blockstack`; the specs live next to the block bodies
+in :mod:`repro.models.transformer`), so the backward re-gather, the
+ssm/hybrid/moe stacks and the zero3-sharded embeddings all ride the
+registered ``prefetch_allgather`` implementations below without new
+cells here.
 """
 from __future__ import annotations
 

@@ -25,9 +25,12 @@ Kinds:
   zero1       params replicated; optimizer moments are ONE flat fp32
               vector sharded over the node axes in the bucket-major
               ``gradsync.zero1_param_shard`` layout.
-  zero3       the scanned layer stack (params AND moments) lives in the
-              bucket-major (L, B, p, s) master layout of
-              ``launch.steps.zero3_shard_blocks``; rest-params replicated.
+  zero3       the family's scanned layer stack AND the embeddings/
+              final-norm "extras" pseudo-layer (params AND moments) live
+              in the bucket-major (L, B, p, s) master layouts of
+              ``repro.models.blockstack.shard_stack``; only the family
+              spec's replicated_keys (the hybrid weight-shared attention
+              block) stay replicated.
 
 The concrete checkpoint canonicalization for each kind lives in
 :mod:`repro.checkpoint.layouts`.

@@ -172,12 +172,24 @@ class RunConfig:
     #   -1 = BLOCKING gather (no prefetch; the negative control — layer i's
     #        compute depends on its own all-gather)
     fsdp_prefetch: int = 0
+    # lane_zero3 backward re-gather: re-run each layer's weight gather in
+    # the backward under remat so backward residuals stay 1/p + 1 layer
+    # instead of L·D per chip (models/blockstack.ShardedStack.regather)
+    fsdp_regather: bool = False
     scan_layers: bool = True
     microbatch: int = 0            # 0 = no grad accumulation
+    # microbatch gradient-accumulation precision (honored by the GSPMD
+    # dryrun step AND the lane step builders): "float32" is parity-exact,
+    # "bfloat16" halves the accumulator's HBM residency
+    accum_dtype: str = "float32"
     # serving
     decode_seq_shard: bool = True  # shard KV cache seq dim over model axis
 
     def __post_init__(self):
+        if self.accum_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"accum_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.accum_dtype!r}")
         # registry-derived validation: dryrun used to smuggle plan names
         # through this field, silently skipping the check every other
         # consumer relied on.  Union of the grad_sync and train_step

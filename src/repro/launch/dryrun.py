@@ -181,10 +181,12 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
         opt_shapes = jax.eval_shape(adamw_init, pshapes)
         ospecs = sh.opt_pspecs(pspecs)
         o_sds = sh.sds(opt_shapes, ospecs, mesh)
+        # --accum-bf16 forces bf16; otherwise defer to run.accum_dtype
+        # (build_train_step resolves None from the RunConfig)
         step = build_train_step(cfg, run, AdamWConfig(),
                                 _batch_axes_for(mesh, plan_name),
                                 accum_dtype=jnp.bfloat16 if accum_bf16
-                                else jnp.float32)
+                                else None)
         jitted = jax.jit(
             step,
             in_shardings=(sh.to_shardings(pspecs, mesh),

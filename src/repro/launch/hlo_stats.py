@@ -356,6 +356,17 @@ def analyze(text: str, *, pod_size: int = 256) -> dict:
     return out
 
 
+def collective_kind_counts(text: str, *, pod_size: int = 256) -> dict:
+    """Trip-corrected executed-op counts per collective kind for the
+    whole module (``{"all-gather": 12, ...}``; absent kinds are 0 via
+    ``.get``).  The backward re-gather and hybrid single-gather-per-layer
+    pins compare these counts across lowerings: a remat cell that
+    accidentally recomputes a weight gather, or a backward that is
+    SUPPOSED to re-gather, both show up as an all-gather count delta."""
+    res = analyze(text, pod_size=pod_size)
+    return {k: int(v["count"]) for k, v in res["coll"].items()}
+
+
 # ---------------------------------------------------------------------------
 # structural concurrency: can the lane (DCN) hop and a node (ICI)
 # collective of one pipeline step run at the same time?

@@ -27,9 +27,13 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import (CommConfig, LaneComm, get_impl, register_impl,
                         register_param_layout)
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import LaneTopology, optimal_prefetch_blocks
+from repro.core import LaneTopology
 from repro.models import init_model, loss_fn, prefill, decode_step
-from repro.models.transformer import ShardedBlocks
+from repro.models.blockstack import (
+    ShardedStack, StackLayout, block_stack_spec, resolve_prefetch_blocks,
+    shard_stack, split_params, stack_layout,
+)
+from repro.models.transformer import ShardedBlocks  # noqa: F401 (re-export)
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.adamw import global_norm
 from repro.optim.gradsync import (
@@ -45,14 +49,17 @@ from .mesh import batch_axes
 
 def build_train_step(cfg: ModelConfig, run: RunConfig,
                      opt: AdamWConfig, batch_axes: tuple[str, ...] = (),
-                     accum_dtype=jnp.float32):
+                     accum_dtype=None):
     """(params, opt_state, tokens, labels[, extra]) → (loss, params, opt).
 
-    accum_dtype: microbatch gradient-accumulation precision.  bf16 halves
-    the accumulator's HBM residency (the fp32 buffer is ~2 GB/chip for
-    dbrx); stochastic error stays below the int8-DCN compression bound
-    already accepted for the lane_int8 strategy.
+    accum_dtype: microbatch gradient-accumulation precision (None =
+    ``run.accum_dtype``).  bf16 halves the accumulator's HBM residency
+    (the fp32 buffer is ~2 GB/chip for dbrx); stochastic error stays
+    below the int8-DCN compression bound already accepted for the
+    lane_int8 strategy.
     """
+    if accum_dtype is None:
+        accum_dtype = _accum_dtype(run)
 
     def lf(p, tok, lab, ex):
         return loss_fn(p, cfg, tok, lab, extra_embeds=ex, remat=run.remat)
@@ -176,10 +183,12 @@ def _register_replicated(strategy: str):
         """Replicated-parameter step: full grad sync + tree AdamW."""
         lf = _make_loss(ctx)
         eff = "native" if ctx.single else _strategy
+        vg = _microbatched(
+            lambda p, t, l, e: jax.value_and_grad(lf)(p, t, l, e),
+            ctx.run.microbatch, _accum_dtype(ctx.run))
 
         def step(params, opt_state, tokens, labels, extra=None):
-            loss, grads = jax.value_and_grad(lf)(params, tokens, labels,
-                                                 extra)
+            loss, grads = vg(params, tokens, labels, extra)
             loss = jax.lax.pmean(loss, ctx.ba)
             grads = comm.grad_sync(grads, strategy=eff)
             new_params, new_opt = adamw_update(ctx.opt, grads, opt_state,
@@ -210,9 +219,12 @@ def _build_zero1(comm, ctx: StepContext):
         return get_impl("train_step", "native").fn(comm, ctx)
     lf = _make_loss(ctx)
     topo, opt, run = comm.topo, ctx.opt, ctx.run
+    vg = _microbatched(
+        lambda p, t, l, e: jax.value_and_grad(lf)(p, t, l, e),
+        run.microbatch, _accum_dtype(run))
 
     def step(params, opt_state, tokens, labels, extra=None):
-        loss, grads = jax.value_and_grad(lf)(params, tokens, labels, extra)
+        loss, grads = vg(params, tokens, labels, extra)
         loss = jax.lax.pmean(loss, ctx.ba)
         total = sum(math.prod(p.shape) for p in jax.tree.leaves(params))
         K = resolve_num_buckets(total, topo.n(), run.gradsync_buckets)
@@ -243,19 +255,26 @@ register_param_layout("lane_zero3", "zero3")
 
 @register_impl("train_step", "lane_zero3", auto_ok=False)
 def _build_zero3(comm, ctx: StepContext):
-    """ZeRO-3/FSDP step: the scanned layer stack stays sharded 1/p per
-    chip (zero3_shard_blocks layout) and is re-gathered LAYER BY LAYER
-    inside the forward scan via comm.prefetch_allgather — the pipelined
-    AG(lane)→AG(node) with a one-layer prefetch buffer so layer i+1's
-    gather overlaps layer i's compute (run.fsdp_prefetch: 0 = cost-model
-    block count, >0 = override, -1 = blocking negative control, which
-    dispatches to the registry's "blocking" gather).  Gradients for the
-    stack need no separate sync: the gather's AD transpose IS the
-    lane_zero3 reduce-scatter.  Optimizer semantics match native: one
-    scalar psum over the (lane × node) shard norms recovers the true
-    global grad norm for clipping, and the flat decay mask reproduces
-    matrices-only weight decay."""
-    ba, run, opt = ctx.ba, ctx.run, ctx.opt
+    """ZeRO-3/FSDP step, family-agnostic: the family's registered
+    BlockSpec (models/blockstack.py) splits the params into the scanned
+    layer stack, the "extras" pseudo-layer (embed/final_norm/...) and the
+    replicated leftovers (the hybrid shared attention block only).  The
+    stack stays sharded 1/p per chip (shard_stack layout) and is
+    re-gathered LAYER BY LAYER inside the forward scan via
+    comm.prefetch_allgather — the pipelined AG(lane)→AG(node) with a
+    one-layer prefetch buffer so layer i+1's gather overlaps layer i's
+    compute (run.fsdp_prefetch: 0 = cost-model block count, >0 =
+    override, -1 = blocking negative control); the extras shard gathers
+    ONCE per step through the same pipeline.  run.fsdp_regather=True
+    re-runs each layer's gather in the backward under remat so backward
+    residuals stay 1/p too (see ShardedStack).  Gradients for both
+    sharded trees need no separate sync: the gathers' AD transposes ARE
+    the lane_zero3 reduce-scatters; only the replicated leftovers (when
+    any) sync through the bucketed lane path.  Optimizer semantics match
+    native: one scalar psum over the (lane × node) shard norms recovers
+    the true global grad norm for clipping, and the flat decay masks
+    reproduce matrices-only weight decay."""
+    ba, run, opt, cfg = ctx.ba, ctx.run, ctx.opt, ctx.cfg
     if len(ba) < 2:
         # zero3 shards over the (lane × node) product and its gather
         # pipeline needs the two levels to be DISTINCT axes; there is no
@@ -268,70 +287,117 @@ def _build_zero3(comm, ctx: StepContext):
     topo = comm.topo
     lf = _make_loss(ctx)
     n_, N_ = topo.sizes(ctx.mesh)
-    spec3 = zero3_layer_spec(ctx.cfg)
-    B3 = resolve_prefetch_blocks(spec3.layer_elems, n_, N_,
-                                 run.fsdp_prefetch)
+    p_ = max(n_ * N_, 1)
+    layouts = zero3_stack_layouts(cfg)
+    lay_b, lay_e = layouts["blocks"], layouts["extras"]
+    Bb = resolve_prefetch_blocks(lay_b.row_elems, n_, N_, run.fsdp_prefetch)
+    Be = resolve_prefetch_blocks(lay_e.row_elems, n_, N_, run.fsdp_prefetch)
     blocking = run.fsdp_prefetch == -1
+    if blocking and run.fsdp_regather:
+        raise ValueError(
+            "fsdp_prefetch=-1 (the blocking negative control) and "
+            "fsdp_regather are mutually exclusive: the re-gather scan "
+            "would silently replace the blocking lowering the control "
+            "is supposed to measure")
 
     def gather_layer(x):
-        return unflatten_layer(comm.prefetch_allgather(x, num_blocks=B3),
-                               spec3)
+        return lay_b.unflatten_row(comm.prefetch_allgather(x, num_blocks=Bb))
+
+    def gather_extras(x):
+        return lay_e.unflatten_row(comm.prefetch_allgather(x, num_blocks=Be))
 
     def step(params, opt_state, tokens, labels, extra=None):
         """lane_zero3 train step.
 
-        params["blocks"] is this chip's shard — any shape reshapeable
-        to (L, B·s), e.g. the local block of the host-side
-        (L, B, n·N, s) layout from zero3_shard_blocks.  opt_state is
-        the split {"rest", "blocks"} state of zero3_opt_init.  The
-        returned params keep the blocks SHARDED (same shape as the
-        input): ZeRO-3 never materializes full parameters outside the
-        per-layer prefetch window.
+        params["blocks"] / params["extras"] are this chip's shards — any
+        shape reshapeable to (L, B·s) / (B·s,), e.g. the local blocks of
+        the host-side (L, B, n·N, s) layouts from shard_stack; every
+        other entry is replicated (the family spec's replicated_keys).
+        opt_state is the split {"rest", "blocks", "extras"} state of
+        zero3_opt_init.  The returned params keep both shards SHARDED
+        (same shapes as the input): ZeRO-3 never materializes full layer
+        parameters outside the per-layer prefetch window (the extras
+        pseudo-layer stays live for the step — the "+1 layer" of the
+        memory model).
         """
         bshape = params["blocks"].shape
-        shards = params["blocks"].reshape(spec3.num_layers, -1)
-        rest = {k: v for k, v in params.items() if k != "blocks"}
+        eshape = params["extras"].shape
+        shards_b = params["blocks"].reshape(lay_b.length, -1)
+        shards_e = params["extras"].reshape(-1)
+        repl = {k: v for k, v in params.items()
+                if k not in ("blocks", "extras")}
+        have_repl = bool(jax.tree.leaves(repl))
 
-        def lf3(rest_p, sh):
-            p = dict(rest_p)
-            p["blocks"] = ShardedBlocks(sh, gather_layer,
-                                        prefetch=not blocking)
-            return lf(p, tokens, labels, extra)
+        # the extras pseudo-layer gathers ONCE per step, OUTSIDE the
+        # microbatch scan (with microbatching the naive in-loss gather
+        # would re-gather the vocab·d payload per µbatch); the explicit
+        # vjp keeps the AD transpose — applying it to the accumulated
+        # cotangent below IS the extras reduce-scatter
+        extras_tree, extras_vjp = jax.vjp(gather_extras, shards_e)
 
-        loss, (g_rest, g_sh) = jax.value_and_grad(
-            lf3, argnums=(0, 1))(rest, shards)
+        def vg(repl_p, sh_b, ext, tok, lab, ex):
+            def lf3(repl_p, sh_b, ext):
+                p = dict(repl_p)
+                p.update(ext)
+                p["blocks"] = ShardedStack(sh_b, gather_layer,
+                                           prefetch=not blocking,
+                                           regather=run.fsdp_regather)
+                return lf(p, tok, lab, ex)
+            return jax.value_and_grad(lf3, argnums=(0, 1, 2))(
+                repl_p, sh_b, ext)
+
+        vg = _microbatched(vg, run.microbatch, _accum_dtype(run))
+        loss, (g_repl, g_b, g_ext) = vg(repl, shards_b, extras_tree,
+                                        tokens, labels, extra)
+        (g_e,) = extras_vjp(jax.tree.map(
+            lambda g, t: g.astype(t.dtype), g_ext, extras_tree))
         loss = jax.lax.pmean(loss, ba)
-        # the gather's transpose already reduce-scattered g_sh over
+        # the gathers' transposes already reduce-scattered g_b/g_e over
         # (lane × node) — sum over replicas; only the mean is left
-        g_sh = g_sh / _axprod(ba)
-        g_rest = comm.grad_sync(g_rest, strategy="lane")
-        # true global grad norm over rest + blocks: the 1/p stripes are
-        # disjoint, so one scalar psum over BOTH levels totals their
-        # square norms; g_rest is fully reduced (replicated), added once
-        gsq_sh = jax.lax.psum(jnp.sum(jnp.square(g_sh)),
-                              (topo.lane_axis, *topo.node_axes))
-        gnorm = jnp.sqrt(gsq_sh + global_norm(g_rest) ** 2)
+        nrep = _axprod(ba)
+        g_b, g_e = g_b / nrep, g_e / nrep
+        if have_repl:
+            g_repl = comm.grad_sync(g_repl, strategy="lane")
+        # true global grad norm over stack + extras + leftovers: the 1/p
+        # stripes are disjoint, so one scalar psum over BOTH levels
+        # totals their square norms; g_repl is fully reduced
+        # (replicated), added once
+        gsq = jax.lax.psum(
+            jnp.sum(jnp.square(g_b)) + jnp.sum(jnp.square(g_e)),
+            (topo.lane_axis, *topo.node_axes))
+        if have_repl:
+            gsq = gsq + global_norm(g_repl) ** 2
+        gnorm = jnp.sqrt(gsq)
         scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
-        new_rest, new_opt_rest = adamw_update(
-            opt, g_rest, opt_state["rest"], rest, grad_norm=gnorm)
-        shard_len = shards.shape[1]
-        dmask = jnp.tile(
-            zero3_param_shard(
-                _zero3_decay_mask(spec3, pad_to=shard_len * topo.p()),
-                topo, B3),
-            spec3.num_layers)
+        new_repl, new_opt_rest = adamw_update(
+            opt, g_repl, opt_state["rest"], repl, grad_norm=gnorm)
+        dmask_b = jnp.tile(
+            zero3_param_shard(lay_b.decay_mask(shards_b.shape[1] * p_),
+                              topo, Bb),
+            lay_b.length)
         ob = opt_state["blocks"]
-        newp, nob = _adamw_flat(
-            opt, g_sh.reshape(-1),
+        newp_b, nob = _adamw_flat(
+            opt, g_b.reshape(-1),
             {"m": ob["m"].reshape(-1), "v": ob["v"].reshape(-1),
              "count": ob["count"]},
-            shards.reshape(-1), scale=scale, decay_mask=dmask)
-        new_params = dict(new_rest)
-        new_params["blocks"] = newp.reshape(bshape)
+            shards_b.reshape(-1), scale=scale, decay_mask=dmask_b)
+        dmask_e = zero3_param_shard(
+            lay_e.decay_mask(shards_e.shape[0] * p_), topo, Be)
+        oe = opt_state["extras"]
+        newp_e, noe = _adamw_flat(
+            opt, g_e, {"m": oe["m"].reshape(-1), "v": oe["v"].reshape(-1),
+                       "count": oe["count"]},
+            shards_e, scale=scale, decay_mask=dmask_e)
+        new_params = dict(new_repl)
+        new_params["blocks"] = newp_b.reshape(bshape)
+        new_params["extras"] = newp_e.reshape(eshape)
         new_opt = {"rest": new_opt_rest,
                    "blocks": {"m": nob["m"].reshape(ob["m"].shape),
                               "v": nob["v"].reshape(ob["v"].shape),
-                              "count": nob["count"]}}
+                              "count": nob["count"]},
+                   "extras": {"m": noe["m"].reshape(oe["m"].shape),
+                              "v": noe["v"].reshape(oe["v"].shape),
+                              "count": noe["count"]}}
         return loss, new_params, new_opt
     return step
 
@@ -343,18 +409,57 @@ def _axprod(axes):
     return n
 
 
-def _zero3_decay_mask(spec3, pad_to: int):
-    """Per-layer 0/1 decay mask in the flat layer layout: 1 where the
-    stacked (L, ...) leaf has ndim >= 2 (len(shape[1:]) >= 1) — the
-    leaves adamw_update decays in the replicated step.  Padding is 0."""
-    parts = [jnp.full((math.prod(s),), 1.0 if len(s) >= 1 else 0.0,
-                      jnp.float32)
-             for s, _ in spec3.metas]
-    m = jnp.concatenate(parts)
-    pad = pad_to - m.shape[0]
-    if pad:
-        m = jnp.concatenate([m, jnp.zeros((pad,), jnp.float32)])
-    return m
+def _accum_dtype(run: RunConfig):
+    return jnp.bfloat16 if run.accum_dtype == "bfloat16" else jnp.float32
+
+
+def _microbatched(vg_fn, mb: int, accum_dtype):
+    """Microbatch gradient accumulation for the lane step builders.
+
+    Wraps a value-and-grad callable ``vg(*diff_args, tokens, labels,
+    extra) -> (loss, grads)`` (``grads`` mirroring the differentiated
+    args) into a version with the identical signature that splits the
+    LOCAL batch (this is inside shard_map — the leading dim is already
+    the per-chip shard) into ``mb`` µbatches scanned sequentially.
+    Gradients accumulate in ``accum_dtype``: fp32 is parity-exact with
+    the unaccumulated step up to summation order; bf16 halves the
+    accumulator's HBM residency (the same error class already accepted
+    for the lane_int8 DCN hop).  ``mb <= 1`` returns ``vg_fn`` unchanged
+    — zero overhead on the default path.
+    """
+    if mb <= 1:
+        return vg_fn
+
+    def wrapped(*args):
+        *diff, tokens, labels, extra = args
+        B = tokens.shape[0]
+        if B % mb:
+            raise ValueError(
+                f"local batch {B} not divisible by microbatch={mb} "
+                f"(pick a global batch divisible by devices × microbatch)")
+        sh = lambda a: None if a is None else \
+            a.reshape(mb, B // mb, *a.shape[1:])
+        toks, labs, ex = sh(tokens), sh(labels), sh(extra)
+        # grads structure comes from the wrapped fn itself (a single tree
+        # or a tuple, depending on argnums) — eval_shape, never traced in
+        _, g_shape = jax.eval_shape(
+            vg_fn, *diff, toks[0], labs[0], None if ex is None else ex[0])
+        g0 = jax.tree.map(lambda s: jnp.zeros(s.shape, accum_dtype),
+                          g_shape)
+
+        def acc(carry, xs):
+            lsum, g = carry
+            t, l = xs[0], xs[1]
+            e = xs[2] if len(xs) == 3 else None
+            li, gi = vg_fn(*diff, t, l, e)
+            g = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), g, gi)
+            return (lsum + li, g), None
+
+        xs = (toks, labs) if ex is None else (toks, labs, ex)
+        (lsum, gsum), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), g0),
+                                       xs)
+        return lsum / mb, jax.tree.map(lambda g: g / mb, gsum)
+    return wrapped
 
 
 def _adamw_flat(opt: AdamWConfig, g, state, p, *, scale=None,
@@ -403,113 +508,60 @@ def zero1_opt_init(params, topo_n: int, num_buckets: int = 0):
 
 
 # ---------------------------------------------------------------------------
-# ZeRO-3 layer sharding (the lane_zero3 / FSDP path)
+# ZeRO-3 stack sharding (the lane_zero3 / FSDP path)
 # ---------------------------------------------------------------------------
 #
-# The scanned layer stack params["blocks"] (every leaf (L, ...)) is
-# flattened per layer into an (L, D) fp32 master copy, padded to
-# D_pad = B·n·N·s, and each chip keeps the (L, B·s) stripe of the
-# gradsync.zero3_param_shard layout.  The host-side array is shaped
-# (L, B, n·N, s) so a plain NamedSharding P(None, None, (*node_axes,
-# lane_axis), None) places exactly stripe (node_rank·N + lane_rank) on
-# each chip — no host-side rank arithmetic.  Everything that both sides
-# of the shard_map boundary must agree on (leaf order, D, B, s) is
-# derived deterministically from the ModelConfig via zero3_layer_spec.
+# The family's scanned layer stack (every leaf (L, ...)) is flattened per
+# layer into an (L, D) fp32 master copy, padded to D_pad = B·n·N·s, and
+# each chip keeps the (L, B·s) stripe of the gradsync.zero3_param_shard
+# layout; the non-stack, non-replicated params (embed/final_norm/...)
+# become the "extras" pseudo-layer — one more (1, Be, n·N, se) master.
+# The host-side arrays are shaped (L, B, n·N, s) so a plain NamedSharding
+# P(None, None, (*node_axes, lane_axis), None) places exactly stripe
+# (node_rank·N + lane_rank) on each chip — no host-side rank arithmetic.
+# The layout machinery itself is family-agnostic and lives in
+# repro.models.blockstack (StackLayout / shard_stack /
+# resolve_prefetch_blocks, re-exported here); everything both sides of
+# the shard_map boundary must agree on derives deterministically from
+# the ModelConfig via zero3_stack_layouts.
 
-class Zero3LayerSpec:
-    """Flat layout of ONE layer's parameter tree (derived via eval_shape,
-    so it never materializes weights)."""
-
-    def __init__(self, metas, treedef, layer_elems: int, num_layers: int):
-        self.metas = metas              # ((shape[1:], dtype) per leaf)
-        self.treedef = treedef
-        self.layer_elems = layer_elems  # D: unpadded flat size per layer
-        self.num_layers = num_layers
-
-
-def zero3_layer_spec(cfg: ModelConfig) -> Zero3LayerSpec:
+def zero3_stack_layouts(cfg: ModelConfig) -> dict:
+    """``{"blocks": StackLayout, "extras": StackLayout}`` of the family's
+    sharded stacks (derived via eval_shape — never materializes
+    weights).  ``blocks`` is the (L, ...) scanned stack; ``extras`` is
+    the single pseudo-layer of everything else except the family spec's
+    replicated keys."""
+    fspec = block_stack_spec(cfg)
     abs_params = jax.eval_shape(
         lambda: init_model(jax.random.PRNGKey(0), cfg))
-    leaves, treedef = jax.tree.flatten(abs_params["blocks"])
-    metas = tuple((tuple(l.shape[1:]), l.dtype) for l in leaves)
-    elems = sum(math.prod(s) for s, _ in metas)
-    return Zero3LayerSpec(metas, treedef, elems, leaves[0].shape[0])
+    stack, extras, _ = split_params(fspec, abs_params)
+    return {"blocks": stack_layout(stack, stacked=True),
+            "extras": stack_layout(extras, stacked=False)}
 
 
-def unflatten_layer(vec, spec: Zero3LayerSpec):
-    """Padded flat fp32 layer vector -> the layer's parameter tree (leaves
-    cast back to their stored dtypes)."""
-    out, ofs = [], 0
-    for shape, dtype in spec.metas:
-        sz = math.prod(shape)
-        out.append(vec[ofs:ofs + sz].reshape(shape).astype(dtype))
-        ofs += sz
-    return jax.tree.unflatten(spec.treedef, out)
-
-
-def resolve_prefetch_blocks(layer_elems: int, n: int, N: int,
-                            override: int = 0) -> int:
-    """The B every lane_zero3 call site uses (shard layout, opt-state
-    size, per-layer gather pipeline).  override > 0 wins; -1 (blocking
-    negative control) gathers monolithically so B degenerates to 1;
-    otherwise the cost model picks B from the DCN latency/bandwidth
-    crossover on the per-chip stripe.  Capped so each block keeps at
-    least one row per chip."""
-    p = max(n * N, 1)
-    if override > 0:
-        b = override
-    elif override < 0:
-        b = 1
-    else:
-        b = optimal_prefetch_blocks(layer_elems * 4 / p)
-    return max(1, min(b, max(1, layer_elems // p)))
-
-
-def _flatten_blocks_layerwise(blocks, pad_to: int):
-    leaves, _ = jax.tree.flatten(blocks)
-    L = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [l.reshape(L, -1).astype(jnp.float32) for l in leaves], axis=1)
-    pad = (-flat.shape[1]) % pad_to
-    if pad:
-        flat = jnp.concatenate(
-            [flat, jnp.zeros((L, pad), flat.dtype)], axis=1)
-    return flat
-
-
-def zero3_shard_blocks(blocks, n: int, N: int, fsdp_prefetch: int = 0):
-    """Host-side: the (L, B, n·N, s) fp32 master layout of the stacked
-    layer tree.  Place on the mesh with
-    ``P(None, None, (*node_axes, lane_axis), None)`` and each chip's
-    local block reshapes to the (L, B·s) shard the train step expects.
-    Returns (array, B)."""
-    leaves = jax.tree.leaves(blocks)
-    L = leaves[0].shape[0]
-    elems = sum(math.prod(l.shape[1:]) for l in leaves)
-    B = resolve_prefetch_blocks(elems, n, N, fsdp_prefetch)
-    p = n * N
-    flat = _flatten_blocks_layerwise(blocks, pad_to=B * p)
-    s = flat.shape[1] // (B * p)
-    return flat.reshape(L, B, p, s), B
-
-
-def zero3_opt_init(params, n: int, N: int, fsdp_prefetch: int = 0):
-    """Split optimizer state for the lane_zero3 step: ordinary AdamW tree
-    state for the replicated non-block params, flat sharded fp32 moments
-    (in the zero3_shard_blocks layout) for the layer stack.  The B
-    resolution MUST match the step's (resolve_prefetch_blocks is
-    deterministic, so the default 0 agrees; pass the same
-    run.fsdp_prefetch override on both sides)."""
-    blocks = params["blocks"]
-    rest = {k: v for k, v in params.items() if k != "blocks"}
-    # derive the moment shape FROM zero3_shard_blocks (via eval_shape, no
+def zero3_opt_init(cfg: ModelConfig, params, n: int, N: int,
+                   fsdp_prefetch: int = 0):
+    """Split optimizer state for the lane_zero3 step: flat sharded fp32
+    moments in the (L, B, p, s) master layouts for the layer stack AND
+    the extras pseudo-layer, ordinary AdamW tree state for the family's
+    replicated keys (empty for most families; the hybrid weight-shared
+    attention block).  The B resolution MUST match the step's
+    (resolve_prefetch_blocks is deterministic, so the default 0 agrees;
+    pass the same run.fsdp_prefetch override on both sides)."""
+    fspec = block_stack_spec(cfg)
+    stack, extras, repl = split_params(fspec, params)
+    # derive the moment shapes FROM shard_stack (via eval_shape, no
     # weight materialization) so the layout invariant lives in one place
-    shard = jax.eval_shape(
-        lambda b: zero3_shard_blocks(b, n, N, fsdp_prefetch)[0], blocks)
-    zeros = jnp.zeros(shard.shape, jnp.float32)
-    return {"rest": adamw_init(rest),
-            "blocks": {"m": zeros, "v": zeros,
-                       "count": jnp.zeros((), jnp.int32)}}
+    sh_b = jax.eval_shape(
+        lambda b: shard_stack(b, n, N, fsdp_prefetch)[0], stack)
+    sh_e = jax.eval_shape(
+        lambda e: shard_stack(e, n, N, fsdp_prefetch, stacked=False)[0],
+        extras)
+    flat_state = lambda s: {"m": jnp.zeros(s.shape, jnp.float32),
+                            "v": jnp.zeros(s.shape, jnp.float32),
+                            "count": jnp.zeros((), jnp.int32)}
+    return {"rest": adamw_init(repl), "blocks": flat_state(sh_b),
+            "extras": flat_state(sh_e)}
 
 
 # ---------------------------------------------------------------------------
@@ -558,13 +610,18 @@ def zero1_checkpoint_layout(params, n: int, num_buckets: int = 0):
 
 def zero3_checkpoint_layout(cfg: ModelConfig, n: int, N: int,
                             fsdp_prefetch: int = 0):
-    """Checkpoint layout of the lane_zero3 (L, B, p, s) masters (the SAME
-    B resolution as zero3_shard_blocks / zero3_opt_init / the step)."""
+    """Checkpoint layout of the lane_zero3 (L, B, p, s) masters — the
+    layer stack AND the extras pseudo-layer (the SAME B resolution as
+    shard_stack / zero3_opt_init / the step)."""
     from repro.checkpoint import Zero3CheckpointLayout
-    spec3 = zero3_layer_spec(cfg)
-    B = resolve_prefetch_blocks(spec3.layer_elems, n, N, fsdp_prefetch)
-    return Zero3CheckpointLayout(spec3.num_layers, spec3.layer_elems, B,
-                                 max(n * N, 1))
+    layouts = zero3_stack_layouts(cfg)
+    lay_b, lay_e = layouts["blocks"], layouts["extras"]
+    Bb = resolve_prefetch_blocks(lay_b.row_elems, n, N, fsdp_prefetch)
+    Be = resolve_prefetch_blocks(lay_e.row_elems, n, N, fsdp_prefetch)
+    return Zero3CheckpointLayout(lay_b.length, lay_b.row_elems, Bb,
+                                 max(n * N, 1),
+                                 extra_elems=lay_e.row_elems,
+                                 extra_blocks=Be)
 
 
 def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
@@ -572,7 +629,7 @@ def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
     """Master state + specs + checkpoint layout for ``run.gradsync``.
 
     ``params`` is the replicated init_model tree; the ZeRO flavors
-    re-lay it out host-side (zero3_shard_blocks) and build fresh sharded
+    re-lay it out host-side (blockstack.shard_stack) and build fresh sharded
     optimizer state.  Pass the ``comm`` returned by
     ``build_train_step_lane`` so the layout/topology decision is read off
     the SAME object the step was built against (None re-derives it from
@@ -600,26 +657,235 @@ def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
                   "count": P()}
         return LaneTrainState(params, opt, pspecs, ospecs, layout)
     assert kind == "zero3", kind
-    shards, B = zero3_shard_blocks(params["blocks"], n, N,
-                                   run.fsdp_prefetch)
+    fspec = block_stack_spec(cfg)
+    stack, extras, repl = split_params(fspec, params)
+    shards_b, Bb = shard_stack(stack, n, N, run.fsdp_prefetch)
+    shards_e, Be = shard_stack(extras, n, N, run.fsdp_prefetch,
+                               stacked=False)
     layout = zero3_checkpoint_layout(cfg, n, N, run.fsdp_prefetch)
-    if tuple(shards.shape) != layout.master_shape or B != layout.num_blocks:
-        # both sides derive B/padding from the layer element count; if
-        # the real block tree and zero3_layer_spec ever disagree the
+    if tuple(shards_b.shape) != layout.master_shape \
+            or Bb != layout.num_blocks \
+            or tuple(shards_e.shape) != layout.extra_master_shape \
+            or Be != layout.extra_blocks:
+        # both sides derive B/padding from the stack element counts; if
+        # the real trees and zero3_stack_layouts ever disagree the
         # checkpoint would silently record the wrong geometry
         raise ValueError(
-            f"zero3 master layout drift: sharded blocks {shards.shape} "
-            f"(B={B}) vs checkpoint layout {layout.master_shape} "
-            f"(B={layout.num_blocks})")
-    p3 = {k: v for k, v in params.items() if k != "blocks"}
-    p3["blocks"] = shards
-    opt = zero3_opt_init(params, n, N, run.fsdp_prefetch)
+            f"zero3 master layout drift: sharded stacks "
+            f"{shards_b.shape}/{shards_e.shape} (B={Bb}/{Be}) vs "
+            f"checkpoint layout {layout.master_shape}/"
+            f"{layout.extra_master_shape} "
+            f"(B={layout.num_blocks}/{layout.extra_blocks})")
+    p3 = dict(repl)
+    p3["blocks"] = shards_b
+    p3["extras"] = shards_e
+    opt = zero3_opt_init(cfg, params, n, N, run.fsdp_prefetch)
     master_spec = P(None, None, (*topo.node_axes, topo.lane_axis), None)
     pspecs = jax.tree.map(lambda _: P(), p3)
-    pspecs["blocks"] = master_spec
+    pspecs["blocks"] = pspecs["extras"] = master_spec
     ospecs = jax.tree.map(lambda _: P(), opt)
     ospecs["blocks"]["m"] = ospecs["blocks"]["v"] = master_spec
+    ospecs["extras"]["m"] = ospecs["extras"]["v"] = master_spec
     return LaneTrainState(p3, opt, pspecs, ospecs, layout)
+
+
+# ---------------------------------------------------------------------------
+# cross-layout restore (zero3 <-> zero1 <-> replicated, via canonical order)
+# ---------------------------------------------------------------------------
+#
+# Every checkpoint layout canonicalizes to the SAME underlying element
+# order (the unpadded flat parameter order — see the flat-order
+# primitives in repro.checkpoint.layouts), so a checkpoint written under
+# one strategy layout restores into another: lift the stored canonical
+# leaves to the replicated (params, adamw) form, then re-lay them out
+# through the destination layout exactly like init_lane_train_state lays
+# out a fresh init.  Pure reshape/transpose end to end; the only value
+# change is the dtype cast when a fp32 ZeRO master restores into a
+# sub-fp32 replicated parameter (and back).  Geometry that genuinely
+# differs — a different model — still raises.
+
+def _abs_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def _abs_adamw(params_t):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, params_t),
+            "v": jax.tree.map(f32, params_t),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _canonical_state_template(cfg: ModelConfig, entry: dict):
+    """Abstract (params, opt_state) tree whose leaves have the CANONICAL
+    shapes a checkpoint of layout ``entry`` stores — the pairing target
+    for repro.checkpoint.load_canonical's raw arrays."""
+    kind = (entry or {}).get("kind", "replicated")
+    params_t = _abs_params(cfg)
+    if kind == "replicated":
+        return params_t, _abs_adamw(params_t)
+    f32 = lambda shape: jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+    count_t = jax.ShapeDtypeStruct((), jnp.int32)
+    if kind == "zero1":
+        total = int(entry.get("total_elems", 0))
+        return params_t, {"m": f32((total,)), "v": f32((total,)),
+                         "count": count_t}
+    if kind != "zero3":
+        raise ValueError(f"unknown checkpoint layout kind {kind!r}")
+    if not entry.get("extra_elems"):
+        raise ValueError(
+            "zero3 checkpoint predates the extras pseudo-layer (no "
+            "extra_elems in its layout entry); cross-layout restore "
+            "needs the current master format")
+    fspec = block_stack_spec(cfg)
+    stack_t, extras_t, repl_t = split_params(fspec, params_t)
+    lay_b = stack_layout(stack_t, stacked=True)
+    lay_e = stack_layout(extras_t, stacked=False)
+    flat_t = lambda lay: {"m": f32((lay.length, lay.row_elems)),
+                          "v": f32((lay.length, lay.row_elems)),
+                          "count": count_t}
+    p_t = dict(repl_t)
+    p_t["blocks"] = f32((lay_b.length, lay_b.row_elems))
+    p_t["extras"] = f32((1, lay_e.row_elems))
+    o_t = {"rest": _abs_adamw(repl_t), "blocks": flat_t(lay_b),
+           "extras": flat_t(lay_e)}
+    return p_t, o_t
+
+
+def state_to_replicated(cfg: ModelConfig, entry: dict, state):
+    """Canonical-form (params, opt_state) of layout ``entry`` -> the
+    replicated (params tree, adamw tree) form.  Host-side plumbing: the
+    flat-order split/unstack primitives only."""
+    import numpy as np
+    kind = (entry or {}).get("kind", "replicated")
+    if kind == "replicated":
+        return state
+    params, opt = state
+    params_t = _abs_params(cfg)
+    if kind == "zero1":
+        from repro.checkpoint import split_flat_order
+        leaves_t = jax.tree.leaves(params_t)
+        treedef = jax.tree.structure(params_t)
+        mk = lambda flat: jax.tree.unflatten(
+            treedef, split_flat_order(flat, [l.shape for l in leaves_t]))
+        return params, {"m": mk(opt["m"]), "v": mk(opt["v"]),
+                        "count": opt["count"]}
+    assert kind == "zero3", kind
+    fspec = block_stack_spec(cfg)
+    stack_t, extras_t, _ = split_params(fspec, params_t)
+    lay_b = stack_layout(stack_t, stacked=True)
+    lay_e = stack_layout(extras_t, stacked=False)
+    p_repl = {k: v for k, v in params.items()
+              if k not in ("blocks", "extras")}
+    p_repl.update(lay_e.unflatten(np.asarray(params["extras"])))
+    p_repl["blocks"] = lay_b.unflatten(np.asarray(params["blocks"]))
+
+    def moments(name):
+        tree = {k: v for k, v in opt["rest"][name].items()}
+        tree.update(lay_e.unflatten(np.asarray(opt["extras"][name]),
+                                    dtype=np.float32))
+        tree["blocks"] = lay_b.unflatten(np.asarray(opt["blocks"][name]),
+                                         dtype=np.float32)
+        return tree
+
+    return p_repl, {"m": moments("m"), "v": moments("v"),
+                    "count": opt["blocks"]["count"]}
+
+
+def replicated_to_state(cfg: ModelConfig, run: RunConfig, n: int, N: int,
+                        params, opt_state, *, kind: str):
+    """Replicated (params, adamw) values -> the host master state of
+    layout ``kind`` for the CURRENT (n, N) topology — the value-carrying
+    twin of init_lane_train_state's layout path."""
+    import numpy as np
+    if kind == "replicated":
+        # cast back into the model's parameter dtypes (a fp32 ZeRO
+        # master restoring into a bf16 replicated run)
+        params_t = _abs_params(cfg)
+        params = jax.tree.map(
+            lambda v, t: np.asarray(v).astype(t.dtype), params, params_t)
+        return params, opt_state
+    if kind == "zero1":
+        import jax.tree_util as jtu
+        from repro.checkpoint import concat_flat_order
+        layout = zero1_checkpoint_layout(params, n, run.gradsync_buckets)
+        lay1 = lambda tree: layout.from_canonical(
+            (jtu.DictKey("m"),),
+            concat_flat_order(jax.tree.leaves(tree)))
+        return params, {"m": lay1(opt_state["m"]),
+                        "v": lay1(opt_state["v"]),
+                        "count": opt_state["count"]}
+    assert kind == "zero3", kind
+    fspec = block_stack_spec(cfg)
+    stack, extras, repl = split_params(fspec, params)
+    shards_b, _ = shard_stack(stack, n, N, run.fsdp_prefetch)
+    shards_e, _ = shard_stack(extras, n, N, run.fsdp_prefetch,
+                              stacked=False)
+    p3 = dict(repl)
+    p3["blocks"] = np.asarray(shards_b)
+    p3["extras"] = np.asarray(shards_e)
+
+    def flat_state(name):
+        m_stack, m_extras, _ = split_params(fspec, opt_state[name])
+        return (np.asarray(shard_stack(m_stack, n, N,
+                                       run.fsdp_prefetch)[0]),
+                np.asarray(shard_stack(m_extras, n, N, run.fsdp_prefetch,
+                                       stacked=False)[0]))
+    mb, me = flat_state("m")
+    vb, ve = flat_state("v")
+    count = opt_state["count"]
+    _, _, m_repl = split_params(fspec, opt_state["m"])
+    _, _, v_repl = split_params(fspec, opt_state["v"])
+    o3 = {"rest": {"m": m_repl, "v": v_repl, "count": count},
+          "blocks": {"m": mb, "v": vb, "count": count},
+          "extras": {"m": me, "v": ve, "count": count}}
+    return p3, o3
+
+
+def restore_lane_train_state(ckpt_dir: str, cfg: ModelConfig,
+                             run: RunConfig, mesh, st: LaneTrainState,
+                             step: Optional[int] = None, shardings=None):
+    """Restore a checkpoint into ``st``'s master layout, converting
+    through the canonical replicated form when the checkpoint was
+    written under a DIFFERENT strategy layout (e.g. a ``lane_zero3``
+    checkpoint into a ``lane_zero1`` or replicated run, and back).
+    Same-kind restores delegate to the ordinary layout-validated path.
+    Returns ((params, opt_state), step); ``shardings`` (a
+    ``st.to_shardings(mesh)`` pair) device_puts the result."""
+    from repro.checkpoint import load_canonical, restore_checkpoint
+    from repro.checkpoint.store import peek_manifest
+    # decide the kind from the manifest ALONE: the common same-kind
+    # resume must not pay a second full read of multi-GB master arrays
+    man, got = peek_manifest(ckpt_dir, step)
+    entry = man.get("layout") or {}
+    src_kind = entry.get("kind", "replicated")
+    if src_kind == st.ckpt_layout.kind:
+        return restore_checkpoint(
+            ckpt_dir, (st.params, st.opt_state), step=got,
+            shardings=shardings, layout=st.ckpt_layout)
+    _, arrays, got = load_canonical(ckpt_dir, got)
+    src_t = _canonical_state_template(cfg, entry)
+    refs = jax.tree.leaves(src_t)
+    if len(refs) != len(arrays):
+        raise ValueError(
+            f"checkpoint holds {len(arrays)} leaves but a {src_kind!r} "
+            f"state of this model has {len(refs)} (different model?)")
+    for i, (ref, arr) in enumerate(zip(refs, arrays)):
+        if tuple(ref.shape) != tuple(arr.shape):
+            raise ValueError(
+                f"cross-layout restore: canonical leaf {i} has shape "
+                f"{tuple(arr.shape)} but a {src_kind!r} state of this "
+                f"model stores {tuple(ref.shape)} (different model?)")
+    src_state = jax.tree.unflatten(jax.tree.structure(src_t), arrays)
+    repl_params, repl_opt = state_to_replicated(cfg, entry, src_state)
+    ba = batch_axes(mesh)
+    topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
+    n, N = topo.sizes(mesh)
+    params, opt = replicated_to_state(cfg, run, n, N, repl_params,
+                                      repl_opt, kind=st.ckpt_layout.kind)
+    if shardings is not None:
+        params = jax.tree.map(jax.device_put, params, shardings[0])
+        opt = jax.tree.map(jax.device_put, opt, shardings[1])
+    return (params, opt), got
 
 
 # ---------------------------------------------------------------------------

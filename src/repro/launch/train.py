@@ -44,11 +44,11 @@ from repro.configs import resolve, RunConfig
 from repro.configs.base import ShapeConfig
 from repro.models import init_model
 from repro.optim import AdamWConfig
-from repro.checkpoint import AsyncCheckpointer, restore_checkpoint, \
-    latest_step
+from repro.checkpoint import AsyncCheckpointer, latest_step
 from repro.data import make_loader
 from repro.launch.mesh import batch_axes
-from repro.launch.steps import build_train_step_lane, init_lane_train_state
+from repro.launch.steps import (build_train_step_lane, init_lane_train_state,
+                                restore_lane_train_state)
 from repro.runtime.elastic import plan_elastic_mesh
 
 
@@ -123,6 +123,16 @@ def main(argv=None):
     ap.add_argument("--fsdp-prefetch", type=int, default=0,
                     help="lane_zero3 gather blocks B; 0 = auto, "
                          "-1 = blocking negative control")
+    ap.add_argument("--fsdp-regather", action="store_true",
+                    help="lane_zero3 backward re-gather: re-run each "
+                         "layer's weight gather in the backward under "
+                         "remat (backward residuals stay 1/p)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient-accumulation microbatches per step "
+                         "(0 = off); the LOCAL batch must divide by it")
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="microbatch gradient accumulator precision")
     ap.add_argument("--pods", type=int, default=0,
                     help="pod (lane) axis size; 0 = auto (lane_zero3 "
                          "gets 2 when devices allow, else 1)")
@@ -146,7 +156,10 @@ def main(argv=None):
     run = RunConfig(model=cfg, shape=shape, remat=args.remat,
                     gradsync=args.gradsync,
                     gradsync_buckets=args.gradsync_buckets,
-                    fsdp_prefetch=args.fsdp_prefetch)
+                    fsdp_prefetch=args.fsdp_prefetch,
+                    fsdp_regather=args.fsdp_regather,
+                    microbatch=args.microbatch,
+                    accum_dtype=args.accum_dtype)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
 
@@ -162,10 +175,14 @@ def main(argv=None):
         if args.ckpt else None
     if args.ckpt and latest_step(args.ckpt) is not None:
         # the host-side st trees are only the shape/layout targets here —
-        # don't device_put a full init state just to overwrite it
-        (params, opt_state), start_step = restore_checkpoint(
-            args.ckpt, (st.params, st.opt_state),
-            shardings=(pshard, oshard), layout=st.ckpt_layout)
+        # don't device_put a full init state just to overwrite it.
+        # restore_lane_train_state handles BOTH same-kind restores and
+        # cross-layout ones (a lane_zero3 checkpoint resuming under
+        # lane_zero1 or a replicated strategy, and back) through the
+        # canonical flat order
+        (params, opt_state), start_step = restore_lane_train_state(
+            args.ckpt, cfg, run, mesh, st,
+            shardings=(pshard, oshard))
         print(f"resumed from step {start_step} "
               f"(layout {st.ckpt_layout.kind})")
     else:

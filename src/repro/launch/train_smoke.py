@@ -16,26 +16,46 @@ restore failure raises).  A strategy the driver cannot serve — missing
 layout registration, broken state init, un-restorable checkpoint —
 fails the build here rather than surviving as a benchmark-only artifact.
 
+The ``lane_zero3`` strategy additionally sweeps the model FAMILIES
+(dense/transformer, ssm, hybrid, moe — the driver-trainable subset of
+the block-stack registry): the sharded stack is family-agnostic now,
+and a family whose registered BlockSpec cannot actually train + restore
+through the driver fails the build here too.
+
 Usage:  python -m repro.launch.train_smoke   (wired into ``make ci``)
 """
 import sys                                                    # noqa: E402
 import tempfile                                               # noqa: E402
 
-
 def main(argv=None) -> int:
     from repro.checkpoint import latest_step
     from repro.comm import strategies_for
     from repro.launch.train import main as train_main
+    from repro.models.blockstack import family_smoke_archs
     import repro.launch.steps  # noqa: F401 - registers train_step table
 
+    # the zero3 family sweep DERIVES from the block-stack registry (the
+    # driver-trainable subset: vlm/audio declare needs_extra_embeds and
+    # are covered by the conformance grid instead) — a newly registered
+    # family joins the sweep without an edit here
+    sweep_archs = family_smoke_archs(driver_trainable_only=True)
+
     strategies = strategies_for("train_step")
-    fails = []
+    cells = []
     for s in strategies:
-        print(f"=== train-smoke {s} ===", flush=True)
+        if s == "lane_zero3":
+            cells += [(s, fam, arch) for fam, arch in sweep_archs.items()]
+        else:
+            cells.append((s, "dense", "llama3.2-3b"))
+
+    fails = []
+    for s, fam, arch in cells:
+        name = f"{s}[{fam}]" if s == "lane_zero3" else s
+        print(f"=== train-smoke {name} ===", flush=True)
         try:
             with tempfile.TemporaryDirectory() as td:
                 ck = f"{td}/ck"
-                base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                base = ["--arch", arch, "--smoke", "--batch", "8",
                         "--seq", "32", "--ckpt", ck, "--ckpt-every", "2",
                         "--log-every", "1", "--gradsync", s, "--pods", "2"]
                 rc = train_main([*base, "--steps", "2"])
@@ -45,12 +65,12 @@ def main(argv=None) -> int:
                 assert rc == 0 and latest_step(ck) == 3, \
                     (rc, latest_step(ck))
         except Exception as e:  # noqa: BLE001
-            fails.append(s)
-            print(f"FAIL {s}: {e!r}", flush=True)
+            fails.append(name)
+            print(f"FAIL {name}: {e!r}", flush=True)
         else:
-            print(f"PASS {s}", flush=True)
-    print(f"train-smoke: {len(strategies) - len(fails)}/{len(strategies)} "
-          f"strategies OK" + (f"; FAILED {fails}" if fails else ""))
+            print(f"PASS {name}", flush=True)
+    print(f"train-smoke: {len(cells) - len(fails)}/{len(cells)} "
+          f"cells OK" + (f"; FAILED {fails}" if fails else ""))
     return len(fails)
 
 

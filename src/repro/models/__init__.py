@@ -1,4 +1,8 @@
 """Composable model zoo: dense/GQA/SWA, MoE, Mamba2-SSD, hybrid, enc-dec, VLM."""
+from .blockstack import (
+    BlockSpec, ShardedStack, StackLayout, block_stack_families,
+    block_stack_spec, scan_stack, shard_stack, stack_layout,
+)
 from .transformer import (
     init_model, model_forward, init_cache, prefill, decode_step,
     make_train_step, make_prefill_step, make_decode_step, loss_fn,

@@ -34,6 +34,8 @@ from . import layers as L
 from . import attention as A
 from . import ssm as S
 from . import moe as M
+from .blockstack import (BlockSpec, ShardedBlocks, ShardedStack,
+                         block_stack_spec, register_block_stack, scan_stack)
 
 # activation-sharding hints live in layers.py (shared with moe/ssm);
 # re-exported here for the launch layer.
@@ -181,82 +183,9 @@ def _mamba_block(lp, h, cfg: ModelConfig, state=None):
 
 
 # families whose layer stack is one lax.scan over params["blocks"] — the
-# shape ZeRO-3 sharding (ShardedBlocks below) can substitute into
+# shape ZeRO-3 sharding (ShardedStack, repro.models.blockstack) can
+# substitute into directly; ssm/hybrid scan through their own bodies
 _SCANNED_FAMILIES = ("dense", "vlm", "moe", "audio")
-
-
-# ---------------------------------------------------------------------------
-# ZeRO-3 / FSDP sharded layer stack (paper §5 applied to the weight gather)
-# ---------------------------------------------------------------------------
-
-class ShardedBlocks:
-    """Stand-in for ``params["blocks"]`` when the scanned layer stack is
-    ZeRO-3 sharded: each chip holds its 1/p stripe of every layer's flat
-    weight vector plus the recipe to re-gather one layer on demand.
-
-    shards   (L, B·s)-reshapeable array — this chip's per-layer stripe in
-             the bucket-major ``zero3_param_shard`` layout.  Differentiable
-             through the gather: the cotangent arriving on ``shards`` is
-             the batch-summed, fully reduce-scattered layer gradient (the
-             all-gather's transpose IS the lane_zero3 reduce-scatter).
-    gather   shard row -> one layer's parameter tree (built by
-             launch/steps.py around ``pipelined_allgather_lane``).
-    prefetch True: the layer scan carries a one-layer prefetch buffer —
-             layer i+1's all-gather is issued in the same scan step as
-             layer i's compute with no data dependence between them, so
-             XLA may overlap gather and matmuls (verified structurally by
-             ``launch.hlo_stats.collective_compute_concurrency``).
-             False: blocking gather — each layer's compute consumes its
-             own all-gather (the negative control).
-
-    Not a pytree on purpose: it only ever exists *inside* a traced loss
-    function (steps.py closes over gather and passes the shard array as
-    the differentiated argument), so it must never cross a jit/grad
-    boundary itself.
-    """
-
-    def __init__(self, shards, gather, *, prefetch: bool = True):
-        self.shards = shards
-        self.gather = gather
-        self.prefetch = prefetch
-
-
-def _scan_blocks_prefetch(blocks: ShardedBlocks, h, body):
-    """Layer scan over ZeRO-3 shards with a one-layer prefetch buffer.
-
-    ``body(h, layer_params) -> (h', aux)`` is the ordinary (possibly
-    remat'd) block body.  In prefetch mode the carry holds the *gathered*
-    params of the layer about to run: step t gathers layer t+1's weights
-    from its shard row while computing layer t from the carry — within a
-    step the all-gather and the dots touch disjoint values, which is
-    exactly the structural concurrency the §5 pipeline needs.  The scan
-    covers layers 0..L-2 (xs = shard rows 1..L-1); layer L-1 runs OUTSIDE
-    the loop on the final carry, so exactly L gathers execute per forward
-    — a wrapped xs would re-gather layer 0 on the last trip, and XLA
-    cannot drop work from a single iteration of a while loop.
-    """
-    shards, gather = blocks.shards, blocks.gather
-    if not blocks.prefetch:
-        # blocking: layer t's dots are data-dependent on layer t's gather
-        def step_blocking(h, x):
-            return body(h, gather(x))
-        return lax.scan(step_blocking, h, shards)
-
-    w0 = gather(shards[0])                  # layer 0: unavoidably blocking
-    if shards.shape[0] == 1:
-        h, a = body(h, w0)
-        return h, jnp.asarray(a)[None]
-
-    def step(carry, x):
-        h, w = carry
-        w_next = gather(x)                  # prefetch layer t+1 (no dep on w)
-        h, a = body(h, w)                   # compute layer t
-        return (h, w_next), a
-
-    (h, w_last), aux_ys = lax.scan(step, (h, w0), shards[1:])
-    h, a_last = body(h, w_last)             # layer L-1: already gathered
-    return h, jnp.concatenate([jnp.atleast_1d(aux_ys),
-                               jnp.asarray(a_last)[None]])
 
 
 # ---------------------------------------------------------------------------
@@ -318,13 +247,18 @@ def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     Bz, T, _ = h.shape
     positions = jnp.arange(T)[None]
     aux_total = jnp.zeros((), jnp.float32)
-    if isinstance(params.get("blocks"), ShardedBlocks) and \
-            cfg.family not in _SCANNED_FAMILIES:
-        raise NotImplementedError(
-            "ZeRO-3 sharded blocks support the scanned attention families "
-            f"only, not {cfg.family!r}")
 
-    if cfg.family in _SCANNED_FAMILIES:
+    if isinstance(params.get("blocks"), ShardedStack):
+        # ONE code path for every lane-capable family: the registered
+        # BlockSpec supplies the per-layer body, scan_stack supplies the
+        # prefetch/blocking/regather layer scan (models/blockstack.py)
+        spec = block_stack_spec(cfg)
+        body = spec.make_body(cfg, params, positions=positions,
+                              enc_out=enc_out, remat=remat)
+        h, aux_ys = scan_stack(params["blocks"], h, body)
+        aux_total = jnp.sum(aux_ys)
+
+    elif cfg.family in _SCANNED_FAMILIES:
         # aux losses leave via ys, not the carry (a mixed-dtype carry made
         # XLA:CPU stack an f32 copy of every layer's h for the backward)
         def body(h, lp):
@@ -332,11 +266,7 @@ def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
                                 enc_out=enc_out)
             return _pin(h), a
         body = _maybe_remat(body, remat)
-        blocks = params["blocks"]
-        if isinstance(blocks, ShardedBlocks):
-            h, aux_ys = _scan_blocks_prefetch(blocks, h, body)
-        else:
-            h, aux_ys = lax.scan(body, h, blocks)
+        h, aux_ys = lax.scan(body, h, params["blocks"])
         aux_total = jnp.sum(aux_ys)
 
     elif cfg.family == "ssm":
@@ -398,6 +328,94 @@ def _hybrid_forward(params, cfg: ModelConfig, h, positions, remat):
         tail_p = _tree_rest(params["blocks"], groups * every)
         h, _ = lax.scan(mamba_body, h, tail_p)
     return h
+
+
+# ---------------------------------------------------------------------------
+# block-stack specs: how each family rides the ZeRO-3 sharded stack
+# (registered through the repro.comm registry seam; the machinery lives in
+# models/blockstack.py, the zero3 step resolves specs via block_stack_spec)
+# ---------------------------------------------------------------------------
+
+def _scanned_stack_body(cfg, params, *, positions, enc_out, remat):
+    """Per-layer body of the scanned attention families (dense/vlm/moe/
+    audio): identical math to the replicated layer scan."""
+    def body(h, lp, i):
+        h, a = _dense_block(lp, h, cfg, positions=positions,
+                            enc_out=enc_out)
+        return _pin(h), a
+    return _maybe_remat(body, remat)
+
+
+def _ssm_stack_body(cfg, params, *, positions, enc_out, remat):
+    """Mamba2 SSD scan bodies as the sharded layer unit."""
+    def body(h, lp, i):
+        h, _ = _mamba_block(lp, h, cfg)
+        return _pin(h), jnp.zeros((), jnp.float32)
+    return _maybe_remat(body, remat)
+
+
+def _hybrid_stack_body(cfg, params, *, positions, enc_out, remat):
+    """Zamba2 grouped layout as a flat per-layer scan: the weight-SHARED
+    attention block (replicated — it runs ``groups`` times per forward,
+    so sharding it would re-gather the same bytes repeatedly) fires
+    before Mamba2 layer i exactly when i opens a group; the tail layers
+    past ``groups·every`` never see it — the same schedule as the
+    replicated ``_hybrid_forward``, without its nested group scan.  The
+    remat cell is the per-layer body only, and the prefetch gather stays
+    OUTSIDE it, so a backward recompute re-runs the block math but never
+    the gather (pinned by the gather-count HLO case)."""
+    groups, every, tail = _hybrid_split(cfg)
+    shared = params["shared_attn"]
+
+    def shared_block(h):
+        h = _attn_noncache(shared, h, cfg, causal=True, positions=positions,
+                           window=cfg.sliding_window)
+        h, _ = _ffn(shared, h, cfg)
+        return h
+
+    def body(h, lp, i):
+        at_group_start = jnp.logical_and(i % every == 0,
+                                         i < groups * every)
+        h = lax.cond(at_group_start, shared_block, lambda hh: hh, h)
+        h, _ = _mamba_block(lp, h, cfg)
+        return _pin(h), jnp.zeros((), jnp.float32)
+    return _maybe_remat(body, remat)
+
+
+@register_block_stack("dense")
+@register_block_stack("vlm")
+@register_block_stack("audio")
+def _block_stack_attn(cfg: ModelConfig) -> BlockSpec:
+    """Scanned attention families: the (L, ...) block stack is the
+    sharding unit; embed/final_norm (+ vis_proj / encoder) ride as the
+    extras pseudo-layer.  vlm/audio forwards consume extra_embeds
+    (patches / frames) the training driver does not synthesize, so
+    driver-level sweeps skip them (family_smoke_archs)."""
+    return BlockSpec(family=cfg.family, make_body=_scanned_stack_body,
+                     needs_extra_embeds=cfg.family in ("vlm", "audio"))
+
+
+@register_block_stack("moe")
+def _block_stack_moe(cfg: ModelConfig) -> BlockSpec:
+    """MoE: same scanned skeleton, but the per-layer flat vector is
+    dominated by the stacked (E, d, f) expert tensors, so the 1/p
+    stripes slice through the experts — the experts are the sharding
+    unit, exactly the payload ZeRO-3 exists for."""
+    return BlockSpec(family="moe", make_body=_scanned_stack_body)
+
+
+@register_block_stack("ssm")
+def _block_stack_ssm(cfg: ModelConfig) -> BlockSpec:
+    return BlockSpec(family="ssm", make_body=_ssm_stack_body)
+
+
+@register_block_stack("hybrid")
+def _block_stack_hybrid(cfg: ModelConfig) -> BlockSpec:
+    """Mamba2 backbone sharded 1/p; the weight-shared attention block
+    stays replicated (``replicated_keys``) and its gradient syncs through
+    the bucketed lane path."""
+    return BlockSpec(family="hybrid", make_body=_hybrid_stack_body,
+                     replicated_keys=("shared_attn",))
 
 
 # ---------------------------------------------------------------------------

@@ -400,6 +400,68 @@ for _strategy in ("native", "lane", "lane_pipelined", "lane_int8",
               _b_gradsync_shim_bitident(_strategy))
 
 
+# ---------------------------------------------------------------------------
+# family-agnostic zero3 stack conformance: for EVERY registered
+# lane-capable family (the grid is DERIVED from the block-stack registry
+# — a new registration joins automatically, incl. the vlm/audio families
+# the training driver cannot sweep), sharding the stack masters (layer
+# blocks AND the embeddings/final-norm extras pseudo-layer) and
+# re-gathering through the pipelined prefetch collective reproduces the
+# original parameters bit-for-bit — including on the degenerate n=1 /
+# N=1 topologies, where one of the two levels is trivial.
+# ---------------------------------------------------------------------------
+
+from repro.models.blockstack import family_smoke_archs  # noqa: E402
+
+_ZERO3_FAMILY_ARCHS = family_smoke_archs()
+
+
+def _b_zero3_stack_roundtrip(family, topo_key):
+    from repro.configs import resolve
+    from repro.launch.steps import zero3_stack_layouts
+    from repro.models import init_model
+    from repro.models.blockstack import (block_stack_spec, shard_stack,
+                                         split_params)
+    mesh, topo = _make(topo_key)
+    n, N = topo.sizes(mesh)
+    cfg = resolve(_ZERO3_FAMILY_ARCHS[family], smoke=True)
+    assert block_stack_spec(cfg).family == family
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    lays = zero3_stack_layouts(cfg)
+    fspec = block_stack_spec(cfg)
+    stack, extras, _ = split_params(fspec, params)
+    comm = LaneComm(topo, mesh=mesh)
+    B = 2
+    for name, tree, lay, stacked in (("blocks", stack, lays["blocks"], True),
+                                     ("extras", extras, lays["extras"],
+                                      False)):
+        master, got_b = shard_stack(tree, n, N, B, stacked=stacked)
+        assert got_b == B, (name, got_b)
+        L = master.shape[0]
+
+        def gather_all(m, L=L):
+            rows = m.reshape(L, -1)
+
+            def one(_, row):
+                return None, comm.prefetch_allgather(row, num_blocks=B)
+            _, full = jax.lax.scan(one, None, rows)
+            return full
+
+        spec = P(None, None, (*topo.node_axes, topo.lane_axis), None)
+        sm = jax.shard_map(gather_all, mesh=mesh, in_specs=spec,
+                           out_specs=P(), check_vma=False)
+        full = np.asarray(jax.jit(sm)(np.asarray(master)))
+        want = np.asarray(lay.flatten(tree, pad_to=full.shape[1]))
+        assert np.array_equal(full, want), \
+            (family, topo_key, name, np.abs(full - want).max())
+
+
+for _fam in _ZERO3_FAMILY_ARCHS:
+    for _tk in ("t3", "n1", "N1"):
+        _register(f"zero3_stack_roundtrip_{_fam}__{_tk}",
+                  lambda fam=_fam, tk=_tk: _b_zero3_stack_roundtrip(fam, tk))
+
+
 def _pipelined_allreduce_shim_bitident():
     import warnings
     from repro.core.pipeline import pipelined_allreduce_lane

@@ -110,13 +110,19 @@ def test_lanecomm_method_surface_locked():
 
 def test_registered_strategy_tables_locked():
     import repro.launch.steps  # noqa: F401 - registers train_step flavors
+    import repro.models.transformer  # noqa: F401 - registers block_stack
     for coll, strategies in EXPECTED_STRATEGIES.items():
         assert comm.strategies_for(coll) == strategies, coll
     assert comm.strategies_for("train_step") == (
         "native", "lane", "lane_pipelined", "lane_int8", "auto",
         "lane_zero1", "lane_zero3")
+    # the lane-capable model families are registry surface too: the
+    # zero3 runtime, the train-smoke sweep and the bench schema all
+    # enumerate this table (models/blockstack.py)
+    assert set(comm.strategies_for("block_stack")) == \
+        {"dense", "vlm", "audio", "moe", "ssm", "hybrid"}
     assert set(comm.registered_collectives()) == \
-        set(EXPECTED_STRATEGIES) | {"train_step"}
+        set(EXPECTED_STRATEGIES) | {"train_step", "block_stack"}
 
 
 def test_param_layout_table_locked():

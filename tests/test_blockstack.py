@@ -1,0 +1,360 @@
+"""Single-device tests for the family-agnostic sharded block stack
+(repro.models.blockstack): StackLayout flatten/unflatten algebra, the
+BlockSpec registry, scan_stack mode equivalence (prefetch / blocking /
+backward re-gather), the extras-aware Zero3CheckpointLayout, the
+canonical flat-order primitives, cross-layout state conversion, and the
+lane microbatch accumulator.  (The multi-device gather/step versions run
+in the subprocess collective/conformance cases.)"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro.checkpoint import (Zero1CheckpointLayout, Zero3CheckpointLayout,
+                              concat_flat_order, split_flat_order)
+from repro.configs import resolve
+from repro.models.blockstack import (
+    BlockSpec, ShardedStack, block_stack_families, block_stack_spec,
+    resolve_prefetch_blocks, scan_stack, shard_stack, split_params,
+    stack_layout,
+)
+
+
+# ---------------------------------------------------------------------------
+# StackLayout
+# ---------------------------------------------------------------------------
+
+def _stacked_tree(L=3):
+    return {"w": jnp.arange(L * 4 * 2, dtype=jnp.float32).reshape(L, 4, 2),
+            "b": jnp.arange(L * 5, dtype=jnp.bfloat16).reshape(L, 5)}
+
+
+def test_stack_layout_stacked():
+    t = _stacked_tree()
+    lay = stack_layout(t, stacked=True)
+    assert lay.length == 3 and lay.row_elems == 13
+    # Zero3LayerSpec-compat names
+    assert lay.num_layers == 3 and lay.layer_elems == 13
+    # decay mirrors adamw_update's ndim>=2 rule on the ORIGINAL leaves:
+    # the replicated optimizer sees the STACKED (L, 5) array (ndim 2), so
+    # per-layer vectors are decayed there — parity means decaying them in
+    # the flat path too (only true per-element vectors, e.g. the
+    # unstacked final-norm scale below, escape decay)
+    by_meta = dict(zip(sorted(t), lay.decay))
+    assert by_meta == {"b": True, "w": True}
+    mat = lay.flatten(t, pad_to=8)
+    assert mat.shape == (3, 16) and mat.dtype == jnp.float32
+    back = lay.unflatten(np.asarray(mat))
+    assert back["w"].dtype == jnp.float32 and back["b"].dtype == jnp.bfloat16
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), t, back)
+    # dtype override (moment trees stay fp32)
+    back32 = lay.unflatten(np.asarray(mat), dtype=np.float32)
+    assert back32["b"].dtype == np.float32
+    # per-row unflatten
+    row0 = lay.unflatten_row(mat[0])
+    np.testing.assert_array_equal(np.asarray(row0["w"]),
+                                  np.asarray(t["w"][0]))
+
+
+def test_stack_layout_unstacked():
+    t = {"embed": {"w": jnp.ones((7, 2), jnp.float32)},
+         "norm": jnp.ones((2,), jnp.float32)}
+    lay = stack_layout(t, stacked=False)
+    assert lay.length == 1 and lay.row_elems == 16
+    assert dict(zip(["embed/w", "norm"],
+                    lay.decay)) == {"embed/w": True, "norm": False}
+    mat = lay.flatten(t, pad_to=5)
+    assert mat.shape == (1, 20)
+    back = lay.unflatten(np.asarray(mat))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, back)
+    mask = np.asarray(lay.decay_mask(20))
+    assert mask.shape == (20,)
+    assert mask[:14].all() and not mask[14:].any()   # embed yes, norm+pad no
+
+
+def test_stack_layout_errors():
+    with pytest.raises(ValueError, match="empty"):
+        stack_layout({}, stacked=True)
+    with pytest.raises(ValueError, match="stack length"):
+        stack_layout({"a": jnp.zeros((2, 3)), "b": jnp.zeros((4, 3))},
+                     stacked=True)
+
+
+def test_shard_stack_geometry():
+    t = _stacked_tree(L=2)
+    master, B = shard_stack(t, n=2, N=2, fsdp_prefetch=3)
+    assert B == 3
+    L, Bm, p, s = master.shape
+    assert (L, Bm, p) == (2, 3, 4)
+    assert Bm * p * s >= 13
+    assert B == resolve_prefetch_blocks(13, 2, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# BlockSpec registry
+# ---------------------------------------------------------------------------
+
+def test_block_stack_registry_families():
+    fams = set(block_stack_families())
+    assert {"dense", "moe", "ssm", "hybrid", "vlm", "audio"} <= fams
+    for arch, fam, repl in (("llama3.2-3b", "dense", ()),
+                            ("mamba2-780m", "ssm", ()),
+                            ("granite-moe-3b-a800m", "moe", ()),
+                            ("zamba2-7b", "hybrid", ("shared_attn",))):
+        spec = block_stack_spec(resolve(arch, smoke=True))
+        assert isinstance(spec, BlockSpec)
+        assert spec.family == fam
+        assert spec.replicated_keys == repl
+
+
+def test_block_stack_spec_unknown_family():
+    import dataclasses
+    cfg = dataclasses.replace(resolve("llama3.2-3b", smoke=True),
+                              family="holographic")
+    with pytest.raises(ValueError, match="no registered block_stack"):
+        block_stack_spec(cfg)
+
+
+def test_split_params_hybrid():
+    cfg = resolve("zamba2-7b", smoke=True)
+    from repro.models import init_model
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    spec = block_stack_spec(cfg)
+    stack, extras, repl = split_params(spec, params)
+    assert set(repl) == {"shared_attn"}
+    assert "blocks" not in extras and "shared_attn" not in extras
+    assert set(extras) | {"blocks", "shared_attn"} == set(params)
+    with pytest.raises(ValueError, match="no 'blocks'"):
+        split_params(spec, {"embed": jnp.zeros(3)})
+
+
+# ---------------------------------------------------------------------------
+# scan_stack: the three modes agree in value AND gradient
+# ---------------------------------------------------------------------------
+
+def _toy_stack(L=4, D=6):
+    rng = np.random.default_rng(0)
+    shards = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    gather = lambda x: {"w": x * 2.0}         # stand-in for the collective
+
+    def body(h, lp, i):
+        # index-dependent body exercises the idx plumbing (hybrid)
+        scale = jnp.where(i % 2 == 0, 1.0, 0.5)
+        h = h + scale * jnp.sum(lp["w"]) * h
+        return h, jnp.sum(lp["w"]) * 0.1
+    return shards, gather, body
+
+
+@pytest.mark.parametrize("mode", ["prefetch", "blocking", "regather"])
+def test_scan_stack_modes_agree(mode):
+    shards, gather, body = _toy_stack()
+
+    def loss(sh):
+        stack = ShardedStack(sh, gather,
+                             prefetch=(mode != "blocking"),
+                             regather=(mode == "regather"))
+        h, aux = scan_stack(stack, jnp.ones((3,), jnp.float32), body)
+        assert aux.shape == (sh.shape[0],)
+        return jnp.sum(h) + jnp.sum(aux)
+
+    # reference: a plain python loop over the same math
+    def ref(sh):
+        h = jnp.ones((3,), jnp.float32)
+        aux = 0.0
+        for i in range(sh.shape[0]):
+            h, a = body(h, gather(sh[i]), jnp.asarray(i))
+            aux = aux + a
+        return jnp.sum(h) + aux
+
+    v, g = jax.value_and_grad(loss)(shards)
+    vr, gr = jax.value_and_grad(ref)(shards)
+    np.testing.assert_allclose(float(v), float(vr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5)
+
+
+def test_regather_blocking_mutually_exclusive():
+    # ShardedStack level: the blocking negative control must not be
+    # silently replaced by the regather scan
+    with pytest.raises(ValueError, match="blocking negative control"):
+        ShardedStack(jnp.zeros((2, 4)), lambda x: x, prefetch=False,
+                     regather=True)
+    # step-builder level: the flag combination errors with flag names
+    from repro.configs.base import RunConfig, SHAPES
+    from repro.launch.steps import build_train_step_lane
+    from repro.optim import AdamWConfig
+    cfg = resolve("llama3.2-3b", smoke=True)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                    gradsync="lane_zero3", fsdp_prefetch=-1,
+                    fsdp_regather=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError):
+        build_train_step_lane(cfg, run, AdamWConfig(), mesh, None)
+
+
+def test_family_smoke_archs_derived():
+    from repro.models.blockstack import family_smoke_archs
+    full = family_smoke_archs()
+    assert set(full) == set(block_stack_families())
+    trainable = family_smoke_archs(driver_trainable_only=True)
+    # vlm/audio declare needs_extra_embeds and drop out of driver sweeps
+    assert set(trainable) == set(full) - {"vlm", "audio"}
+    assert {"dense", "ssm", "hybrid", "moe"} <= set(trainable)
+    for fam, arch in full.items():
+        assert resolve(arch, smoke=True).family == fam
+
+
+def test_scan_stack_single_layer():
+    shards, gather, body = _toy_stack(L=1)
+    stack = ShardedStack(shards, gather)
+    h, aux = scan_stack(stack, jnp.ones((3,), jnp.float32), body)
+    assert aux.shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Zero3CheckpointLayout with the extras pseudo-layer
+# ---------------------------------------------------------------------------
+
+def test_zero3_layout_extras_roundtrip():
+    lay = Zero3CheckpointLayout(num_layers=2, layer_elems=13, num_blocks=2,
+                                num_shards=4, extra_elems=9, extra_blocks=3)
+    assert lay.master_shape == (2, 2, 4, 2)
+    assert lay.extra_master_shape == (1, 3, 4, 1)
+    rng = np.random.default_rng(3)
+    cb = rng.normal(size=(2, 13)).astype(np.float32)
+    ce = rng.normal(size=(1, 9)).astype(np.float32)
+    pb = ("blocks",)
+    pe = ("extras",)
+    to_path = lambda keys: tuple(jtu.DictKey(k) for k in keys)
+    mb = lay.from_canonical(to_path(pb), cb)
+    me = lay.from_canonical(to_path(pe), ce)
+    assert mb.shape == lay.master_shape and me.shape == lay.extra_master_shape
+    np.testing.assert_array_equal(lay.to_canonical(to_path(pb), mb), cb)
+    np.testing.assert_array_equal(lay.to_canonical(to_path(pe), me), ce)
+    # manifest records + validates the extras geometry
+    entry = lay.manifest_entry()
+    assert entry["extra_elems"] == 9 and entry["extra_blocks"] == 3
+    lay.check_manifest(entry)
+    with pytest.raises(ValueError, match="extra_elems"):
+        lay.check_manifest(dict(entry, extra_elems=11))
+    # a layout without extras still round-trips blocks (old behavior)
+    plain = Zero3CheckpointLayout(2, 13, 2, 4)
+    assert plain.extra_master_shape is None
+    np.testing.assert_array_equal(
+        plain.to_canonical(to_path(pb),
+                           plain.from_canonical(to_path(pb), cb)), cb)
+    with pytest.raises(ValueError):
+        Zero3CheckpointLayout(2, 13, 2, 4, extra_elems=9)  # blocks unset
+
+
+# ---------------------------------------------------------------------------
+# canonical flat order primitives
+# ---------------------------------------------------------------------------
+
+def test_flat_order_roundtrip():
+    leaves = [np.arange(6, dtype=np.float64).reshape(2, 3),
+              np.arange(4, dtype=np.int32)]
+    flat = concat_flat_order(leaves)
+    assert flat.dtype == np.float32 and flat.shape == (10,)
+    back = split_flat_order(flat, [(2, 3), (4,)],
+                            dtypes=[np.float64, np.int32])
+    assert back[0].dtype == np.float64 and back[1].dtype == np.int32
+    np.testing.assert_array_equal(back[0], leaves[0])
+    np.testing.assert_array_equal(back[1], leaves[1])
+    assert concat_flat_order([]).shape == (0,)
+    with pytest.raises(ValueError, match="different model"):
+        split_flat_order(flat, [(3, 3)])
+
+
+# ---------------------------------------------------------------------------
+# cross-layout conversion (host-side, mesh-free): replicated -> kind ->
+# canonical -> replicated is bit-exact for fp32 smoke models
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,arch", [
+    ("zero1", "llama3.2-3b"),
+    ("zero3", "llama3.2-3b"),
+    ("zero3", "zamba2-7b"),         # hybrid: replicated leftovers active
+    ("zero3", "granite-moe-3b-a800m"),
+])
+def test_cross_layout_roundtrip_bitexact(kind, arch):
+    from repro.configs.base import RunConfig, SHAPES
+    from repro.launch.steps import (replicated_to_state,
+                                    state_to_replicated,
+                                    zero1_checkpoint_layout,
+                                    zero3_checkpoint_layout)
+    from repro.models import init_model
+    from repro.optim import adamw_init
+    cfg = resolve(arch, smoke=True)
+    gradsync = "lane_zero1" if kind == "zero1" else "lane_zero3"
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], gradsync=gradsync)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    # non-trivial moments so the layout transposes are actually exercised
+    opt = adamw_init(params)
+    opt = {"m": jax.tree.map(lambda p: jnp.asarray(
+               np.random.default_rng(1).normal(size=p.shape), jnp.float32),
+               params),
+           "v": opt["v"], "count": jnp.asarray(5, jnp.int32)}
+    n, N = 2, 2
+    p_host, o_host = replicated_to_state(cfg, run, n, N, params, opt,
+                                         kind=kind)
+    layout = zero1_checkpoint_layout(params, n) if kind == "zero1" else \
+        zero3_checkpoint_layout(cfg, n, N)
+    canon_p = jtu.tree_map_with_path(
+        lambda pth, l: layout.to_canonical(pth, np.asarray(l)), p_host)
+    canon_o = jtu.tree_map_with_path(
+        lambda pth, l: layout.to_canonical(pth, np.asarray(l)), o_host)
+    entry = layout.manifest_entry()
+    back_p, back_o = state_to_replicated(cfg, entry, (canon_p, canon_o))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, back_p)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), opt, back_o)
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulator
+# ---------------------------------------------------------------------------
+
+def test_microbatched_parity_fp32():
+    from repro.launch.steps import _microbatched
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    toks = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    labs = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+
+    def vg(w, t, l, e):
+        def f(w):
+            return jnp.mean((t @ w - l) ** 2)
+        return jax.value_and_grad(f)(w)
+
+    l0, g0 = vg(w, toks, labs, None)
+    l2, g2 = jax.jit(lambda *a: _microbatched(vg, 4, jnp.float32)(*a))(
+        w, toks, labs, None)
+    np.testing.assert_allclose(float(l2), float(l0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g0), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_microbatched_rejects_indivisible():
+    from repro.launch.steps import _microbatched
+    vg = lambda w, t, l, e: (jnp.sum(t), w)
+    with pytest.raises(ValueError, match="not divisible"):
+        _microbatched(vg, 3, jnp.float32)(jnp.zeros(2), jnp.zeros((8, 2)),
+                                          jnp.zeros(8), None)
+
+
+def test_microbatched_passthrough():
+    from repro.launch.steps import _microbatched
+    vg = lambda *a: a
+    assert _microbatched(vg, 0, jnp.float32) is vg
+    assert _microbatched(vg, 1, jnp.float32) is vg
+
+
+def test_run_config_validates_accum_dtype():
+    from repro.configs.base import RunConfig, SHAPES
+    cfg = resolve("llama3.2-3b", smoke=True)
+    with pytest.raises(ValueError, match="accum_dtype"):
+        RunConfig(model=cfg, shape=SHAPES["train_4k"], accum_dtype="fp8")

@@ -444,20 +444,31 @@ def test_int8_fused_error_bound_unchanged():
 def test_bench_schema_flags_missing_strategy():
     import sys, pathlib
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-    from benchmarks.check_bench_schema import check, REQUIRED_STRATEGIES
+    from benchmarks.check_bench_schema import (check, REQUIRED_STRATEGIES,
+                                               REQUIRED_FAMILIES)
     from repro.comm import strategies_for
-    # the requirement is DERIVED from the registry (satellite contract):
-    # a silently-unregistered impl shrinks neither list unnoticed
+    from repro.models.blockstack import block_stack_families
+    # the requirements are DERIVED from the registries (satellite
+    # contract): a silently-unregistered impl/family shrinks neither
+    # list unnoticed
     assert REQUIRED_STRATEGIES == set(strategies_for("grad_sync")) | {"auto"}
+    assert REQUIRED_FAMILIES == set(block_stack_families())
     row = {"strategy": "native", "selected": "native", "num_buckets": 0,
            "avg_us": 1.0, "min_us": 1.0, "max_abs_err_vs_native": 0.0,
            "model_pred_us": 1.0, "hlo_concurrent": False,
            "hlo_concurrent_pairs": 0}
+    frow = {"family": "dense", "arch": "a", "layer_elems": 1,
+            "extra_elems": 1, "num_layers": 1, "num_blocks": 1,
+            "avg_us": 1.0, "min_us": 1.0, "gather_exact": True,
+            "hlo_concurrent": True}
     doc = {"mesh": "2x4", "payload_elems": 1, "payload_bytes": 4,
            "auto_num_buckets": 1, "cost_model": {}, "smoke": True,
            "reps": 1, "hlo_per_computation": {}, "structure_ok": True,
            "strategies_registered": sorted(REQUIRED_STRATEGIES - {"auto"}),
-           "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES]}
+           "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES],
+           "families_registered": sorted(REQUIRED_FAMILIES),
+           "family_results": [dict(frow, family=f)
+                              for f in REQUIRED_FAMILIES]}
     assert check(doc) == []
     # dropping any required strategy (incl. the auto row) fails the build
     for s in REQUIRED_STRATEGIES:
@@ -465,13 +476,25 @@ def test_bench_schema_flags_missing_strategy():
                                  if r["strategy"] != s])
         errs = check(bad)
         assert errs and "stopped emitting" in errs[0], (s, errs)
+    # dropping any block-stack family's zero3 row fails the build too
+    for f in REQUIRED_FAMILIES:
+        bad = dict(doc, family_results=[r for r in doc["family_results"]
+                                        if r["family"] != f])
+        errs = check(bad)
+        assert errs and any("family" in e for e in errs), (f, errs)
     # a regressed structural check fails too
     assert check(dict(doc, structure_ok=False))
-    # a bench emitted against a stale (now-unregistered) strategy is caught
+    # a bench emitted against a stale (now-unregistered) strategy/family
+    # is caught
     assert any("no longer matches" in e for e in check(
         dict(doc, strategies_registered=["lane_future"])))
-    # and a row losing a field is caught
+    assert any("no longer matches" in e for e in check(
+        dict(doc, families_registered=["family_future"])))
+    # and a row losing a field is caught (both row kinds)
     broken = dict(doc, results=doc["results"][:1]
                   + [dict(doc["results"][1])])
     del broken["results"][1]["min_us"]
     assert any("missing" in e for e in check(broken))
+    broken_f = dict(doc, family_results=[dict(doc["family_results"][0])])
+    del broken_f["family_results"][0]["gather_exact"]
+    assert any("family_results[0] missing" in e for e in check(broken_f))
