@@ -14,10 +14,20 @@
 #                   surface break is named even when tier1 dies earlier
 #   bench-smoke   — lowers the gradient-sync strategies and structurally
 #                   verifies the §5 lane/node overlap on the optimized HLO
-#                   (writes BENCH_gradsync.json)
-#   bench-schema  — fails the build if the benchmark silently stopped
+#                   (writes BENCH_gradsync.json), then drives the
+#                   injected-fault recovery ladder and measures steps
+#                   lost / time-to-recover / quorum overhead (writes
+#                   BENCH_recovery.json)
+#   bench-schema  — fails the build if a benchmark silently stopped
 #                   emitting a strategy or a row field; the required
 #                   strategy list derives from the repro.comm registry
+#   fault-smoke   — the fault-injection driver matrix alone (the
+#                   ``fault_*`` cases of testing/driver_cases.py:
+#                   corrupt-latest fallback, kill-mid-write .old swap,
+#                   transient-I/O retry, quorum bit-identity, the
+#                   DEGRADED→RESTART ladder) — tier1 also runs these
+#                   per-case; this leg names a red recovery path even
+#                   when tier1 dies earlier
 #   train-smoke   — drives the TRAINING DRIVER (launch/train.py) across
 #                   every registered gradsync strategy on the 8-device
 #                   multi-pod CPU mesh with a save→restore round-trip,
@@ -29,7 +39,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema \
-	train-smoke test
+	train-smoke fault-smoke test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -65,4 +75,9 @@ bench-schema:
 train-smoke:
 	$(PY) -m repro.launch.train_smoke
 
-ci: tier1 props-det api-surface bench-smoke bench-schema train-smoke
+# sets its own 8-device flag internally (before jax import)
+fault-smoke:
+	$(PY) -m repro.testing.run_driver_cases --match fault_
+
+ci: tier1 props-det api-surface bench-smoke bench-schema train-smoke \
+	fault-smoke

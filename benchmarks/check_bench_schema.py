@@ -1,14 +1,17 @@
-"""Schema check for BENCH_gradsync.json.
+"""Schema check for BENCH_gradsync.json and BENCH_recovery.json.
 
-The benchmark is the perf trajectory future PRs regress against; a
+The benchmarks are the perf trajectory future PRs regress against; a
 refactor that silently drops a strategy from the grid (or a field from
 the rows) would make the trajectory lie by omission.  This check fails
 the build instead.  The required-strategy list is DERIVED from the
 repro.comm registry — every registered grad_sync strategy (plus the
 ``auto`` dispatch row) must appear, so an impl that quietly loses its
 registration, or a registration the bench never exercises, both fail CI.
+The recovery document (steps lost / time-to-recover / quorum overhead,
+benchmarks/recovery_bench.py) is pinned the same way.
 
   PYTHONPATH=src python -m benchmarks.check_bench_schema [--file F]
+      [--recovery-file R]
 
 Run after ``benchmarks.run --smoke`` (make ci does).
 """
@@ -29,6 +32,16 @@ ROW_KEYS = {"strategy", "selected", "num_buckets", "avg_us", "min_us",
 FAMILY_ROW_KEYS = {"family", "arch", "layer_elems", "extra_elems",
                    "num_layers", "num_blocks", "avg_us", "min_us",
                    "gather_exact", "hlo_concurrent"}
+
+RECOVERY_TOP_KEYS = {"mesh", "smoke", "reps", "recovery",
+                     "quorum_overhead", "ok"}
+
+RECOVERY_KEYS = {"fault", "steps", "restart_step", "resume_step",
+                 "steps_lost", "steps_replayed", "degraded_steps",
+                 "clean_wall_s", "faulted_wall_s", "time_to_recover_s"}
+
+QUORUM_KEYS = {"payload_elems", "num_buckets", "lane_min_us",
+               "lane_quorum_min_us", "overhead_pct", "quorum_exact"}
 
 
 def required_strategies() -> set:
@@ -97,27 +110,62 @@ def check(doc: dict) -> list[str]:
     return errs
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--file", default="BENCH_gradsync.json")
-    args = ap.parse_args(argv)
-    path = pathlib.Path(args.file)
+def check_recovery(doc: dict) -> list[str]:
+    errs = []
+    missing = RECOVERY_TOP_KEYS - set(doc)
+    if missing:
+        errs.append(f"recovery missing top-level keys: {sorted(missing)}")
+    mk = RECOVERY_KEYS - set(doc.get("recovery", {}))
+    if mk:
+        errs.append(f"recovery.recovery missing {sorted(mk)}")
+    qk = QUORUM_KEYS - set(doc.get("quorum_overhead", {}))
+    if qk:
+        errs.append(f"recovery.quorum_overhead missing {sorted(qk)}")
+    if not doc.get("ok", False):
+        errs.append("recovery ok is false: the emergency checkpoint lost "
+                    "steps, or full-quorum drifted from lane — see the "
+                    "benchmark output")
+    return errs
+
+
+def _load(path: pathlib.Path):
     if not path.exists():
         print(f"SCHEMA FAIL: {path} missing (run benchmarks.run --smoke "
               f"first)")
-        return 1
+        return None
     try:
-        doc = json.loads(path.read_text())
+        return json.loads(path.read_text())
     except json.JSONDecodeError as e:
         print(f"SCHEMA FAIL: {path} is not valid JSON: {e}")
+        return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--file", default="BENCH_gradsync.json")
+    ap.add_argument("--recovery-file", default="BENCH_recovery.json")
+    args = ap.parse_args(argv)
+    doc = _load(pathlib.Path(args.file))
+    if doc is None:
         return 1
     errs = check(doc)
     for e in errs:
         print(f"SCHEMA FAIL: {e}")
     if not errs:
-        print(f"schema ok: {path} ({len(doc['results'])} rows, "
+        print(f"schema ok: {args.file} ({len(doc['results'])} rows, "
               f"{len({r['strategy'] for r in doc['results']})} strategies)")
-    return 1 if errs else 0
+    rdoc = _load(pathlib.Path(args.recovery_file))
+    if rdoc is None:
+        return 1
+    rerrs = check_recovery(rdoc)
+    for e in rerrs:
+        print(f"SCHEMA FAIL: {e}")
+    if not rerrs:
+        r = rdoc["recovery"]
+        print(f"schema ok: {args.recovery_file} (steps_lost="
+              f"{r['steps_lost']}, recover={r['time_to_recover_s']}s, "
+              f"quorum +{rdoc['quorum_overhead']['overhead_pct']}%)")
+    return 1 if (errs or rerrs) else 0
 
 
 if __name__ == "__main__":

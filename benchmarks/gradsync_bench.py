@@ -163,12 +163,14 @@ def main(argv=None) -> int:
         # below the cost-model crossover auto-K is 1; pin K=4 so CI still
         # exercises (and structurally verifies) the multi-bucket schedule
         grid = [("native", 0), ("lane", 1), ("lane", 4),
-                ("lane_pipelined", 4), ("lane_int8", 4),
+                ("lane_pipelined", 4), ("lane_quorum", 4),
+                ("lane_int8", 4),
                 ("lane_zero1", 4), ("lane_zero3", 4), ("auto", 0)]
     else:
         grid = [("native", 0), ("lane", 1), ("lane", auto_k),
                 ("lane_pipelined", auto_k), ("lane", 4), ("lane", 16),
                 ("lane_pipelined", 4), ("lane_pipelined", 16),
+                ("lane_quorum", 4), ("lane_quorum", 16),
                 ("lane_int8", auto_k),
                 ("lane_zero1", 1), ("lane_zero1", 4),
                 ("lane_zero3", 1), ("lane_zero3", 4),

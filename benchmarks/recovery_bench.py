@@ -1,0 +1,160 @@
+"""Recovery benchmark: what a pod loss actually costs.
+
+Drives the REAL training driver (repro.launch.train) on the 8-device CPU
+mesh through the injected-fault recovery ladder — pod 1 stops
+heartbeating at step 2, the run degrades under the lane quorum, exceeds
+the staleness bound, RESTARTs with an emergency checkpoint and finishes
+on the elastically-shrunken mesh — and measures, against an identical
+clean run:
+
+  * steps_lost         — training steps whose work the emergency
+                         checkpoint failed to capture (0 when the
+                         RESTART-step save commits)
+  * steps_replayed     — steps re-executed by the restarted attempt
+  * time_to_recover_s  — wall-clock premium of the faulted run over the
+                         clean one (detection + emergency save + replan
+                         + recompile + replay, all of it)
+  * quorum overhead    — grad-sync wall time of ``lane_quorum`` (the
+                         degraded-mode strategy, full mask) vs ``lane``
+                         on the same payload, plus the bit-identity of
+                         their results (full quorum must be free of
+                         numerical drift, not just cheap)
+
+Writes ``BENCH_recovery.json`` (schema pinned by
+``benchmarks/check_bench_schema.py``).  CPU caveat as everywhere in
+benchmarks/: wall times validate relative behavior, not DCN physics.
+
+  PYTHONPATH=src python -m benchmarks.recovery_bench [--smoke] [--out F]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import contextlib
+import io
+import json
+import pathlib
+import re
+import sys
+import tempfile
+import time
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.comm import CommConfig, LaneComm
+from repro.core import LaneTopology, time_fn
+
+FAULT = "pod_lost@2:pod=1"
+
+
+def _drive(argv) -> tuple[str, float]:
+    """Run the training driver in-process; (stdout, wall seconds)."""
+    from repro.launch.train import main
+    buf = io.StringIO()
+    t0 = time.monotonic()
+    with contextlib.redirect_stdout(buf):
+        rc = main(argv)
+    wall = time.monotonic() - t0
+    out = buf.getvalue()
+    assert rc == 0, f"driver rc={rc}\n{out}"
+    return out, wall
+
+
+def bench_recovery(steps: int, args_base: list) -> dict:
+    with tempfile.TemporaryDirectory() as td:
+        clean_out, clean_wall = _drive(
+            [*args_base, "--ckpt", f"{td}/clean"])
+        fault_out, fault_wall = _drive(
+            [*args_base, "--ckpt", f"{td}/fault",
+             "--fault-plan", FAULT, "--quorum-staleness", "2"])
+    m_restart = re.search(r"RESTART at step (\d+)", fault_out)
+    m_resume = re.search(r"resumed from step (\d+)", fault_out)
+    assert m_restart and m_resume, fault_out
+    restart_step = int(m_restart.group(1))
+    resume_step = int(m_resume.group(1))
+    degraded = len(re.findall(r"^degraded step", fault_out, re.M))
+    row = {"fault": FAULT, "steps": steps,
+           "restart_step": restart_step, "resume_step": resume_step,
+           "steps_lost": restart_step - resume_step,
+           "steps_replayed": steps - resume_step,
+           "degraded_steps": degraded,
+           "clean_wall_s": round(clean_wall, 3),
+           "faulted_wall_s": round(fault_wall, 3),
+           "time_to_recover_s": round(fault_wall - clean_wall, 3)}
+    print(f"recovery: restart@{restart_step} resumed@{resume_step} "
+          f"lost={row['steps_lost']} replayed={row['steps_replayed']} "
+          f"degraded={degraded} recover={row['time_to_recover_s']:.2f}s",
+          flush=True)
+    return row
+
+
+def bench_quorum_overhead(elems: int, num_buckets: int, reps: int,
+                          warmup: int) -> dict:
+    """Full-quorum lane_quorum vs lane on one payload: the steady-state
+    price of running with the mask plumbed in (one extra scalar psum for
+    the divisor plus the per-bucket multiply) — and bit-identity."""
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    comm = LaneComm(topo, CommConfig(buckets=num_buckets), mesh=mesh)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(elems,)).astype(np.float32)
+    arr = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
+    fns = {}
+    for strat in ("lane", "lane_quorum"):
+        fns[strat] = jax.jit(jax.shard_map(
+            lambda g, s=strat: comm.grad_sync(g, strategy=s,
+                                              num_buckets=num_buckets),
+            mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
+            check_vma=False))
+    exact = bool(np.array_equal(np.asarray(fns["lane"](arr)),
+                                np.asarray(fns["lane_quorum"](arr))))
+    t = {s: time_fn(f, arr, reps=reps, warmup=warmup)[1]
+         for s, f in fns.items()}
+    row = {"payload_elems": elems, "num_buckets": num_buckets,
+           "lane_min_us": round(t["lane"], 2),
+           "lane_quorum_min_us": round(t["lane_quorum"], 2),
+           "overhead_pct": round(
+               100.0 * (t["lane_quorum"] - t["lane"]) / t["lane"], 1),
+           "quorum_exact": exact}
+    print(f"quorum overhead: lane={t['lane']:.1f}us "
+          f"lane_quorum={t['lane_quorum']:.1f}us "
+          f"(+{row['overhead_pct']:.1f}%) exact={exact}", flush=True)
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small payload + few reps (CI)")
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    args = ap.parse_args(argv)
+
+    steps = 8
+    elems = 1 << 16 if args.smoke else 1 << 22
+    reps, warmup = (5, 1) if args.smoke else (20, 3)
+    args_base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                 "--seq", "32", "--log-every", "2", "--pods", "2",
+                 "--gradsync", "lane_quorum", "--ckpt-every", "100",
+                 "--steps", str(steps), "--seed", "7"]
+
+    recovery = bench_recovery(steps, args_base)
+    quorum = bench_quorum_overhead(elems, 4, reps, warmup)
+
+    # acceptance: the emergency save must capture the RESTART step (no
+    # work lost beyond it) and full quorum must be drift-free
+    ok = recovery["steps_lost"] == 0 and quorum["quorum_exact"]
+    doc = {"mesh": "2x2x2 (pod,data,model) driver / 2x4 grad-sync",
+           "smoke": bool(args.smoke), "reps": reps,
+           "recovery": recovery, "quorum_overhead": quorum, "ok": ok}
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}  (ok={ok})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

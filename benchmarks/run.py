@@ -7,11 +7,12 @@ lane_pipelined with the HLO overlap check), then the roofline table
 derived from the multi-pod dry-run artifacts.
 
   PYTHONPATH=src python -m benchmarks.run [--smoke] [--skip-tables]
-      [--skip-roofline] [--skip-gradsync]
+      [--skip-roofline] [--skip-gradsync] [--skip-recovery]
 
-``--smoke`` is the CI mode: it runs only the gradsync benchmark, at a
-reduced payload, which still exercises lowering, the bucket schedule, and
-the structural HLO verification end to end.
+``--smoke`` is the CI mode: it runs only the gradsync and recovery
+benchmarks, at a reduced payload, which still exercises lowering, the
+bucket schedule, the structural HLO verification, and the injected-fault
+recovery ladder end to end.
 """
 import argparse
 import os
@@ -33,6 +34,7 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-gradsync", action="store_true")
+    ap.add_argument("--skip-recovery", action="store_true")
     args = ap.parse_args(argv)
     rc = 0
 
@@ -50,6 +52,13 @@ def main(argv=None) -> int:
     if not args.skip_gradsync:
         print("== gradient-sync trajectory (8-device CPU mesh, subprocess) ==")
         cmd = ["benchmarks.gradsync_bench"]
+        if args.smoke:
+            cmd.append("--smoke")
+        rc |= _sub(cmd, env, root)
+
+    if not args.skip_recovery:
+        print("== recovery ladder (8-device CPU mesh, subprocess) ==")
+        cmd = ["benchmarks.recovery_bench"]
         if args.smoke:
             cmd.append("--smoke")
         rc |= _sub(cmd, env, root)

@@ -2,11 +2,26 @@
 
 Layout:   <dir>/step_<N>/
              manifest.json           tree structure, shapes, dtypes, step,
-                                     and the shard LAYOUT of the writer
+                                     per-leaf crc32, and the shard LAYOUT
+                                     of the writer
              arr_<i>.npy             one file per leaf (host-local fetch)
           <dir>/step_<N>.tmp/        written first, renamed when complete
+          <dir>/step_<N>.old/        the PREVIOUS committed copy of the
+                                     same step, parked for the instant of
+                                     an overwrite (never both absent)
 The rename is the commit point — a crash mid-write never corrupts the
-latest complete checkpoint (restart scans for the largest committed step).
+latest complete checkpoint (restart scans for the largest committed
+step).  Overwriting an existing step swaps through ``.old``: the old
+copy is renamed aside, the new one renamed in, THEN the old one removed,
+so a crash at any instant leaves at least one committed copy of the
+step (the scanner treats a lone ``step_N.old`` as committed).
+
+Integrity: every leaf's crc32 (of its raw buffer) is recorded in the
+manifest and re-checked on restore; a mismatch — or an unreadable file —
+raises :class:`CheckpointCorruptError`, and the default restore path
+falls back to the newest step that DOES verify instead of crashing the
+restart on a rotted latest.  Transient write errors (flaky filesystem)
+are retried with bounded exponential backoff inside ``save_checkpoint``.
 
 Cross-mesh restore: leaves are stored in a topology-FREE canonical form —
 full arrays for replicated state, the unpadded flat parameter order for
@@ -31,13 +46,24 @@ from __future__ import annotations
 import json
 import pathlib
 import shutil
+import sys
 import threading
-from typing import Any, Optional
+import time
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 from .layouts import CheckpointLayout, REPLICATED
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed its integrity check: a leaf's crc32
+    disagrees with the manifest, a leaf file is missing/unreadable, or
+    the manifest itself cannot be parsed.  DISTINCT from the ValueErrors
+    of a genuine geometry mismatch (wrong model/mesh), which must never
+    be silently skipped by the verified-fallback scan."""
 
 
 def _flatten(tree):
@@ -52,65 +78,237 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _parse_step(name: str) -> Optional[int]:
+    """``step_<N>`` / ``step_<N>.old`` -> N; anything else (an operator's
+    ``step_backup``, a ``.tmp`` in flight) -> None.  Restart must never
+    die on a stray directory name."""
+    if name.endswith(".old"):
+        name = name[:-len(".old")]
+    if not name.startswith("step_"):
+        return None
+    suffix = name[len("step_"):]
+    return int(suffix) if suffix.isdigit() else None
+
+
+def step_dir(ckpt_dir: str, step: int) -> Optional[pathlib.Path]:
+    """The committed directory for ``step``: the final name, or the
+    parked ``.old`` copy when a crash mid-overwrite left only that.
+    None when neither holds a manifest."""
+    base = pathlib.Path(ckpt_dir)
+    for d in (base / f"step_{step}", base / f"step_{step}.old"):
+        if (d / "manifest.json").exists():
+            return d
+    return None
+
+
+def committed_steps(ckpt_dir: str) -> list:
+    """Sorted committed step numbers (manifest present; ``.old``-only
+    counts; malformed names and in-flight ``.tmp`` dirs skipped)."""
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return []
+    steps = set()
+    for p in base.iterdir():
+        if not p.is_dir() or p.name.endswith(".tmp"):
+            continue
+        s = _parse_step(p.name)
+        if s is not None and (p / "manifest.json").exists():
+            steps.add(s)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
-                    layout: Optional[CheckpointLayout] = None) -> str:
+                    layout: Optional[CheckpointLayout] = None, *,
+                    attempts: int = 3, backoff_s: float = 0.05,
+                    attempt_hook: Optional[Callable[[int], None]] = None
+                    ) -> str:
     """Write ``tree`` atomically; master leaves canonicalize through
     ``layout`` (None = replicated identity) so the files on disk are
-    mesh-independent."""
+    mesh-independent.  Every leaf's crc32 lands in the manifest.
+
+    Transient ``OSError``s (flaky filesystem) are retried up to
+    ``attempts`` times with exponential backoff starting at
+    ``backoff_s``; each retry starts from a clean tmp dir.  Any other
+    exception — and an OSError on the last attempt — propagates.
+    ``attempt_hook(attempt)`` is called at the start of each attempt
+    (0-based) inside the retried region; the deterministic fault
+    injection (runtime.faults) uses it to raise the transient errors
+    tier-1 exercises this path with.
+    """
     layout = layout or REPLICATED
     base = pathlib.Path(ckpt_dir)
     base.mkdir(parents=True, exist_ok=True)
     tmp = base / f"step_{step}.tmp"
     final = base / f"step_{step}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir()
-    paths, leaves, treedef = _flatten_with_paths(tree)
-    manifest = {"step": step, "treedef": str(treedef),
-                "layout": layout.manifest_entry(), "leaves": []}
-    for i, (path, leaf) in enumerate(zip(paths, leaves)):
-        arr = layout.to_canonical(path,
-                                  np.asarray(jax.device_get(leaf)))
-        np.save(tmp / f"arr_{i}.npy", arr)
-        manifest["leaves"].append({"shape": list(arr.shape),
-                                   "dtype": str(arr.dtype)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)                      # commit point
-    return str(final)
+    old = base / f"step_{step}.old"
+    last_err: Optional[OSError] = None
+    for attempt in range(max(attempts, 1)):
+        if attempt:
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+        try:
+            if attempt_hook is not None:
+                attempt_hook(attempt)
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir()
+            paths, leaves, treedef = _flatten_with_paths(tree)
+            manifest = {"step": step, "treedef": str(treedef),
+                        "layout": layout.manifest_entry(), "leaves": []}
+            for i, (path, leaf) in enumerate(zip(paths, leaves)):
+                arr = layout.to_canonical(
+                    path, np.asarray(jax.device_get(leaf)))
+                np.save(tmp / f"arr_{i}.npy", arr)
+                manifest["leaves"].append({"shape": list(arr.shape),
+                                           "dtype": str(arr.dtype),
+                                           "crc32": _crc32(arr)})
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            # overwrite swap: park the committed copy aside, rename the
+            # new one in, THEN drop the parked copy — a crash at any
+            # point leaves step_N or step_N.old (never neither), and
+            # the scanner accepts either
+            if old.exists():
+                shutil.rmtree(old)
+            if final.exists():
+                final.rename(old)
+            tmp.rename(final)                  # commit point
+            if old.exists():
+                shutil.rmtree(old)
+            return str(final)
+        except OSError as e:
+            last_err = e
+            print(f"checkpoint save step {step}: attempt "
+                  f"{attempt + 1}/{attempts} failed ({e}); "
+                  f"{'retrying' if attempt + 1 < attempts else 'giving up'}",
+                  file=sys.stderr, flush=True)
+    raise last_err
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    base = pathlib.Path(ckpt_dir)
-    if not base.exists():
-        return None
-    steps = []
-    for p in base.iterdir():
-        if p.is_dir() and p.name.startswith("step_") \
-                and not p.name.endswith(".tmp") \
-                and (p / "manifest.json").exists():
-            steps.append(int(p.name.split("_")[1]))
-    return max(steps) if steps else None
+def verify_checkpoint(ckpt_dir: str, step: int) -> dict:
+    """Re-check every leaf of one committed step against its manifest
+    crc32.  Returns the manifest on success; raises
+    :class:`CheckpointCorruptError` naming the first bad leaf.
+    Checkpoints written before crc32s existed (no ``crc32`` keys) pass
+    vacuously — there is nothing to check them against."""
+    d = step_dir(ckpt_dir, step)
+    if d is None:
+        raise FileNotFoundError(f"no committed step {step} in {ckpt_dir}")
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {d}: {e}") from e
+    for i, entry in enumerate(manifest["leaves"]):
+        want = entry.get("crc32")
+        if want is None:
+            continue
+        try:
+            arr = np.load(d / f"arr_{i}.npy")
+        except Exception as e:  # noqa: BLE001 - any load failure = rot
+            raise CheckpointCorruptError(
+                f"unreadable leaf {d / f'arr_{i}.npy'}: {e}") from e
+        got = _crc32(arr)
+        if got != want:
+            raise CheckpointCorruptError(
+                f"crc32 mismatch on {d / f'arr_{i}.npy'}: manifest "
+                f"{want:#010x}, file {got:#010x}")
+    return manifest
+
+
+def latest_verified_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step whose every leaf passes its crc32 check —
+    the step restart should trust.  None when nothing verifies."""
+    for s in reversed(committed_steps(ckpt_dir)):
+        try:
+            verify_checkpoint(ckpt_dir, s)
+            return s
+        except CheckpointCorruptError as e:
+            print(f"checkpoint step {s} failed verification ({e}); "
+                  f"trying an earlier step", file=sys.stderr, flush=True)
+    return None
+
+
+def _read_manifest(d: pathlib.Path) -> dict:
+    try:
+        return json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {d}: {e}") from e
+
+
+def _load_leaf(d: pathlib.Path, i: int, entry: dict,
+               verify: bool) -> np.ndarray:
+    try:
+        arr = np.load(d / f"arr_{i}.npy")
+    except Exception as e:  # noqa: BLE001 - any load failure = rot
+        raise CheckpointCorruptError(
+            f"unreadable leaf {d / f'arr_{i}.npy'}: {e}") from e
+    if verify and entry.get("crc32") is not None \
+            and _crc32(arr) != entry["crc32"]:
+        raise CheckpointCorruptError(
+            f"crc32 mismatch on {d / f'arr_{i}.npy'}: manifest "
+            f"{entry['crc32']:#010x}, file {_crc32(arr):#010x}")
+    return arr
 
 
 def restore_checkpoint(ckpt_dir: str, tree_like: Any, step: int | None = None,
                        shardings: Any = None,
-                       layout: Optional[CheckpointLayout] = None
-                       ) -> tuple[Any, int]:
+                       layout: Optional[CheckpointLayout] = None,
+                       verify: bool = True) -> tuple[Any, int]:
     """Restore into the structure of `tree_like`; device_put against
     `shardings` (a matching tree) when given — this is where cross-mesh
     resharding happens.  ``layout`` describes the CURRENT run's master
     layout: the stored canonical leaves are re-laid-out through
     ``layout.from_canonical`` (the manifest's recorded layout must agree
-    in kind and canonical geometry; B/p may differ — elastic restore)."""
+    in kind and canonical geometry; B/p may differ — elastic restore).
+
+    Integrity: with ``verify`` (default) every leaf is crc-checked as it
+    is read.  An EXPLICIT ``step`` that fails raises
+    :class:`CheckpointCorruptError`; ``step=None`` walks the committed
+    steps newest-first and restores the newest one that verifies —
+    corruption of the latest checkpoint costs the steps since the
+    previous commit, never the restart.  Geometry mismatches (wrong
+    model/mesh — ValueError) always propagate: falling back PAST a
+    config error would silently resurrect an ancient checkpoint.
+    """
+    candidates = [step] if step is not None \
+        else list(reversed(committed_steps(ckpt_dir)))
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    last_err: Optional[CheckpointCorruptError] = None
+    for s in candidates:
+        try:
+            return _restore_one(ckpt_dir, tree_like, s, shardings,
+                                layout, verify)
+        except CheckpointCorruptError as e:
+            last_err = e
+            if step is not None:
+                raise
+            print(f"checkpoint step {s} is corrupt ({e}); falling back "
+                  f"to the previous committed step",
+                  file=sys.stderr, flush=True)
+    raise CheckpointCorruptError(
+        f"no verifiable checkpoint in {ckpt_dir} "
+        f"(tried steps {candidates})") from last_err
+
+
+def _restore_one(ckpt_dir: str, tree_like: Any, step: int,
+                 shardings: Any, layout: Optional[CheckpointLayout],
+                 verify: bool) -> tuple[Any, int]:
     layout = layout or REPLICATED
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    d = pathlib.Path(ckpt_dir) / f"step_{step}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    d = step_dir(ckpt_dir, step)
+    if d is None:
+        raise FileNotFoundError(
+            f"no committed step {step} in {ckpt_dir}")
+    manifest = _read_manifest(d)
     layout.check_manifest(manifest.get("layout"))
     paths, refs, treedef = _flatten_with_paths(tree_like)
     if len(manifest["leaves"]) != len(refs):
@@ -119,7 +317,8 @@ def restore_checkpoint(ckpt_dir: str, tree_like: Any, step: int | None = None,
             f"the restore target tree has {len(refs)}")
     out = []
     for i, (path, ref) in enumerate(zip(paths, refs)):
-        arr = layout.from_canonical(path, np.load(d / f"arr_{i}.npy"))
+        arr = layout.from_canonical(
+            path, _load_leaf(d, i, manifest["leaves"][i], verify))
         if tuple(arr.shape) != tuple(ref.shape):
             # a bare assert here vanishes under ``python -O`` and the
             # mismatch would surface as silent corruption steps later
@@ -142,20 +341,23 @@ def peek_manifest(ckpt_dir: str, step: int | None = None
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    d = pathlib.Path(ckpt_dir) / f"step_{step}"
-    return json.loads((d / "manifest.json").read_text()), step
+    d = step_dir(ckpt_dir, step)
+    if d is None:
+        raise FileNotFoundError(f"no committed step {step} in {ckpt_dir}")
+    return _read_manifest(d), step
 
 
-def load_canonical(ckpt_dir: str, step: int | None = None
-                   ) -> tuple[dict, list, int]:
-    """Read one checkpoint's manifest and its RAW canonical leaves, with
-    no layout validation or re-layout — the cross-layout restore path
-    (launch/steps.py:restore_lane_train_state) pairs these against a
-    source-layout template and lifts them to the replicated form through
-    the canonical flat order.  Returns (manifest, [np arrays], step)."""
+def load_canonical(ckpt_dir: str, step: int | None = None,
+                   verify: bool = True) -> tuple[dict, list, int]:
+    """Read one checkpoint's manifest and its RAW canonical leaves
+    (crc-checked), with no layout validation or re-layout — the
+    cross-layout restore path (launch/steps.py:restore_lane_train_state)
+    pairs these against a source-layout template and lifts them to the
+    replicated form through the canonical flat order.  Returns
+    (manifest, [np arrays], step)."""
     manifest, step = peek_manifest(ckpt_dir, step)
-    d = pathlib.Path(ckpt_dir) / f"step_{step}"
-    arrays = [np.load(d / f"arr_{i}.npy")
+    d = step_dir(ckpt_dir, step)
+    arrays = [_load_leaf(d, i, manifest["leaves"][i], verify)
               for i in range(len(manifest["leaves"]))]
     return manifest, arrays, step
 
@@ -164,24 +366,26 @@ def keep_last_k(ckpt_dir: str, k: int = 3) -> None:
     base = pathlib.Path(ckpt_dir)
     if not base.exists():
         return
-    steps = sorted(int(p.name.split("_")[1]) for p in base.iterdir()
-                   if p.is_dir() and p.name.startswith("step_")
-                   and not p.name.endswith(".tmp"))
-    for s in steps[:-k]:
+    for s in committed_steps(ckpt_dir)[:-k]:
         shutil.rmtree(base / f"step_{s}", ignore_errors=True)
+        shutil.rmtree(base / f"step_{s}.old", ignore_errors=True)
 
 
 class AsyncCheckpointer:
     """One background writer; at most one save in flight (later saves wait,
     which back-pressures rather than stacking host copies).  ``layout``
     is threaded into every ``save_checkpoint`` so ZeRO master state
-    canonicalizes off the critical path."""
+    canonicalizes off the critical path; ``attempts``/``backoff_s``
+    configure the transient-I/O retry of every save."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3,
-                 layout: Optional[CheckpointLayout] = None):
+                 layout: Optional[CheckpointLayout] = None,
+                 attempts: int = 3, backoff_s: float = 0.05):
         self.dir = ckpt_dir
         self.keep = keep
         self.layout = layout or REPLICATED
+        self.attempts = attempts
+        self.backoff_s = backoff_s
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
 
@@ -192,7 +396,8 @@ class AsyncCheckpointer:
         mask the original exception)."""
         return self._err
 
-    def save(self, step: int, tree: Any) -> None:
+    def save(self, step: int, tree: Any,
+             attempt_hook: Optional[Callable[[int], None]] = None) -> None:
         self.wait()
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                                  tree)
@@ -200,7 +405,10 @@ class AsyncCheckpointer:
         def work():
             try:
                 save_checkpoint(self.dir, step, host_tree,
-                                layout=self.layout)
+                                layout=self.layout,
+                                attempts=self.attempts,
+                                backoff_s=self.backoff_s,
+                                attempt_hook=attempt_hook)
                 keep_last_k(self.dir, self.keep)
             except BaseException as e:  # noqa: BLE001
                 self._err = e

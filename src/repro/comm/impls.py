@@ -291,6 +291,36 @@ def _gs_pipelined(comm, grads, *, num_buckets=0):
     return _unflatten_bucket(out, spec)
 
 
+@register_impl("grad_sync", "lane_quorum", auto_ok=False, feasible=_div_n)
+def _gs_quorum(comm, grads, *, num_buckets=0, contributing=None):
+    """Quorum-degraded lane sync: the DCN hop becomes a masked mean.
+
+    Identical bucket schedule to ``lane`` — RS(node) → AR(lane) →
+    AG(node) — but the lane allreduce is ``runtime.straggler``'s quorum
+    stage: THIS pod's ``contributing`` bit (0/1 scalar, from the
+    host-side watchdog) zeroes its payload and the divisor is the live
+    pod count instead of the lane size, so a masked pod's gradient
+    provably cannot influence the result — the step equals the same
+    step with that pod's microbatch skipped, which the (seed, step)-
+    keyed data pipeline can replay.  ``contributing=None`` means a full
+    quorum (all ones), bit-identical to ``lane`` on power-of-two pod
+    counts.  Never auto-selected: the result is a DIFFERENT estimator
+    (fewer samples) whenever any pod is masked.
+    """
+    from repro.runtime.straggler import quorum_stage
+    topo = comm.topo
+    if contributing is None:
+        contributing = jnp.ones((), jnp.float32)
+    K, flat, spec = _grad_prep(comm, grads, topo.n(), num_buckets)
+    parts = bucket_schedule(
+        flat, K, (_rs_node(topo),
+                  quorum_stage(topo.lane_axis, contributing),
+                  _ag_node(topo)))
+    # the quorum stage already divided by the live lane count; only the
+    # node-level replication factor is left
+    return _unflatten_bucket(jnp.concatenate(parts) / topo.n(), spec)
+
+
 @register_impl("grad_sync", "lane_int8", auto_ok=False)
 def _gs_int8(comm, grads, *, num_buckets=0):
     """Lossy (int8 DCN hop): opt-in only, never auto-selected."""

@@ -204,16 +204,19 @@ class LaneComm:
 
     # -- composite training collectives ----------------------------------
     def grad_sync(self, grads, *, strategy: Optional[str] = None,
-                  num_buckets: Optional[int] = None):
+                  num_buckets: Optional[int] = None, **kw):
         """Synchronize (mean) a gradient pytree over the batch axes.
 
         Returns the fully-reduced tree, or (sharded_flat, spec) for the
         ZeRO strategies — see the registered implementations in
         :mod:`repro.comm.impls` for the per-strategy contracts.
         ``num_buckets``: None = ``cfg.buckets``; 0 = cost-model auto.
+        Extra keywords flow to the implementation (``lane_quorum`` takes
+        ``contributing=``, this pod's 0/1 watchdog bit).
         """
         nb = self.cfg.buckets if num_buckets is None else num_buckets
-        return self._dispatch("grad_sync", grads, strategy, num_buckets=nb)
+        return self._dispatch("grad_sync", grads, strategy,
+                              num_buckets=nb, **kw)
 
     def prefetch_allgather(self, shard, *, strategy: Optional[str] = None,
                            num_blocks: Optional[int] = None):

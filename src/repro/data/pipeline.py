@@ -73,10 +73,16 @@ class ShardedLoader:
         assert self.global_batch % self.num_hosts == 0
         return self.global_batch // self.num_hosts
 
-    def batch_at(self, step: int):
-        """(tokens, labels) for this host, shape (host_rows, seq_len)."""
-        rows = self.host_rows()
-        row0 = self.host_index * rows
+    def batch_slice(self, step: int, row0: int, rows: int):
+        """(tokens, labels) for global rows [row0, row0+rows) of ``step``.
+
+        Rows are keyed by (seed, step, global_row) alone — NOT by which
+        host asks — so any host can regenerate any other host's slice.
+        This is what makes quorum-dropped microbatches replayable: the
+        rows a masked pod never contributed are a pure function of
+        (seed, step, that pod's row range), and a later step (or an
+        offline audit) re-materializes exactly them.
+        """
         toks = np.empty((rows, self.seq_len + 1), np.int32)
         for r in range(rows):
             # offset mixes (seed, step, global_row) — restart-stable
@@ -86,6 +92,11 @@ class ShardedLoader:
                       + np.uint64(g)) * np.uint64(self.seq_len)
             toks[r] = self.source.window(int(offset % (2**62)), self.seq_len)
         return toks[:, :-1].copy(), toks[:, 1:].copy()
+
+    def batch_at(self, step: int):
+        """(tokens, labels) for this host, shape (host_rows, seq_len)."""
+        rows = self.host_rows()
+        return self.batch_slice(step, self.host_index * rows, rows)
 
     def prefetch(self, start_step: int, depth: int = 2) -> Iterator:
         """Background-threaded iterator of (step, tokens, labels)."""

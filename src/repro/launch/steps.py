@@ -202,6 +202,53 @@ for _s in ("native", "lane", "lane_pipelined", "lane_int8", "auto"):
     _register_replicated(_s)
 
 
+register_param_layout("lane_quorum", "replicated")
+
+
+@register_impl("train_step", "lane_quorum", auto_ok=False)
+def _build_quorum(comm, ctx: StepContext):
+    """Quorum-degraded replicated step: the DEGRADED rung of the ladder.
+
+    Same replicated-parameter step as ``lane``, but it takes a trailing
+    ``quorum_mask`` argument — the watchdog's 0/1 float32 vector over
+    the lane (pod) axis, replicated (P() spec) so each pod dynamically
+    indexes its own bit — and routes gradients through the
+    ``lane_quorum`` grad-sync: masked pods contribute zero and the mean
+    rescales by the live count (runtime.straggler.quorum_stage).  The
+    logged loss degrades the same way (node pmean, then quorum_mean
+    over the lane).  With ``quorum_mask=None`` (or all ones) the step
+    is the full-quorum path, bit-identical to ``lane`` on power-of-two
+    pod counts.  The driver keys the 6-argument shard_map signature off
+    ``step.needs_quorum_mask``.
+    """
+    from repro.runtime.straggler import quorum_mean
+    lf = _make_loss(ctx)
+    topo = comm.topo
+    vg = _microbatched(
+        lambda p, t, l, e: jax.value_and_grad(lf)(p, t, l, e),
+        ctx.run.microbatch, _accum_dtype(ctx.run))
+
+    def step(params, opt_state, tokens, labels, extra=None,
+             quorum_mask=None):
+        loss, grads = vg(params, tokens, labels, extra)
+        if quorum_mask is None:
+            c = jnp.ones((), jnp.float32)
+            loss = jax.lax.pmean(loss, ctx.ba)
+        else:
+            c = jnp.asarray(quorum_mask,
+                            jnp.float32)[topo.lane_rank()]
+            if topo.node_axes:
+                loss = jax.lax.pmean(loss, topo.node_axes)
+            loss = quorum_mean(loss, topo.lane_axis, c)
+        grads = comm.grad_sync(grads, strategy="lane_quorum",
+                               contributing=c)
+        new_params, new_opt = adamw_update(ctx.opt, grads, opt_state,
+                                           params)
+        return loss, new_params, new_opt
+    step.needs_quorum_mask = True
+    return step
+
+
 register_param_layout("lane_zero1", "zero1")
 
 
@@ -850,7 +897,40 @@ def restore_lane_train_state(ckpt_dir: str, cfg: ModelConfig,
     checkpoint into a ``lane_zero1`` or replicated run, and back).
     Same-kind restores delegate to the ordinary layout-validated path.
     Returns ((params, opt_state), step); ``shardings`` (a
-    ``st.to_shardings(mesh)`` pair) device_puts the result."""
+    ``st.to_shardings(mesh)`` pair) device_puts the result.
+
+    Integrity: leaves crc-verify as they load.  With ``step=None`` a
+    corrupt newest checkpoint falls back to the newest committed step
+    that verifies (losing the steps since that commit, never the
+    restart); an EXPLICIT step raises ``CheckpointCorruptError``.
+    Geometry ValueErrors always propagate — a config mismatch must not
+    be "survived" by resurrecting an older checkpoint."""
+    import sys
+    from repro.checkpoint import CheckpointCorruptError, committed_steps
+    candidates = [step] if step is not None \
+        else list(reversed(committed_steps(ckpt_dir)))
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    last_err = None
+    for cand in candidates:
+        try:
+            return _restore_lane_state_at(ckpt_dir, cfg, run, mesh, st,
+                                          cand, shardings)
+        except CheckpointCorruptError as e:
+            last_err = e
+            if step is not None:
+                raise
+            print(f"checkpoint step {cand} is corrupt ({e}); falling "
+                  f"back to the previous committed step",
+                  file=sys.stderr, flush=True)
+    raise CheckpointCorruptError(
+        f"no verifiable checkpoint in {ckpt_dir} "
+        f"(tried steps {candidates})") from last_err
+
+
+def _restore_lane_state_at(ckpt_dir: str, cfg: ModelConfig,
+                           run: RunConfig, mesh, st: LaneTrainState,
+                           step: int, shardings=None):
     from repro.checkpoint import load_canonical, restore_checkpoint
     from repro.checkpoint.store import peek_manifest
     # decide the kind from the manifest ALONE: the common same-kind

@@ -2,13 +2,14 @@
 
 The step resolves through the ``repro.comm`` "train_step" registry
 (``build_train_step_lane``): ``--gradsync`` accepts every registered
-strategy (derived from the registry, incl. ``auto`` and the ZeRO
-flavors), ``--gradsync-buckets`` / ``--fsdp-prefetch`` are the §5 tuning
-knobs, and the master parameter/optimizer layout (replicated vs ZeRO-1
-flat moments vs the ZeRO-3 (L, B, p, s) layer masters) follows
-``LaneComm.param_layout`` via ``launch.steps.init_lane_train_state`` —
-checkpoints canonicalize through the matching layout so a ``lane_zero3``
-checkpoint written at p chips restores bit-identically at p′ chips.
+strategy (derived from the registry, incl. ``auto``, the ZeRO flavors
+and the quorum-degraded ``lane_quorum``), ``--gradsync-buckets`` /
+``--fsdp-prefetch`` are the §5 tuning knobs, and the master
+parameter/optimizer layout (replicated vs ZeRO-1 flat moments vs the
+ZeRO-3 (L, B, p, s) layer masters) follows ``LaneComm.param_layout`` via
+``launch.steps.init_lane_train_state`` — checkpoints canonicalize
+through the matching layout so a ``lane_zero3`` checkpoint written at p
+chips restores bit-identically at p′ chips.
 
 Examples
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
@@ -17,27 +18,49 @@ Examples
   (production: same entry point under one process per host with
    jax.distributed.initialize(); the mesh comes from launch/mesh.py)
 
-Fault tolerance exercised here and in tests:
-  * resume: picks up from the latest committed checkpoint (data pipeline
-    is (seed, step)-keyed so the token stream continues exactly)
+Fault tolerance — the recovery ladder (HEALTHY → DEGRADED → RESTART):
+  * ``--fault-plan`` injects a deterministic runtime.faults.FaultPlan
+    (pod_slow / pod_lost / ckpt_io / corrupt_leaf) so every rung runs
+    under tier-1 with no real hardware; ``seed:<n>`` draws a seeded
+    random plan.
+  * a runtime.watchdog.Watchdog folds per-pod progress heartbeats into
+    the 0/1 contributing mask; under ``--gradsync lane_quorum`` the
+    step takes that mask and DEGRADED steps proceed with the
+    quorum-rescaled gradient (masked pods contribute zero; their
+    (seed, step)-keyed microbatch rows are logged and replayable).
+  * runtime.health.HealthMonitor bounds the staleness
+    (``--quorum-staleness`` K): a pod masked for more than K
+    consecutive steps — or ANY masked pod under a strategy with no
+    quorum path — escalates to RESTART: emergency checkpoint, then
+    ``plan_elastic_mesh`` re-plans around the lost pod's devices and
+    the attempt loop resumes on the survivors (``--max-restarts``
+    bounds it).  The in-process restart is bit-identical to killing
+    the job and re-launching with ``--lose-chips``.
+  * resume: picks up from the newest checkpoint that VERIFIES (per-leaf
+    crc32; a corrupt latest falls back to the previous committed step);
+    the data pipeline is (seed, step)-keyed so the token stream
+    continues exactly
   * SIGTERM → emergency checkpoint before exit (preemption handling);
     the emergency save records the last COMPLETED step, never a step
     that raised or was interrupted mid-flight
   * elastic restart: ``--lose-chips`` re-plans the mesh around lost
     devices (runtime.elastic) and the layout-aware restore re-shards the
     canonical checkpoint onto the survivors
-  * async checkpoint writer off the critical path; worker errors surface
+  * async checkpoint writer off the critical path with bounded
+    retry-with-backoff for transient I/O errors; worker errors surface
     on the emergency path instead of dying with the daemon thread
 """
 from __future__ import annotations
 
 import argparse
+import math
 import signal
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import resolve, RunConfig
@@ -50,6 +73,9 @@ from repro.launch.mesh import batch_axes
 from repro.launch.steps import (build_train_step_lane, init_lane_train_state,
                                 restore_lane_train_state)
 from repro.runtime.elastic import plan_elastic_mesh
+from repro.runtime.faults import FaultPlan, corrupt_leaf_file
+from repro.runtime.health import DEGRADED, RESTART, HealthMonitor
+from repro.runtime.watchdog import Watchdog
 
 
 def make_mesh_auto(batch: int = 1 << 30, pods: int = 1):
@@ -98,6 +124,52 @@ def _resolve_pods(pods: int, gradsync: str) -> int:
     return 1
 
 
+def _outer_axis(mesh0) -> int:
+    """Index of the outermost batch axis (the lane/pod level) — the axis
+    plan_elastic_mesh shrinks and the watchdog's quorum is over."""
+    names = mesh0.axis_names
+    for a in ("pod", "data"):
+        if a in names:
+            return names.index(a)
+    raise ValueError(f"no batch axis in {names}")
+
+
+def _restart_flat_indices(mesh0, lost, pod_ranks) -> list:
+    """Map CURRENT-mesh lane ranks the health ladder condemned back to
+    ORIGINAL-mesh flat device indices.
+
+    The current mesh is the original minus the outer-axis slices that
+    contain ``lost``; the surviving outer coordinates, in order, ARE the
+    current lane ranks.  Returning original-mesh indices keeps one
+    canonical bookkeeping: replanning from (mesh0, lost ∪ these) is
+    byte-for-byte the ``--lose-chips`` path, so an in-process restart is
+    bit-identical to a fresh launch that lost the same pods.
+    """
+    shape0 = mesh0.devices.shape
+    outer = _outer_axis(mesh0)
+    dropped = {np.unravel_index(i, shape0)[outer] for i in lost}
+    survivors = [c for c in range(shape0[outer]) if c not in dropped]
+    out = []
+    for q in pod_ranks:
+        coord = survivors[q]
+        out.extend(i for i in range(math.prod(shape0))
+                   if np.unravel_index(i, shape0)[outer] == coord)
+    return sorted(out)
+
+
+def _post_commit_faults(ckpt, plan: FaultPlan, ckpt_dir: str,
+                        step: int) -> None:
+    """Apply any corrupt_leaf fault scheduled for ``step`` — AFTER the
+    async commit lands (wait), so the crc machinery (not the atomic
+    rename) is what must catch it."""
+    leaf = plan.corrupt_at(step)
+    if leaf is not None:
+        ckpt.wait()
+        p = corrupt_leaf_file(ckpt_dir, step, leaf)
+        print(f"fault: corrupted {p} after commit "
+              f"(restore must fall back via crc32)", flush=True)
+
+
 def main(argv=None):
     from repro.comm import strategies_for
     ap = argparse.ArgumentParser()
@@ -140,14 +212,60 @@ def main(argv=None):
                     help="comma-separated flat device indices to treat "
                          "as lost: re-plan the mesh around them "
                          "(elastic restart on survivors)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection: "
+                         "'kind@step[-until][:k=v,...];...' (kinds "
+                         "pod_slow/pod_lost/ckpt_io/corrupt_leaf, see "
+                         "runtime.faults) or 'seed:<n>' for a seeded "
+                         "random plan")
+    ap.add_argument("--quorum-staleness", type=int, default=2,
+                    help="K: consecutive steps a pod may be masked out "
+                         "of the quorum before DEGRADED escalates to "
+                         "RESTART")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="in-process elastic restarts before giving up")
     args = ap.parse_args(argv)
 
     cfg = resolve(args.arch, smoke=args.smoke)
-    mesh = make_mesh_auto(args.batch,
-                          _resolve_pods(args.pods, args.gradsync))
+    mesh0 = make_mesh_auto(args.batch,
+                           _resolve_pods(args.pods, args.gradsync))
+    if args.fault_plan.startswith("seed:"):
+        num_pods0 = mesh0.devices.shape[_outer_axis(mesh0)]
+        plan = FaultPlan.generate(int(args.fault_plan[len("seed:"):]),
+                                  args.steps, num_pods0)
+        print(f"fault plan (seeded): {plan.faults}")
+    else:
+        plan = FaultPlan.parse(args.fault_plan)
+    lost = set()
     if args.lose_chips:
-        lost = [int(x) for x in args.lose_chips.split(",") if x != ""]
-        em = plan_elastic_mesh(mesh.axis_names, mesh.devices.shape, lost)
+        lost = {int(x) for x in args.lose_chips.split(",") if x != ""}
+
+    # the recovery-ladder attempt loop: each RESTART returns the lost
+    # pods' ORIGINAL-mesh device indices and the next attempt replans —
+    # exactly the --lose-chips path, so the in-process restart is
+    # bit-identical to a fresh launch on the survivors
+    for attempt in range(args.max_restarts + 1):
+        rc, more = _run_attempt(args, cfg, plan, mesh0, sorted(lost))
+        if more is None:
+            return rc
+        lost |= set(more)
+        print(f"restart {attempt + 1}/{args.max_restarts}: re-planning "
+              f"around lost devices {sorted(lost)}", flush=True)
+    print(f"giving up after {args.max_restarts} restarts",
+          file=sys.stderr, flush=True)
+    return 1
+
+
+def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
+    """One attempt of the run on the mesh that survives ``lost``.
+
+    Returns (rc, None) when the run completed (or legitimately stopped),
+    or (None, new_lost_flat_indices) when the health ladder hit RESTART
+    — the caller replans and tries again.
+    """
+    mesh = mesh0
+    if lost:
+        em = plan_elastic_mesh(mesh0.axis_names, mesh0.devices.shape, lost)
         mesh = em.make()
         print(f"elastic mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}"
               f" (lost {em.lost})")
@@ -179,7 +297,8 @@ def main(argv=None):
         # restore_lane_train_state handles BOTH same-kind restores and
         # cross-layout ones (a lane_zero3 checkpoint resuming under
         # lane_zero1 or a replicated strategy, and back) through the
-        # canonical flat order
+        # canonical flat order — and falls back to the newest committed
+        # step whose crc32s verify when the latest one rotted on disk
         (params, opt_state), start_step = restore_lane_train_state(
             args.ckpt, cfg, run, mesh, st,
             shardings=(pshard, oshard))
@@ -189,10 +308,26 @@ def main(argv=None):
         params = jax.tree.map(jax.device_put, st.params, pshard)
         opt_state = jax.tree.map(jax.device_put, st.opt_state, oshard)
 
+    # fault/quorum machinery: the watchdog folds heartbeats (driven by
+    # the fault plan; on a real fleet, by per-host progress counters)
+    # into the 0/1 contributing mask, and the health monitor runs the
+    # HEALTHY → DEGRADED → RESTART ladder on it.  Strategies without a
+    # quorum grad-sync cannot form a step minus a pod, so any masked
+    # pod escalates straight to RESTART (can_degrade=False).
+    num_pods = mesh.devices.shape[_outer_axis(mesh)]
+    needs_mask = bool(getattr(step, "needs_quorum_mask", False))
+    watch = Watchdog(num_pods) if (plan or needs_mask) else None
+    health = HealthMonitor(num_pods,
+                           staleness_limit=args.quorum_staleness,
+                           can_degrade=needs_mask) if watch else None
+
     dspec = P(ba)
+    in_specs = [st.pspecs, st.ospecs, dspec, dspec, None]
+    if needs_mask:
+        in_specs.append(P())           # quorum mask: replicated
     step_fn = jax.jit(
         jax.shard_map(step, mesh=mesh,
-                      in_specs=(st.pspecs, st.ospecs, dspec, dspec, None),
+                      in_specs=tuple(in_specs),
                       out_specs=(P(), st.pspecs, st.ospecs),
                       check_vma=False),
         donate_argnums=(0, 1))
@@ -208,12 +343,38 @@ def main(argv=None):
     losses = []
     done = start_step        # last COMPLETED step count (emergency save)
     saved = start_step       # largest step known committed
+    restart_lost = None      # set when the health ladder demands RESTART
     try:
         for s in range(start_step, args.steps):
+            mask = None
+            if watch is not None:
+                for pod in set(range(num_pods)) \
+                        - set(plan.pods_down(s, num_pods)):
+                    watch.heartbeat(pod, s)
+                mask = watch.mask(s)
+                state = health.observe(s, mask)
+                if state == RESTART:
+                    restart_lost = _restart_flat_indices(
+                        mesh0, lost, health.restart_pods())
+                    break
+                if state == DEGRADED:
+                    rows = args.batch // num_pods
+                    for pod in watch.stale(s):
+                        # the dropped rows are a pure function of
+                        # (seed, step, row range) — ShardedLoader
+                        # .batch_slice regenerates exactly them
+                        print(f"degraded step {s}: pod {pod} masked; "
+                              f"rows [{pod * rows}, {(pod + 1) * rows})"
+                              f" dropped, replayable from (seed="
+                              f"{args.seed}, step={s})", flush=True)
             toks, labels = loader.batch_at(s)
-            loss, params, opt_state = step_fn(
-                params, opt_state, jnp.asarray(toks), jnp.asarray(labels),
-                None)
+            call = [params, opt_state, jnp.asarray(toks),
+                    jnp.asarray(labels), None]
+            if needs_mask:
+                call.append(jnp.asarray(
+                    mask if mask is not None
+                    else np.ones((num_pods,), np.float32)))
+            loss, params, opt_state = step_fn(*call)
             done = s + 1     # only after the step returned — a raise or
             #                  SIGTERM mid-step must not claim step s
             if s % args.log_every == 0 or s == args.steps - 1:
@@ -224,8 +385,10 @@ def main(argv=None):
                 print(f"step {s:5d}  loss {lv:8.4f}  tok/s {tps:9.0f}",
                       flush=True)
             if ckpt and done % args.ckpt_every == 0:
-                ckpt.save(done, (params, opt_state))
+                ckpt.save(done, (params, opt_state),
+                          attempt_hook=plan.ckpt_attempt_hook(done))
                 saved = done
+                _post_commit_faults(ckpt, plan, args.ckpt, done)
             if terminate["now"]:
                 print("SIGTERM: emergency checkpoint")
                 break
@@ -237,7 +400,10 @@ def main(argv=None):
         if ckpt:
             try:
                 if done > saved and _tree_alive((params, opt_state)):
-                    ckpt.save(done, (params, opt_state))
+                    ckpt.save(done, (params, opt_state),
+                              attempt_hook=plan.ckpt_attempt_hook(done))
+                    saved = done
+                    _post_commit_faults(ckpt, plan, args.ckpt, done)
                 elif done > saved:
                     # a raise INSIDE step done+1 deleted the state (it was
                     # donated into the failing call): nothing to save —
@@ -254,23 +420,30 @@ def main(argv=None):
                       f"{e!r}", file=sys.stderr, flush=True)
                 if not unwinding:
                     raise
+    if restart_lost is not None:
+        print(f"RESTART at step {done}: emergency checkpoint committed, "
+              f"shrinking around pods {health.restart_pods()}", flush=True)
+        if not args.ckpt:
+            print("WARNING: no --ckpt; the restarted attempt re-inits "
+                  "from scratch", file=sys.stderr, flush=True)
+        return None, restart_lost
     if start_step >= args.steps:
         # resuming a finished run: the loop never ran — nothing to
         # report (and nothing was checkpointed above)
         print(f"nothing to do: resumed at step {start_step} >= "
               f"--steps {args.steps}")
-        return 0
+        return 0, None
     if not losses:
         # stopped (SIGTERM) before the first log boundary — real work
         # may still have been checkpointed above
         print(f"stopped at step {done} before the first log boundary")
-        return 0
+        return 0, None
     if len(losses) >= 2 and losses[-1] >= losses[0]:
         print(f"WARNING: loss did not decrease ({losses[0]:.3f} → "
               f"{losses[-1]:.3f})")
     else:
         print(f"loss {losses[0]:.4f} → {losses[-1]:.4f}  OK")
-    return 0
+    return 0, None
 
 
 if __name__ == "__main__":

@@ -1,2 +1,5 @@
 from .elastic import ElasticMesh, plan_elastic_mesh
-from .straggler import quorum_mean
+from .faults import Fault, FaultPlan, corrupt_leaf_file, parse_fault_plan
+from .health import DEGRADED, HEALTHY, RESTART, HealthEvent, HealthMonitor
+from .straggler import quorum_mean, quorum_stage
+from .watchdog import Watchdog

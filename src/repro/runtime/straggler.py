@@ -17,6 +17,27 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def quorum_stage(lane_axis: str, contributing):
+    """Bucket-schedule stage: quorum allreduce-mean over the lane axis.
+
+    The lane_quorum grad-sync replaces ``_ar_lane`` (plain psum) with
+    this stage inside the same RS(node) → AR(lane) → AG(node) schedule:
+    each bucket is masked by THIS pod's contributing bit and divided by
+    the live count.  The divisor is hoisted out of the per-bucket
+    closure — one scalar psum for the whole schedule, not one per
+    bucket.  With an all-ones mask the stage computes psum(x·1)/P,
+    which on power-of-two pod counts is bit-identical to the ``lane``
+    strategy's psum followed by its deferred /P.
+    """
+    c = jnp.asarray(contributing, jnp.float32)
+    den = jnp.maximum(lax.psum(c, lane_axis), 1.0)
+
+    def stage(v):
+        cv = c.astype(v.dtype)
+        return lax.psum(v * cv, lane_axis) / den.astype(v.dtype)
+    return stage
+
+
 def quorum_mean(x, lane_axis: str, contributing):
     """Mean of `x` over the lane (pod) axis counting only contributors.
 

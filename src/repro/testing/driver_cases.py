@@ -14,8 +14,14 @@ Covered here (the pieces that need a real multi-pod mesh):
     from a mid-run checkpoint writes a final checkpoint byte-identical
     to the uninterrupted run's (same mesh ⇒ same reduction order ⇒ the
     restart must be invisible).
+  * the ``fault_*`` matrix (also runnable alone: ``--match fault_`` /
+    ``make fault-smoke``): the injected-fault recovery surface —
+    corrupt-latest crc fallback, kill-mid-write ``.old`` swap,
+    transient ckpt-I/O retry, quorum-masked grad-sync bit-identity,
+    and the DEGRADED→RESTART ladder end-to-end.
 Single-device restart cases (SIGTERM, crash step accounting, resume at
-completion) live directly in tests/test_checkpoint_runtime.py.
+completion) live directly in tests/test_checkpoint_runtime.py, and the
+single-device fault/quorum/integrity units in tests/test_faults.py.
 """
 import pathlib
 import sys
@@ -240,8 +246,181 @@ def driver_cross_layout_restore_chain():
         assert manifest_kind(ck) == "zero3"
 
 
+@case
+def fault_ladder_degraded_restart_bitident():
+    """THE acceptance ladder: pod 1 stops heartbeating at step 2 (injected
+    pod_lost), the driver degrades (quorum-masked steps with pod 1's
+    contribution zeroed), exceeds the staleness bound, RESTARTs —
+    emergency checkpoint, elastic shrink to the survivor pod — and
+    finishes.  The final params must be BIT-identical to a clean launch
+    on the already-shrunken mesh resumed from the same emergency
+    checkpoint: the in-process restart is indistinguishable from a
+    scheduler respawn."""
+    import contextlib
+    import io
+    import shutil
+    from repro.checkpoint import latest_step
+    with tempfile.TemporaryDirectory() as td:
+        ck = f"{td}/ck"
+        base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                "--seq", "32", "--log-every", "1", "--gradsync",
+                "lane_quorum", "--pods", "2", "--ckpt", ck,
+                "--ckpt-every", "100", "--steps", "8", "--seed", "7"]
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            _train([*base, "--fault-plan", "pod_lost@2:pod=1",
+                    "--quorum-staleness", "2"])
+        out = buf.getvalue()
+        assert "HEALTHY -> DEGRADED" in out, out
+        assert "DEGRADED -> RESTART" in out, out
+        assert "replayable from (seed=7, step=2)" in out, out
+        assert latest_step(ck) == 8
+        fa = _read_step_dir(pathlib.Path(ck) / "step_8")
+
+        # clean reference: fresh launch on the survivor mesh, resuming
+        # the SAME emergency checkpoint (step_4)
+        ck_b = f"{td}/ck_b"
+        shutil.copytree(ck, ck_b)
+        shutil.rmtree(pathlib.Path(ck_b) / "step_8")
+        lost = [i for i in range(8)
+                if np.unravel_index(i, (2, 2, 2))[0] == 1]
+        base_b = [a if a != ck else ck_b for a in base]
+        _train([*base_b, "--lose-chips", ",".join(str(i) for i in lost)])
+        fb = _read_step_dir(pathlib.Path(ck_b) / "step_8")
+        assert set(fa) == set(fb)
+        for name in fa:
+            assert fa[name] == fb[name], \
+                f"{name}: ladder restart differs from clean shrunken launch"
+
+
+@case
+def fault_corrupt_latest_falls_back():
+    """Post-commit rot of the NEWEST checkpoint (injected corrupt_leaf):
+    restart crc-verifies, skips the rotted step_4, restores the previous
+    verified commit, and re-earns the lost steps."""
+    import contextlib
+    import io
+    from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                                  latest_verified_step, verify_checkpoint)
+    with tempfile.TemporaryDirectory() as td:
+        ck = f"{td}/ck"
+        base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                "--seq", "32", "--log-every", "1", "--gradsync", "lane",
+                "--pods", "2", "--ckpt", ck, "--ckpt-every", "2"]
+        _train([*base, "--steps", "4",
+                "--fault-plan", "corrupt_leaf@4:leaf=1"])
+        assert latest_step(ck) == 4
+        try:
+            verify_checkpoint(ck, 4)
+            raise AssertionError("injected corruption not detected")
+        except CheckpointCorruptError:
+            pass
+        assert latest_verified_step(ck) == 2
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            _train([*base, "--steps", "6"])
+        assert "resumed from step 2" in buf.getvalue()
+        assert latest_step(ck) == 6
+        verify_checkpoint(ck, 6)
+
+
+@case
+def fault_ckpt_io_transient_retry():
+    """Transient checkpoint-I/O errors (injected ckpt_io, 2 failing
+    attempts) are absorbed by save_checkpoint's bounded retry — the
+    commit lands on the 3rd attempt and verifies."""
+    from repro.checkpoint import latest_step, verify_checkpoint
+    with tempfile.TemporaryDirectory() as td:
+        ck = f"{td}/ck"
+        _train(["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                "--seq", "32", "--log-every", "1", "--gradsync", "lane",
+                "--pods", "2", "--ckpt", ck, "--ckpt-every", "2",
+                "--steps", "2", "--fault-plan", "ckpt_io@2:count=2"])
+        assert latest_step(ck) == 2
+        verify_checkpoint(ck, 2)
+
+
+@case
+def fault_kill_mid_write_restores_prior_commit():
+    """Crash in the worst overwrite window — after the committed copy was
+    parked to ``.old``, before the new one renamed in (plus a stray
+    ``.tmp`` and an operator's ``step_backup`` dir).  The scanner must
+    treat the lone ``step_2.old`` as committed, restore it, and the next
+    save must re-commit the final name cleanly."""
+    import contextlib
+    import io
+    from repro.checkpoint import committed_steps, latest_step
+    with tempfile.TemporaryDirectory() as td:
+        ck = f"{td}/ck"
+        base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                "--seq", "32", "--log-every", "1", "--gradsync", "lane",
+                "--pods", "2", "--ckpt", ck, "--ckpt-every", "2"]
+        _train([*base, "--steps", "2"])
+        d = pathlib.Path(ck)
+        (d / "step_2").rename(d / "step_2.old")      # parked, not yet
+        (d / "step_2.tmp").mkdir()                   # ...renamed in
+        (d / "step_2.tmp" / "arr_0.npy").write_bytes(b"partial")
+        (d / "step_backup").mkdir()                  # stray operator dir
+        assert committed_steps(ck) == [2]
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            _train([*base, "--steps", "3"])
+        assert "resumed from step 2" in buf.getvalue()
+        assert latest_step(ck) == 3
+        assert (d / "step_3" / "manifest.json").exists()
+
+
+@case
+def fault_quorum_masked_equals_skipped_microbatch():
+    """Numerical contract of the quorum-degraded step: masking pod 1 out
+    of the quorum is BIT-identical to a run whose batch simply repeats
+    pod 0's rows under plain ``lane`` sync.  (psum([v0, 0])/1 == v0 and
+    psum([v0, v0])/2 == v0 exactly; the quorum mean rescales by the live
+    count, so the masked pod's microbatch is cleanly *skipped*, not
+    averaged in as zeros.)"""
+    import repro.data.pipeline as pl
+    with tempfile.TemporaryDirectory() as td:
+        ck_a, ck_b = f"{td}/a", f"{td}/b"
+        base = ["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                "--seq", "32", "--log-every", "1", "--pods", "2",
+                "--ckpt-every", "2", "--steps", "2", "--seed", "11"]
+        # run A: pod 1 masked out of the quorum for the whole run
+        _train([*base, "--ckpt", ck_a, "--gradsync", "lane_quorum",
+                "--fault-plan", "pod_slow@0-1:pod=1",
+                "--quorum-staleness", "99"])
+        # run B: plain lane sync, but pod 1's rows REPLACED by pod 0's
+        # (averaging two identical microbatches == using one)
+        orig = pl.ShardedLoader.batch_at
+
+        def duped(self, step):
+            rows = self.host_rows() // 2
+            toks, labs = self.batch_slice(step, 0, rows)
+            return (np.concatenate([toks, toks]),
+                    np.concatenate([labs, labs]))
+
+        pl.ShardedLoader.batch_at = duped
+        try:
+            _train([*base, "--ckpt", ck_b, "--gradsync", "lane"])
+        finally:
+            pl.ShardedLoader.batch_at = orig
+        fa = _read_step_dir(pathlib.Path(ck_a) / "step_2")
+        fb = _read_step_dir(pathlib.Path(ck_b) / "step_2")
+        assert set(fa) == set(fb)
+        for name in fa:
+            assert fa[name] == fb[name], \
+                f"{name}: quorum-masked step differs from skipped microbatch"
+
+
 def main(argv):
-    names = argv or sorted(CASES)
+    argv = list(argv)
+    if argv[:1] == ["--match"]:
+        pat = argv[1] if len(argv) > 1 else ""
+        names = sorted(n for n in CASES if pat in n)
+        if not names:
+            print(f"no cases match {pat!r}")
+            return 1
+    else:
+        names = argv or sorted(CASES)
     fails = 0
     for name in names:
         try:

@@ -64,7 +64,7 @@ EXPECTED_LANECOMM_METHODS = {
     "scan": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "grad_sync":
         "(self, grads, *, strategy: 'Optional[str]' = None, num_buckets: "
-        "'Optional[int]' = None)",
+        "'Optional[int]' = None, **kw)",
     "prefetch_allgather":
         "(self, shard, *, strategy: 'Optional[str]' = None, num_blocks: "
         "'Optional[int]' = None)",
@@ -83,8 +83,8 @@ EXPECTED_STRATEGIES = {
     "reduce": ("native", "lane", "lane_pipelined"),
     "gather": ("native", "lane"),
     "scatter": ("native", "lane"),
-    "grad_sync": ("native", "lane", "lane_pipelined", "lane_int8",
-                  "lane_zero1", "lane_zero3"),
+    "grad_sync": ("native", "lane", "lane_pipelined", "lane_quorum",
+                  "lane_int8", "lane_zero1", "lane_zero3"),
     "prefetch_allgather": ("lane_pipelined", "blocking"),
 }
 
@@ -115,7 +115,7 @@ def test_registered_strategy_tables_locked():
         assert comm.strategies_for(coll) == strategies, coll
     assert comm.strategies_for("train_step") == (
         "native", "lane", "lane_pipelined", "lane_int8", "auto",
-        "lane_zero1", "lane_zero3")
+        "lane_quorum", "lane_zero1", "lane_zero3")
     # the lane-capable model families are registry surface too: the
     # zero3 runtime, the train-smoke sweep and the bench schema all
     # enumerate this table (models/blockstack.py)
@@ -132,8 +132,8 @@ def test_param_layout_table_locked():
     import repro.launch.steps  # noqa: F401 - registers layouts
     expected = {"native": "replicated", "lane": "replicated",
                 "lane_pipelined": "replicated", "lane_int8": "replicated",
-                "auto": "replicated", "lane_zero1": "zero1",
-                "lane_zero3": "zero3"}
+                "auto": "replicated", "lane_quorum": "replicated",
+                "lane_zero1": "zero1", "lane_zero3": "zero3"}
     for strategy, kind in expected.items():
         assert comm.param_layout_kind(strategy) == kind, strategy
     with pytest.raises(ValueError, match="no param layout"):
@@ -146,6 +146,7 @@ def test_auto_eligibility_locked():
     entries = {e.strategy: e for e in comm.iter_impls("grad_sync")}
     assert {s for s, e in entries.items() if e.auto_ok and e.cost} == \
         {"native", "lane", "lane_pipelined"}
+    assert not entries["lane_quorum"].auto_ok   # degraded-mode only
     assert not entries["lane_int8"].auto_ok
     assert not entries["lane_zero1"].auto_ok
     assert not entries["lane_zero3"].auto_ok

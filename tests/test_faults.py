@@ -1,0 +1,337 @@
+"""Unit tier for the fault-tolerant lane runtime (tentpole PR 6).
+
+Single-device pieces of the failure story: the deterministic fault plan
+(runtime/faults.py), the progress watchdog and health-state ladder
+(runtime/watchdog.py, runtime/health.py), the quorum collectives on a
+degenerate lane, checkpoint integrity (crc32 verify, verified fallback,
+the ``.old`` overwrite swap, stray-name hardening, bounded retry), and
+the (seed, step)-keyed microbatch replay contract of the data pipeline.
+
+The multi-pod halves — the DEGRADED→RESTART driver ladder, quorum
+bit-identity against a skipped microbatch, restart-vs-fresh-launch
+bit-identity — need 8 devices and live in testing/driver_cases.py
+(``fault_*`` cases), executed per-case by test_checkpoint_runtime.py in
+a subprocess.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import (CheckpointCorruptError, committed_steps,
+                              keep_last_k, latest_step, latest_verified_step,
+                              restore_checkpoint, save_checkpoint,
+                              verify_checkpoint)
+from repro.runtime import (DEGRADED, HEALTHY, RESTART, FaultPlan,
+                           HealthMonitor, Watchdog, corrupt_leaf_file,
+                           parse_fault_plan, quorum_mean, quorum_stage)
+
+
+# ---------------------------------------------------------------------------
+# fault plan: grammar, determinism, queries
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_grammar():
+    plan = parse_fault_plan(
+        "pod_slow@2-4:pod=1;pod_lost@6:pod=0;ckpt_io@3:count=2;"
+        "corrupt_leaf@8:leaf=5")
+    kinds = [f.kind for f in plan.faults]
+    assert kinds == ["pod_slow", "pod_lost", "ckpt_io", "corrupt_leaf"]
+    slow = plan.faults[0]
+    assert (slow.step, slow.until, slow.pod) == (2, 4, 1)
+    assert plan.faults[2].count == 2
+    assert plan.faults[3].leaf == 5
+    assert bool(plan) and not bool(FaultPlan())
+    assert parse_fault_plan("").faults == ()
+
+
+def test_fault_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_fault_plan("meteor@3")              # unknown kind
+    with pytest.raises(ValueError):
+        parse_fault_plan("pod_slow@5-2")          # inverted window
+    with pytest.raises(ValueError):
+        parse_fault_plan("pod_slow@2:mass=1")     # unknown key
+
+
+def test_fault_plan_generate_deterministic():
+    a = FaultPlan.generate(seed=3, steps=20, num_pods=4)
+    b = FaultPlan.generate(seed=3, steps=20, num_pods=4)
+    assert a == b
+    assert a != FaultPlan.generate(seed=4, steps=20, num_pods=4)
+    for f in a.faults:                            # all in-range
+        assert 0 <= f.step < 20
+        assert 0 <= f.pod < 4
+
+
+def test_pods_down_windows_and_shrink():
+    plan = parse_fault_plan("pod_slow@2-4:pod=1;pod_lost@6:pod=2")
+    assert plan.pods_down(1, 4) == ()
+    assert plan.pods_down(2, 4) == (1,)
+    assert plan.pods_down(4, 4) == (1,)           # window inclusive
+    assert plan.pods_down(5, 4) == ()
+    assert plan.pods_down(7, 4) == (2,)           # lost = forever
+    assert plan.lost_pods(7, 4) == (2,)
+    assert plan.lost_pods(4, 4) == ()
+    # after an elastic shrink the surviving mesh has fewer pods: faults
+    # aimed at amputated pods must go inert, not crash or re-fire
+    assert plan.pods_down(7, 2) == ()
+
+
+def test_ckpt_attempt_hook_transient_and_corrupt_at():
+    plan = parse_fault_plan("ckpt_io@3:count=2;corrupt_leaf@5:leaf=1")
+    assert plan.ckpt_attempt_hook(2) is None
+    hook = plan.ckpt_attempt_hook(3)
+    with pytest.raises(OSError):
+        hook(0)
+    with pytest.raises(OSError):
+        hook(1)
+    hook(2)                                       # third attempt passes
+    assert plan.corrupt_at(5) == 1
+    assert plan.corrupt_at(4) is None
+
+
+# ---------------------------------------------------------------------------
+# watchdog + health ladder
+# ---------------------------------------------------------------------------
+
+def test_watchdog_mask_and_monotone_heartbeat():
+    w = Watchdog(num_pods=3, deadline_steps=1)
+    for p in range(3):
+        w.heartbeat(p, 0)
+    assert w.mask(0).tolist() == [1.0, 1.0, 1.0]
+    w.heartbeat(0, 2)
+    w.heartbeat(1, 2)
+    w.heartbeat(2, 0)                             # stale echo: no rewind
+    assert w.mask(2).tolist() == [1.0, 1.0, 0.0]
+    assert w.live(2) == (0, 1) and w.stale(2) == (2,)
+    w.heartbeat(2, 2)
+    assert w.mask(2).tolist() == [1.0, 1.0, 1.0]
+
+
+def test_health_ladder_degraded_then_restart():
+    events = []
+    h = HealthMonitor(num_pods=2, staleness_limit=2,
+                      log=lambda m: events.append(m))
+    ones, hole = np.ones(2, np.float32), np.array([1.0, 0.0], np.float32)
+    assert h.observe(0, ones) == HEALTHY
+    assert h.observe(1, hole) == DEGRADED          # streak 1
+    assert h.observe(2, hole) == DEGRADED          # streak 2 == K
+    assert h.observe(3, hole) == RESTART           # streak 3 > K
+    assert h.observe(4, ones) == RESTART           # terminal per attempt
+    assert h.restart_pods() == (1,)
+    assert any("HEALTHY -> DEGRADED" in m for m in events)
+    assert any("DEGRADED -> RESTART" in m for m in events)
+
+
+def test_health_recovers_and_no_degrade_mode():
+    h = HealthMonitor(num_pods=2, staleness_limit=2, log=lambda m: None)
+    hole = np.array([1.0, 0.0], np.float32)
+    assert h.observe(0, hole) == DEGRADED
+    assert h.observe(1, np.ones(2, np.float32)) == HEALTHY  # streak resets
+    # a strategy without a quorum mask cannot run degraded: any masked
+    # pod goes straight to RESTART
+    h2 = HealthMonitor(num_pods=2, staleness_limit=2, can_degrade=False,
+                       log=lambda m: None)
+    assert h2.observe(0, hole) == RESTART
+
+
+# ---------------------------------------------------------------------------
+# quorum collectives on a degenerate (single-pod) lane
+# ---------------------------------------------------------------------------
+
+def _lane_run(f, x):
+    mesh = jax.make_mesh((1,), ("pod",))
+    sm = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)
+    return np.asarray(jax.jit(sm)(x))
+
+
+def test_quorum_mean_and_stage_identity_and_zero_quorum():
+    x = jnp.arange(4, dtype=jnp.float32) + 1.0
+    one, zero = jnp.ones((), jnp.float32), jnp.zeros((), jnp.float32)
+    # full quorum on a 1-pod lane is the identity, bitwise
+    np.testing.assert_array_equal(
+        _lane_run(lambda v: quorum_mean(v, "pod", one), x), np.asarray(x))
+    np.testing.assert_array_equal(
+        _lane_run(lambda v: quorum_stage("pod", one)(v), x), np.asarray(x))
+    # zero quorum: contribution zeroed, divisor clamped to 1 (no NaN)
+    np.testing.assert_array_equal(
+        _lane_run(lambda v: quorum_mean(v, "pod", zero), x), np.zeros(4))
+    np.testing.assert_array_equal(
+        _lane_run(lambda v: quorum_stage("pod", zero)(v), x), np.zeros(4))
+
+
+def test_lane_quorum_full_mask_matches_lane_single_device():
+    from repro.comm import CommConfig, LaneComm
+    from repro.core import LaneTopology
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    comm = LaneComm(topo, CommConfig(strategy="lane_quorum"), mesh=mesh)
+    g = {"w": jnp.arange(6, dtype=jnp.float32), "b": jnp.ones((3,))}
+
+    def run(f):
+        sm = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                           check_vma=False)
+        return jax.jit(sm)(g)
+
+    got = run(lambda t: comm.grad_sync(t))
+    ref = run(lambda t: comm.grad_sync(t, strategy="lane"))
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(ref[k]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: crc32, verified fallback, .old swap, retry
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(4, 3),
+            "b": jnp.ones((2,), jnp.int32)}
+
+
+def _np_tree():
+    return {k: np.asarray(v) for k, v in _tree().items()}
+
+
+def test_crc_verify_detects_single_bit_rot(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    man = verify_checkpoint(ck, 2)
+    assert all("crc32" in l for l in man["leaves"])
+    corrupt_leaf_file(ck, 2, 0)
+    # the array still LOADS fine — only the checksum catches the rot
+    np.load(tmp_path / "step_2" / "arr_0.npy")
+    with pytest.raises(CheckpointCorruptError, match="crc32 mismatch"):
+        verify_checkpoint(ck, 2)
+
+
+def test_restore_falls_back_to_newest_verified(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    save_checkpoint(ck, 4, _tree())
+    corrupt_leaf_file(ck, 4, 1)
+    assert latest_step(ck) == 4
+    assert latest_verified_step(ck) == 2
+    _, step = restore_checkpoint(ck, _np_tree())
+    assert step == 2
+    # an EXPLICIT step never silently falls back
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(ck, _np_tree(), step=4)
+    # unverified escape hatch still reads the rotten bytes
+    _, step = restore_checkpoint(ck, _np_tree(), step=4, verify=False)
+    assert step == 4
+
+
+def test_restore_all_corrupt_raises_not_loops(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    corrupt_leaf_file(ck, 2, 0)
+    with pytest.raises(CheckpointCorruptError, match="no verifiable"):
+        restore_checkpoint(ck, _np_tree())
+
+
+def test_pre_crc_manifest_passes_vacuously(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    d = tmp_path / "step_2"
+    man = json.loads((d / "manifest.json").read_text())
+    for leaf in man["leaves"]:
+        del leaf["crc32"]                      # checkpoint from an old build
+    (d / "manifest.json").write_text(json.dumps(man))
+    verify_checkpoint(ck, 2)
+    _, step = restore_checkpoint(ck, _np_tree())
+    assert step == 2
+
+
+def test_scanner_ignores_stray_step_names(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    (tmp_path / "step_backup").mkdir()         # operator's manual copy
+    (tmp_path / "step_").mkdir()
+    (tmp_path / "step_9.tmp").mkdir()          # in-flight write
+    (tmp_path / "step_3").mkdir()              # dir without manifest
+    assert committed_steps(ck) == [2]
+    assert latest_step(ck) == 2
+
+
+def test_overwrite_swap_and_old_only_commit(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    save_checkpoint(ck, 2, _tree())            # overwrite via .old swap
+    assert committed_steps(ck) == [2]
+    assert not (tmp_path / "step_2.old").exists()   # dropped post-commit
+    # crash window: committed copy parked at .old, final half-written
+    (tmp_path / "step_2").rename(tmp_path / "step_2.old")
+    (tmp_path / "step_2").mkdir()
+    (tmp_path / "step_2" / "arr_0.npy").write_bytes(b"partial")
+    assert committed_steps(ck) == [2]          # lone .old counts
+    _, step = restore_checkpoint(ck, _np_tree())
+    assert step == 2
+    # keep_last_k prunes BOTH spellings
+    save_checkpoint(ck, 4, _tree())
+    keep_last_k(ck, 1)
+    assert committed_steps(ck) == [4]
+    assert not (tmp_path / "step_2.old").exists()
+
+
+def test_save_retries_transient_and_gives_up(tmp_path):
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise OSError("transient")
+
+    save_checkpoint(str(tmp_path), 2, _tree(), attempt_hook=flaky,
+                    backoff_s=0.001)
+    assert calls == [0, 1, 2]
+    verify_checkpoint(str(tmp_path), 2)
+
+    def always(attempt):
+        raise OSError("disk on fire")
+
+    with pytest.raises(OSError, match="disk on fire"):
+        save_checkpoint(str(tmp_path), 4, _tree(), attempt_hook=always,
+                        backoff_s=0.001)
+    assert latest_step(str(tmp_path)) == 2     # failed save commits nothing
+
+
+def test_corrupt_leaf_file_targets_one_leaf(tmp_path):
+    ck = str(tmp_path)
+    save_checkpoint(ck, 2, _tree())
+    corrupt_leaf_file(ck, 2, 1)
+    man = json.loads((tmp_path / "step_2" / "manifest.json").read_text())
+    from repro.checkpoint.store import _crc32
+    assert _crc32(np.load(tmp_path / "step_2" / "arr_0.npy")) == \
+        man["leaves"][0]["crc32"]
+    assert _crc32(np.load(tmp_path / "step_2" / "arr_1.npy")) != \
+        man["leaves"][1]["crc32"]
+
+
+# ---------------------------------------------------------------------------
+# microbatch replay: dropped rows are a pure function of (seed, step, range)
+# ---------------------------------------------------------------------------
+
+def test_batch_slice_replays_dropped_rows():
+    from repro.data.pipeline import make_loader
+    from repro.configs import resolve
+    cfg = resolve("llama3.2-3b", smoke=True)
+    ld = make_loader(cfg, seq_len=16, global_batch=8, seed=7)
+    toks, labs = ld.batch_at(step=3)
+    # pod 1 of 2 owns rows [4, 8): a replay from the SAME (seed, step)
+    # must regenerate exactly those rows — on any host
+    rt, rl = ld.batch_slice(3, 4, 4)
+    np.testing.assert_array_equal(toks[4:8], rt)
+    np.testing.assert_array_equal(labs[4:8], rl)
+    other = make_loader(cfg, seq_len=16, global_batch=8, seed=7,
+                        host_index=0, num_hosts=1)
+    np.testing.assert_array_equal(other.batch_slice(3, 4, 4)[0], rt)
+    # ...and different (seed, step) keys yield different rows
+    assert not np.array_equal(ld.batch_slice(3, 0, 4)[0], rt)
+    assert not np.array_equal(ld.batch_slice(4, 4, 4)[0], rt)
