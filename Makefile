@@ -34,12 +34,21 @@
 #                   so a strategy the driver can't actually serve fails
 #                   the build (the strategy list derives from the
 #                   registry; incl. auto and the ZeRO layouts)
+#   serve-smoke   — drives the SERVING TIER (repro.serve) end to end:
+#                   the registry-derived scenario generator through the
+#                   continuous batcher for a bucketed and an exact-
+#                   length-prefill family, then a training-driver
+#                   checkpoint restored into serving with zero3-hosted
+#                   tokens byte-identical to replicated (the full
+#                   hosting × family matrix runs in tier1 via
+#                   testing/serve_cases.py; this leg names a red
+#                   serving path even when tier1 dies earlier)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema \
-	train-smoke fault-smoke test
+	train-smoke fault-smoke serve-smoke test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -79,5 +88,9 @@ train-smoke:
 fault-smoke:
 	$(PY) -m repro.testing.run_driver_cases --match fault_
 
+# sets its own 8-device flag internally (before jax import)
+serve-smoke:
+	$(PY) -m repro.serve.serve_smoke
+
 ci: tier1 props-det api-surface bench-smoke bench-schema train-smoke \
-	fault-smoke
+	fault-smoke serve-smoke

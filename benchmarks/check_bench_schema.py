@@ -1,4 +1,5 @@
-"""Schema check for BENCH_gradsync.json and BENCH_recovery.json.
+"""Schema check for BENCH_gradsync.json, BENCH_recovery.json and
+BENCH_serve.json.
 
 The benchmarks are the perf trajectory future PRs regress against; a
 refactor that silently drops a strategy from the grid (or a field from
@@ -11,7 +12,7 @@ The recovery document (steps lost / time-to-recover / quorum overhead,
 benchmarks/recovery_bench.py) is pinned the same way.
 
   PYTHONPATH=src python -m benchmarks.check_bench_schema [--file F]
-      [--recovery-file R]
+      [--recovery-file R] [--serve-file S]
 
 Run after ``benchmarks.run --smoke`` (make ci does).
 """
@@ -36,6 +37,13 @@ FAMILY_ROW_KEYS = {"family", "arch", "layer_elems", "extra_elems",
 RECOVERY_TOP_KEYS = {"mesh", "smoke", "reps", "recovery",
                      "quorum_overhead", "ok"}
 
+SERVE_TOP_KEYS = {"mesh", "smoke", "max_seq", "families_registered",
+                  "scenarios", "results", "zero3_identity", "ok"}
+
+SERVE_ROW_KEYS = {"family", "arch", "scenario", "requests", "slots",
+                  "decode_tokens", "tok_s", "ttft_ms_p50", "ttft_ms_p99",
+                  "latency_ms_p50", "latency_ms_p99"}
+
 RECOVERY_KEYS = {"fault", "steps", "restart_step", "resume_step",
                  "steps_lost", "steps_replayed", "degraded_steps",
                  "clean_wall_s", "faulted_wall_s", "time_to_recover_s"}
@@ -58,8 +66,18 @@ def required_families() -> set:
     return set(block_stack_families())
 
 
+def required_serve_families() -> set:
+    """The serve_scenario registry IS the serving-family requirement —
+    importing repro.serve registers it (vlm/audio serve even though the
+    training driver cannot train them)."""
+    from repro.comm import strategies_for
+    import repro.serve  # noqa: F401 - registers serve_scenario cells
+    return set(strategies_for("serve_scenario"))
+
+
 REQUIRED_STRATEGIES = required_strategies()
 REQUIRED_FAMILIES = required_families()
+REQUIRED_SERVE_FAMILIES = required_serve_families()
 
 
 def check(doc: dict) -> list[str]:
@@ -128,6 +146,41 @@ def check_recovery(doc: dict) -> list[str]:
     return errs
 
 
+def check_serve(doc: dict) -> list[str]:
+    errs = []
+    missing = SERVE_TOP_KEYS - set(doc)
+    if missing:
+        errs.append(f"serve missing top-level keys: {sorted(missing)}")
+    rows = doc.get("results", [])
+    if not isinstance(rows, list) or not rows:
+        errs.append("serve results must be a non-empty list")
+        rows = []
+    for i, row in enumerate(rows):
+        mk = SERVE_ROW_KEYS - set(row)
+        if mk:
+            errs.append(f"serve results[{i}] missing {sorted(mk)}")
+    have = {r.get("family") for r in rows}
+    gone = REQUIRED_SERVE_FAMILIES - have
+    if gone:
+        errs.append(f"serve bench stopped emitting families: "
+                    f"{sorted(gone)} (serve_scenario registry requires "
+                    f"{sorted(REQUIRED_SERVE_FAMILIES)}, have "
+                    f"{sorted(have)})")
+    stale = set(doc.get("families_registered", [])) - \
+        REQUIRED_SERVE_FAMILIES
+    if stale:
+        errs.append(f"serve bench ran against a registry that no longer "
+                    f"matches: {sorted(stale)} (re-run "
+                    f"benchmarks.serve_bench --smoke)")
+    if not doc.get("zero3_identity", False):
+        errs.append("zero3_identity is false: zero3-hosted serving "
+                    "diverged from replicated tokens — see the benchmark "
+                    "output")
+    if not doc.get("ok", False):
+        errs.append("serve ok is false — see the benchmark output")
+    return errs
+
+
 def _load(path: pathlib.Path):
     if not path.exists():
         print(f"SCHEMA FAIL: {path} missing (run benchmarks.run --smoke "
@@ -144,6 +197,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--file", default="BENCH_gradsync.json")
     ap.add_argument("--recovery-file", default="BENCH_recovery.json")
+    ap.add_argument("--serve-file", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     doc = _load(pathlib.Path(args.file))
     if doc is None:
@@ -165,7 +219,18 @@ def main(argv=None) -> int:
         print(f"schema ok: {args.recovery_file} (steps_lost="
               f"{r['steps_lost']}, recover={r['time_to_recover_s']}s, "
               f"quorum +{rdoc['quorum_overhead']['overhead_pct']}%)")
-    return 1 if (errs or rerrs) else 0
+    sdoc = _load(pathlib.Path(args.serve_file))
+    if sdoc is None:
+        return 1
+    serrs = check_serve(sdoc)
+    for e in serrs:
+        print(f"SCHEMA FAIL: {e}")
+    if not serrs:
+        fams = {r["family"] for r in sdoc["results"]}
+        print(f"schema ok: {args.serve_file} "
+              f"({len(sdoc['results'])} rows, {len(fams)} families, "
+              f"zero3_identity={sdoc['zero3_identity']})")
+    return 1 if (errs or rerrs or serrs) else 0
 
 
 if __name__ == "__main__":

@@ -8,11 +8,13 @@ derived from the multi-pod dry-run artifacts.
 
   PYTHONPATH=src python -m benchmarks.run [--smoke] [--skip-tables]
       [--skip-roofline] [--skip-gradsync] [--skip-recovery]
+      [--skip-serve]
 
-``--smoke`` is the CI mode: it runs only the gradsync and recovery
-benchmarks, at a reduced payload, which still exercises lowering, the
-bucket schedule, the structural HLO verification, and the injected-fault
-recovery ladder end to end.
+``--smoke`` is the CI mode: it runs only the gradsync, recovery and
+serving benchmarks, at a reduced payload, which still exercises
+lowering, the bucket schedule, the structural HLO verification, the
+injected-fault recovery ladder and the continuous-batching serve loop
+(``BENCH_serve.json``) end to end.
 """
 import argparse
 import os
@@ -35,6 +37,7 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-gradsync", action="store_true")
     ap.add_argument("--skip-recovery", action="store_true")
+    ap.add_argument("--skip-serve", action="store_true")
     args = ap.parse_args(argv)
     rc = 0
 
@@ -59,6 +62,13 @@ def main(argv=None) -> int:
     if not args.skip_recovery:
         print("== recovery ladder (8-device CPU mesh, subprocess) ==")
         cmd = ["benchmarks.recovery_bench"]
+        if args.smoke:
+            cmd.append("--smoke")
+        rc |= _sub(cmd, env, root)
+
+    if not args.skip_serve:
+        print("== serving tier (8-device CPU mesh, subprocess) ==")
+        cmd = ["benchmarks.serve_bench"]
         if args.smoke:
             cmd.append("--smoke")
         rc |= _sub(cmd, env, root)

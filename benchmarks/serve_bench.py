@@ -1,0 +1,133 @@
+"""Serving benchmark: throughput + latency percentiles per family.
+
+Drives the REAL continuous-batching engine (repro.serve) over the
+registry-derived scenario generator on the 8-device CPU mesh and writes
+``BENCH_serve.json`` — the serving-side perf trajectory future PRs
+regress against (schema pinned by ``benchmarks/check_bench_schema.py``):
+
+  * one row per (family × scenario kind): decode tok/s, time-to-first-
+    token p50/p99 and request latency p50/p99, over the engine's own
+    per-request records;
+  * ``zero3_identity``: the headline correctness bit — zero3-hosted
+    serving (1/p gathered weights, sharded slots, kv_splice
+    distribution) produced byte-identical tokens to replicated hosting
+    on the same scenario.
+
+The family list is DERIVED from the serve_scenario registry: a family
+that silently loses its serving registration fails the schema check,
+not just this bench.  CPU caveat as everywhere in benchmarks/: wall
+times validate relative behavior, not datacenter physics.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out F]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+import jax
+
+MAX_SEQ = 96
+
+
+def _pct(vals, q):
+    vals = [v for v in vals if v is not None]
+    return round(float(np.percentile(vals, q)), 3) if vals else None
+
+
+def _bench_family(family, arch, kinds, n, slots):
+    from repro.configs import resolve
+    from repro.models import init_model
+    from repro.serve import ContinuousBatcher, make_scenario
+    cfg = resolve(arch, smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for kind in kinds:
+        reqs = make_scenario(cfg, kind=kind, n=n, seed=17,
+                             max_seq=MAX_SEQ)
+        eng = ContinuousBatcher(params, cfg, slots=slots,
+                                max_seq=MAX_SEQ)
+        done, stats = eng.run(reqs)
+        recs = stats["requests"]
+        assert all(r.done for r in done), (family, kind)
+        rows.append({
+            "family": family, "arch": arch, "scenario": kind,
+            "requests": len(done), "slots": slots,
+            "decode_tokens": stats["decode_tokens"],
+            "tok_s": round(stats["tok_per_s"], 2),
+            "ttft_ms_p50": _pct([r["ttft_ms"] for r in recs], 50),
+            "ttft_ms_p99": _pct([r["ttft_ms"] for r in recs], 99),
+            "latency_ms_p50": _pct([r["latency_ms"] for r in recs], 50),
+            "latency_ms_p99": _pct([r["latency_ms"] for r in recs], 99),
+        })
+        print(f"{family:8s} {kind:13s} {rows[-1]['tok_s']:8.2f} tok/s  "
+              f"ttft p50 {rows[-1]['ttft_ms_p50']} ms  "
+              f"latency p99 {rows[-1]['latency_ms_p99']} ms")
+    return rows
+
+
+def _zero3_identity(arch, n):
+    """zero3-hosted tokens == replicated tokens on the same scenario."""
+    from repro.configs import resolve
+    from repro.models import init_model
+    from repro.serve import ContinuousBatcher, make_scenario
+    cfg = resolve(arch, smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(2, 2, 2),
+                             ("pod", "data", "model"))
+    outs = []
+    for hosting, kw in (("replicated", {}),
+                        ("lane_zero3", {"mesh": mesh})):
+        eng = ContinuousBatcher(params, cfg, slots=8, max_seq=MAX_SEQ,
+                                hosting=hosting, **kw)
+        done, _ = eng.run(make_scenario(cfg, kind="short_chat", n=n,
+                                        seed=17, max_seq=MAX_SEQ))
+        outs.append({r.rid: r.out for r in done})
+    return outs[0] == outs[1]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one scenario kind per family")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    from repro.serve import SCENARIO_KINDS, scenario_families
+    from repro.models.blockstack import family_smoke_archs
+    archs = family_smoke_archs()
+    families = scenario_families()
+    kinds = ("short_chat",) if args.smoke else SCENARIO_KINDS
+    n = 5 if args.smoke else 12
+    slots = 4
+
+    results = []
+    for family in sorted(families):
+        results.extend(_bench_family(family, archs[family], kinds, n,
+                                     slots))
+    ident = _zero3_identity(archs["dense"], n)
+    print(f"zero3_identity: {ident}")
+
+    doc = {
+        "mesh": "host8(2,2,2)",
+        "smoke": bool(args.smoke),
+        "max_seq": MAX_SEQ,
+        "families_registered": sorted(families),
+        "scenarios": list(kinds),
+        "results": results,
+        "zero3_identity": bool(ident),
+        "ok": bool(ident) and all(r["decode_tokens"] > 0
+                                  for r in results),
+    }
+    pathlib.Path(args.out).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {args.out} ({len(results)} rows)")
+    return 0 if doc["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

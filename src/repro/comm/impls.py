@@ -399,3 +399,61 @@ def _prefetch_blocking(comm, shard, *, num_blocks=None):
     and the negative control of the prefetch-overlap HLO proof."""
     B = _resolve_blocks(comm, shard.shape[0], num_blocks)
     return zero3_unshard(shard, comm.topo, B)
+
+
+# ---------------------------------------------------------------------------
+# kv_splice — the serving-side KV/state distribution collective
+# ---------------------------------------------------------------------------
+#
+# Continuous batching with slots sharded over the mesh needs exactly one
+# communication primitive: after a batch-1 prefill (computed replicated —
+# every chip runs it, the root's copy is canonical), the fresh cache leaf
+# must land in slot `slot` of the batch-sharded cache, which lives on
+# exactly one chip.  That is a rooted broadcast of the leaf followed by a
+# purely local splice — the paper's decomposed bcast applied to the KV
+# payload.  Slot ownership follows the same global-rank block order as
+# `scatter`: chip r owns slots [r·B_local, (r+1)·B_local).
+
+def _splice_local(comm, big, small, slot, batch_axis: int):
+    """Local half of kv_splice: write `small` (batch-1 along batch_axis)
+    into global slot `slot` of this chip's local slot-shard `big`, or
+    leave `big` untouched when the slot lives on another chip.  `slot`
+    may be traced (the engine jits the splice per slot array)."""
+    B_local = big.shape[batch_axis]
+    local = jnp.asarray(slot, jnp.int32) - comm.topo.global_rank() * B_local
+    inb = jnp.logical_and(local >= 0, local < B_local)
+    upd = lax.dynamic_update_slice_in_dim(
+        big, small.astype(big.dtype), jnp.clip(local, 0, B_local - 1),
+        axis=batch_axis)
+    return jnp.where(inb, upd, big)
+
+
+@register_impl("kv_splice", "native", auto_ok=False)
+def _kv_splice_native(comm, big, *, small, slot, batch_axis=1,
+                      root_lane=0, root_node=0):
+    """One-shot baseline: mask-to-root psum of the whole leaf (the same
+    SPMD emulation `bcast/native` charges), then the local splice."""
+    topo = comm.topo
+    mask = _is_root(topo, root_lane, root_node)
+    small = lax.psum(jnp.where(mask, small, jnp.zeros_like(small)),
+                     _axes(topo))
+    return _splice_local(comm, big, small, slot, batch_axis)
+
+
+@register_impl("kv_splice", "lane", auto_ok=False)
+def _kv_splice_lane(comm, big, *, small, slot, batch_axis=1,
+                    root_lane=0, root_node=0):
+    """Decomposed variant: the leaf is flattened, zero-padded to a
+    multiple of n, and broadcast through the §3 lane bcast (scatter on
+    the root's lane + allgather per lane + bcast down the nodes), then
+    spliced locally — multi-lane bandwidth on the KV distribution hop."""
+    topo = comm.topo
+    n = topo.n()
+    flat = small.reshape(-1)
+    pad = (-flat.shape[0]) % max(n, 1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    out = C.bcast_lane(flat, topo, root_lane=root_lane,
+                       root_node=root_node, root_replicated=True)
+    small = out[:small.size].reshape(small.shape)
+    return _splice_local(comm, big, small, slot, batch_axis)

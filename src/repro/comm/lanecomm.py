@@ -228,3 +228,18 @@ class LaneComm:
         """
         return self._dispatch("prefetch_allgather", shard, strategy,
                               num_blocks=num_blocks)
+
+    # -- composite serving collective ------------------------------------
+    def kv_splice(self, big, *, small, slot, batch_axis: int = 1,
+                  strategy: Optional[str] = None, **kw):
+        """Write a batch-1 cache leaf (valid on the root chip, masked-root
+        convention) into global slot ``slot`` of the slot-sharded leaf
+        ``big``: a rooted bcast of the leaf + a purely local splice — the
+        serving-side KV distribution primitive.  ``"lane"`` broadcasts
+        through the §3 decomposed lane bcast; ``"native"`` is the
+        one-shot psum baseline.  Never auto-selected (the result layout
+        depends on slot ownership, not payload cost).
+        """
+        return self._dispatch("kv_splice", big, strategy or "lane",
+                              small=small, slot=slot,
+                              batch_axis=batch_axis, **kw)

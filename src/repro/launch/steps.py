@@ -971,6 +971,19 @@ def _restore_lane_state_at(ckpt_dir: str, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 # serving steps
 # ---------------------------------------------------------------------------
+# The serving RUNTIME lives in repro.serve.steps: hosting flavors are
+# ("serve_step", strategy) registry cells exactly like the train-step
+# table above, resolved through build_serve_step.  The two factories
+# below are the unjitted lowering shims the dryrun HLO accountant uses
+# (it applies its own shardings/donation and passes an external cache);
+# they must stay semantically identical to the registry's "replicated"
+# cell, which wraps the same model calls behind its own jit.
+
+def build_serve_step(cfg: ModelConfig, **kw):
+    """Registry-resolved serving step (see repro.serve.steps)."""
+    from repro.serve.steps import build_serve_step as _build
+    return _build(cfg, **kw)
+
 
 def build_prefill_step(cfg: ModelConfig):
     def step(params, tokens, cache, extra=None):

@@ -56,7 +56,8 @@ from repro.comm.registry import get_impl, has_impl, register_impl, \
 from repro.core.costmodel import optimal_prefetch_blocks
 
 __all__ = [
-    "ShardedStack", "ShardedBlocks", "scan_stack", "StackLayout",
+    "ShardedStack", "ShardedBlocks", "scan_stack", "scan_stack_cached",
+    "StackLayout",
     "stack_layout", "shard_stack", "resolve_prefetch_blocks", "BlockSpec",
     "register_block_stack", "block_stack_spec", "block_stack_families",
     "family_smoke_archs", "split_params",
@@ -182,6 +183,50 @@ def scan_stack(stack: ShardedStack, h, body):
     h, a_last = body(h, w_last, idxs[-1])   # layer L-1: already gathered
     return h, jnp.concatenate([jnp.atleast_1d(aux_ys),
                                jnp.asarray(a_last)[None]])
+
+
+def scan_stack_cached(stack: ShardedStack, h, xs, body):
+    """The serving-side layer scan: :func:`scan_stack` with per-layer
+    scanned INPUTS and stacked OUTPUTS (the KV/SSM cache rows).
+
+    ``body(h, layer_params, xs_row) -> (h', ys_row)`` where ``xs`` and
+    the returned ``ys`` are pytrees whose every leaf has a leading
+    stack dim L (``xs_row``/``ys_row`` are single rows of them) — the
+    cached prefill/decode bodies thread (cache_in -> cache_out), and the
+    audio prefill additionally emits the per-layer cross-attention K/V.
+    No aux scalars, no layer index, no regather (inference has no
+    backward): just the same one-layer prefetch structure — layer i+1's
+    all-gather issued alongside layer i's compute, layer L-1 outside the
+    loop so exactly L gathers run.  Returns ``(h, ys)``.
+    """
+    shards, gather = stack.shards, stack.gather
+    L = shards.shape[0]
+
+    if not stack.prefetch:
+        def step_blocking(hh, sx):
+            srow, xrow = sx
+            return body(hh, gather(srow), xrow)
+        return lax.scan(step_blocking, h, (shards, xs))
+
+    row = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    w0 = gather(shards[0])                  # layer 0: unavoidably blocking
+    if L == 1:
+        h, y = body(h, w0, row(xs, 0))
+        return h, jax.tree.map(lambda a: a[None], y)
+
+    def step(carry, sx):
+        hh, w = carry
+        s_next, xrow = sx
+        w_next = gather(s_next)             # prefetch layer i+1 (no dep on w)
+        hh, y = body(hh, w, xrow)           # compute layer i
+        return (hh, w_next), y
+
+    xs_head = jax.tree.map(lambda a: a[:-1], xs)
+    (h, w_last), ys = lax.scan(step, (h, w0), (shards[1:], xs_head))
+    h, y_last = body(h, w_last, row(xs, L - 1))  # layer L-1: gathered
+    ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                      ys, y_last)
+    return h, ys
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,8 @@ from . import attention as A
 from . import ssm as S
 from . import moe as M
 from .blockstack import (BlockSpec, ShardedBlocks, ShardedStack,
-                         block_stack_spec, register_block_stack, scan_stack)
+                         block_stack_spec, register_block_stack, scan_stack,
+                         scan_stack_cached)
 
 # activation-sharding hints live in layers.py (shared with moe/ssm);
 # re-exported here for the launch layer.
@@ -544,19 +545,79 @@ def _scan_enc_kv(params, cfg, enc_out):
     return kv
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache, *, extra_embeds=None):
-    """Run the prompt; fill caches.  Returns (logits_last, state)."""
+def _select_row(h, pos):
+    """(B, T, d) -> (B, 1, d): row ``pos[b]`` of each batch element, with a
+    traced per-row ``pos``, via one-hot select (no gather — GSPMD-safe on
+    a sharded T dim; exact, since exactly one position is hot)."""
+    hot = (jnp.arange(h.shape[1])[None, :] == pos[:, None])
+    return jnp.sum(jnp.where(hot[..., None], h, jnp.zeros((), h.dtype)),
+                   axis=1, keepdims=True).astype(h.dtype)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, extra_embeds=None,
+            true_len=None):
+    """Run the prompt; fill caches.  Returns (logits_last, state).
+
+    ``true_len`` (scalar or (B,) int) marks the valid prompt length when
+    ``tokens`` is right-padded to a bucket: the returned logits are taken
+    at the LAST TRUE position (``prefix + true_len - 1``, prefix = the
+    vlm vision tokens) instead of the bucket's last position — the seed
+    engine conditioned the first generated token on trailing pad — and
+    ``state.length`` is ``prefix + true_len``, so decode overwrites the
+    pad region progressively and attention never reads past it.  Only
+    meaningful for attention caches; the recurrent families (ssm/hybrid)
+    fold every consumed token into their state, so their callers must
+    prefill at the exact prompt length (the engine does).
+
+    ``params["blocks"]`` may be a :class:`ShardedStack` (zero3 hosting):
+    the cached layer scan then runs through ``scan_stack_cached`` with the
+    same one-layer prefetch as training, and the audio cross K/V are
+    computed inside the body (the encoder output is replicated; the
+    per-layer projections live in the sharded stack).
+    """
+    sharded = isinstance(params.get("blocks"), ShardedStack)
     enc_kv = None
+    enc_out = None
     if cfg.family == "audio":
         enc_out = _encoder_forward(params, cfg, extra_embeds)
-        enc_kv = _scan_enc_kv(params, cfg, enc_out)
+        if not sharded:
+            enc_kv = _scan_enc_kv(params, cfg, enc_out)
         h = L.embed(params["embed"], tokens)
     else:
         h = _embed_inputs(params, cfg, tokens, extra_embeds)
     Bz, T, _ = h.shape
     length0 = jnp.zeros((Bz,), jnp.int32)
 
-    if cfg.family in _SCANNED_FAMILIES:
+    if sharded:
+        if cfg.family == "audio":
+            def body(h, lp, lc):
+                k, v = _cross_kv(lp["xattn"], enc_out, cfg)
+                ekv = {"k": k, "v": v}
+                h, newc = _attn_cached(lp, h, cfg, lc, length0,
+                                       prefill=True, enc_kv=ekv)
+                return h, (newc, ekv)
+            h, (newcache, enc_kv) = scan_stack_cached(
+                params["blocks"], h, cache, body)
+        elif cfg.family in _SCANNED_FAMILIES:
+            def body(h, lp, lc):
+                h, newc = _attn_cached(lp, h, cfg, lc, length0,
+                                       prefill=True)
+                return h, newc
+            h, newcache = scan_stack_cached(params["blocks"], h, cache,
+                                            body)
+        elif cfg.family == "ssm":
+            def body(h, lp, lc):
+                hn = _norm(cfg, lp["ln1"], h)
+                out, st = S.mamba2_block(lp["mamba"], hn, cfg, state=lc)
+                return h + out, st
+            h, newcache = scan_stack_cached(params["blocks"], h, cache,
+                                            body)
+        else:
+            raise ValueError(
+                f"family {cfg.family!r} cannot serve from a ShardedStack "
+                f"(the hybrid grouped attention cache does not fit the "
+                f"flat layer scan); host it replicated")
+    elif cfg.family in _SCANNED_FAMILIES:
         xs = (params["blocks"], cache) if enc_kv is None else \
              (params["blocks"], cache, enc_kv)
 
@@ -582,19 +643,54 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, extra_embeds=None):
         raise ValueError(cfg.family)
 
     h = _norm(cfg, params["final_norm"], h)
-    logits = L.unembed(params["embed"], h[:, -1:])
-    state = ServeState(cache=newcache,
-                       length=jnp.full((Bz,), T, jnp.int32),
-                       enc_kv=enc_kv)
+    prefix = T - tokens.shape[1]            # vlm vision tokens, else 0
+    if true_len is None:
+        h_last = h[:, -1:]
+        length = jnp.full((Bz,), T, jnp.int32)
+    else:
+        tl = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32), (Bz,))
+        h_last = _select_row(h, prefix + tl - 1)
+        length = prefix + tl
+    logits = L.unembed(params["embed"], h_last)
+    state = ServeState(cache=newcache, length=length, enc_kv=enc_kv)
     return logits, state
 
 
 def decode_step(params, cfg: ModelConfig, token, state: ServeState):
-    """One token for every sequence.  token: (B, 1) int32."""
+    """One token for every sequence.  token: (B, 1) int32.
+
+    Like :func:`prefill`, ``params["blocks"]`` may be a
+    :class:`ShardedStack`: layer i+1's 1/p weight gather is issued
+    alongside layer i's cached attention (``scan_stack_cached``) — the
+    decode-side incarnation of the §5 prefetch pipeline.
+    """
     h = L.embed(params["embed"], token)
     length = state.length
 
-    if cfg.family in _SCANNED_FAMILIES:
+    if isinstance(params.get("blocks"), ShardedStack):
+        if cfg.family in _SCANNED_FAMILIES:
+            xs = state.cache if state.enc_kv is None else \
+                (state.cache, state.enc_kv)
+
+            def body(h, lp, xrow):
+                lc, ekv = (xrow, None) if state.enc_kv is None else xrow
+                h, newc = _attn_cached(lp, h, cfg, lc, length,
+                                       prefill=False, enc_kv=ekv)
+                return h, newc
+            h, newcache = scan_stack_cached(params["blocks"], h, xs, body)
+        elif cfg.family == "ssm":
+            def body(h, lp, lc):
+                hn = _norm(cfg, lp["ln1"], h)
+                out, st = S.mamba2_block(lp["mamba"], hn, cfg, state=lc)
+                return h + out, st
+            h, newcache = scan_stack_cached(params["blocks"], h,
+                                            state.cache, body)
+        else:
+            raise ValueError(
+                f"family {cfg.family!r} cannot serve from a ShardedStack "
+                f"(the hybrid grouped attention cache does not fit the "
+                f"flat layer scan); host it replicated")
+    elif cfg.family in _SCANNED_FAMILIES:
         xs = (params["blocks"], state.cache) if state.enc_kv is None else \
              (params["blocks"], state.cache, state.enc_kv)
 

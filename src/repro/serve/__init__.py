@@ -1,1 +1,22 @@
-from .engine import ContinuousBatcher, Request
+"""Multi-lane serving tier: registry-resolved steps + continuous batching.
+
+Import order matters only for registration: importing the subpackage
+registers the ``serve_step`` hostings (steps), the ``serve_scenario``
+generators (scenarios) and the ``kv_splice`` collective cells
+(repro.comm.impls, pulled in transitively).
+"""
+from .engine import (ContinuousBatcher, Request, termination_reason,
+                     DEFAULT_BUCKETS)
+from .sampling import SamplerConfig, request_key, sample_token, \
+    top_p_renormalize
+from .steps import (ServeContext, ServeStep, build_serve_step,
+                    load_serve_params, serve_hostings)
+from .scenarios import make_scenario, scenario_families, SCENARIO_KINDS
+
+__all__ = [
+    "ContinuousBatcher", "Request", "termination_reason", "DEFAULT_BUCKETS",
+    "SamplerConfig", "request_key", "sample_token", "top_p_renormalize",
+    "ServeContext", "ServeStep", "build_serve_step", "serve_hostings",
+    "load_serve_params",
+    "make_scenario", "scenario_families", "SCENARIO_KINDS",
+]

@@ -1,0 +1,93 @@
+"""Seeded sampling for the serving tier: replayable by construction.
+
+Every sampled token is a PURE function of ``(seed, rid, position)`` —
+the PRNG key is ``fold_in(fold_in(PRNGKey(seed), rid), position)``, so a
+request's token stream is independent of how it was batched, which slot
+it landed in, which other requests shared the engine, or how many times
+the stream is replayed.  That invariance is what the batched-vs-
+sequential equivalence tier pins (tests/test_serve.py): greedy AND
+sampled serving must be token-identical to decoding each request alone.
+
+The categorical draw is Gumbel-argmax over the (temperature-scaled,
+top-p-renormalized) distribution: ``argmax(log p + g)`` with iid Gumbel
+``g`` never selects a token with ``p == 0``, so the nucleus property is
+structural, not numeric.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplerConfig", "top_p_renormalize", "sample_token",
+           "request_key"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Sampling hyperparameters + the replay seed.
+
+    temperature <= 0 is exact greedy (argmax — no RNG consumed, so a
+    greedy stream is trivially replayable too); top_p = 1.0 disables the
+    nucleus filter.
+    """
+    temperature: float = 1.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplerConfig(temperature=0.0)
+
+
+def request_key(seed: int, rid, position):
+    """The (seed, rid, position) key contract — one key per sampled
+    token, independent of batching/slot assignment."""
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, jnp.asarray(rid, jnp.uint32))
+    return jax.random.fold_in(key, jnp.asarray(position, jnp.uint32))
+
+
+def top_p_renormalize(probs, top_p: float):
+    """Nucleus filter: keep the smallest prefix of descending-probability
+    tokens whose mass reaches ``top_p``, zero the rest, renormalize.
+
+    The keep rule is exclusive-cumsum < top_p, so the top-1 token is
+    always kept (its exclusive cumsum is 0) and the kept mass is the
+    minimal prefix covering ``top_p``.  Returns a distribution that sums
+    to 1 with exact zeros outside the nucleus (the properties
+    tests/test_serve.py pins).
+    """
+    probs = jnp.asarray(probs, jnp.float32)
+    order = jnp.argsort(-probs, axis=-1)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    exclusive = jnp.cumsum(sorted_p, axis=-1) - sorted_p
+    kept = jnp.where(exclusive < top_p, sorted_p, 0.0)
+    kept = kept / jnp.sum(kept, axis=-1, keepdims=True)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(kept, inv, axis=-1)
+
+
+def sample_token(logits, sampler: SamplerConfig, rid, position):
+    """One token id from one unnormalized logits row (V,).
+
+    Greedy (temperature <= 0): exact argmax.  Otherwise: softmax at
+    ``temperature``, nucleus-filter at ``top_p``, and a Gumbel-argmax
+    categorical draw keyed by (seed, rid, position) — tokens outside the
+    nucleus have log-prob -inf and can never win the argmax.
+    """
+    logits = jnp.asarray(logits, jnp.float32)
+    if sampler is None or sampler.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = jax.nn.softmax(logits / sampler.temperature, axis=-1)
+    if sampler.top_p < 1.0:
+        probs = top_p_renormalize(probs, sampler.top_p)
+    logp = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)),
+                     -jnp.inf)
+    g = jax.random.gumbel(request_key(sampler.seed, rid, position),
+                          logits.shape)
+    return jnp.argmax(logp + g, axis=-1).astype(jnp.int32)

@@ -491,6 +491,83 @@ _register("pipelined_allreduce_shim_bitident__t2",
           _pipelined_allreduce_shim_bitident)
 
 
+# ---------------------------------------------------------------------------
+# kv_splice — the serving-side KV distribution collective: a rooted
+# bcast of a batch-1 cache leaf + a local splice into the slot-sharded
+# buffer.  Data moves but is never combined, so the check is EXACT.
+# ---------------------------------------------------------------------------
+
+def _b_kv_splice(strategy, topo_key, slot, seed=97):
+    mesh, topo = _make(topo_key)
+    comm = LaneComm(topo, mesh=mesh)
+    n, N = topo.sizes(mesh)
+    p = n * N
+    B_local, L, S = 2, 3, 5
+    rng = np.random.default_rng(seed)
+    big = rng.normal(size=(L, p * B_local, S)).astype(np.float32)
+    # per-rank distinct smalls: only the ROOT's copy may land in the slot
+    smalls = rng.normal(size=(p, L, 1, S)).astype(np.float32)
+    smalls = _replicate_root_node(smalls, 0, n)   # lane-bcast convention
+    want = big.copy()
+    want[:, slot] = smalls[0, :, 0]
+    bspec = P(None, (topo.lane_axis, *topo.node_axes), None)
+    sspec = P((topo.lane_axis, *topo.node_axes), None, None, None)
+
+    def fn(b, s):
+        return comm.kv_splice(b, small=s[0], slot=jnp.int32(slot),
+                              batch_axis=1, strategy=strategy)
+
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=(bspec, sspec),
+                       out_specs=bspec, check_vma=False)
+    nb = jax.device_put(jnp.asarray(big),
+                        jax.sharding.NamedSharding(mesh, bspec))
+    ns = jax.device_put(jnp.asarray(smalls),
+                        jax.sharding.NamedSharding(mesh, sspec))
+    out = np.asarray(jax.jit(sm)(nb, ns))
+    np.testing.assert_array_equal(out, want)
+
+
+for _strat in ("native", "lane"):
+    for _tk in ("t3", "n1", "N1"):
+        # first slot, a mid-mesh slot, and the last slot (ownership
+        # crosses lane boundaries on every topology)
+        for _slot in (0, 9, 15):
+            _register(
+                f"kv_splice_{_strat}__{_tk}__slot{_slot}",
+                lambda st=_strat, tk=_tk, sl=_slot: _b_kv_splice(st, tk, sl))
+
+
+def _serve_step_resolves_decomposed_cells():
+    """The zero3 serving step must resolve the PAPER's decomposed cells:
+    weights through ("prefetch_allgather", "lane_pipelined") (blocking
+    only as the -1 negative control) and KV distribution through
+    ("kv_splice", "lane") — and every named cell must exist in the
+    registry."""
+    from repro.comm import has_impl
+    from repro.configs import resolve
+    from repro.serve import build_serve_step
+    mesh, topo = _make("t3")
+    cfg = resolve("llama3.2-3b", smoke=True)
+    step = build_serve_step(cfg, max_seq=64, slots=8,
+                            hosting="lane_zero3", mesh=mesh)
+    assert step.collectives == {
+        "weights": ("prefetch_allgather", "lane_pipelined"),
+        "kv": ("kv_splice", "lane")}, step.collectives
+    for coll, strat in step.collectives.values():
+        assert has_impl(coll, strat), (coll, strat)
+    blocking = build_serve_step(cfg, max_seq=64, slots=8,
+                                hosting="lane_zero3", mesh=mesh,
+                                prefetch_blocks=-1)
+    assert blocking.collectives["weights"] == \
+        ("prefetch_allgather", "blocking"), blocking.collectives
+    replicated = build_serve_step(cfg, max_seq=64, slots=8)
+    assert replicated.collectives == {}, replicated.collectives
+
+
+_register("serve_step_resolves_decomposed_cells__t3",
+          _serve_step_resolves_decomposed_cells)
+
+
 def main(argv):
     names = argv or sorted(CASES)
     fails = 0

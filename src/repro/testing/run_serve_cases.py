@@ -1,0 +1,16 @@
+"""Subprocess entry point for the multi-host serving cases.
+
+Sets the host-device-count flag BEFORE any jax import, then delegates to
+repro.testing.serve_cases.main.  Never import this from pytest.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+from repro.testing.serve_cases import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

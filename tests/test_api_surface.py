@@ -68,6 +68,9 @@ EXPECTED_LANECOMM_METHODS = {
     "prefetch_allgather":
         "(self, shard, *, strategy: 'Optional[str]' = None, num_blocks: "
         "'Optional[int]' = None)",
+    "kv_splice":
+        "(self, big, *, small, slot, batch_axis: 'int' = 1, strategy: "
+        "'Optional[str]' = None, **kw)",
     "param_layout": "(self, strategy: 'Optional[str]' = None) -> 'str'",
 }
 
@@ -86,6 +89,7 @@ EXPECTED_STRATEGIES = {
     "grad_sync": ("native", "lane", "lane_pipelined", "lane_quorum",
                   "lane_int8", "lane_zero1", "lane_zero3"),
     "prefetch_allgather": ("lane_pipelined", "blocking"),
+    "kv_splice": ("native", "lane"),
 }
 
 
@@ -111,6 +115,7 @@ def test_lanecomm_method_surface_locked():
 def test_registered_strategy_tables_locked():
     import repro.launch.steps  # noqa: F401 - registers train_step flavors
     import repro.models.transformer  # noqa: F401 - registers block_stack
+    import repro.serve  # noqa: F401 - registers serve_step/serve_scenario
     for coll, strategies in EXPECTED_STRATEGIES.items():
         assert comm.strategies_for(coll) == strategies, coll
     assert comm.strategies_for("train_step") == (
@@ -121,8 +126,15 @@ def test_registered_strategy_tables_locked():
     # enumerate this table (models/blockstack.py)
     assert set(comm.strategies_for("block_stack")) == \
         {"dense", "vlm", "audio", "moe", "ssm", "hybrid"}
+    # serving is a registry consumer with its own two tables: the
+    # hosting flavors (serve/steps.py) and the family scenario
+    # generators the benches/smoke enumerate (serve/scenarios.py)
+    assert comm.strategies_for("serve_step") == ("replicated", "lane_zero3")
+    assert set(comm.strategies_for("serve_scenario")) == \
+        {"dense", "vlm", "audio", "moe", "ssm", "hybrid"}
     assert set(comm.registered_collectives()) == \
-        set(EXPECTED_STRATEGIES) | {"train_step", "block_stack"}
+        set(EXPECTED_STRATEGIES) | {"train_step", "block_stack",
+                                    "serve_step", "serve_scenario"}
 
 
 def test_param_layout_table_locked():
