@@ -12,6 +12,16 @@
 #   api-surface   — the repro.comm public-surface lock (names, signatures,
 #                   registered strategy tables) re-run on its own so a
 #                   surface break is named even when tier1 dies earlier
+#   tune-smoke    — the measured-cost tuning loop (repro.tuning) end to
+#                   end on the host-platform 2×4 mesh: probe the
+#                   registered (collective, strategy) cells at the
+#                   reduced ladder, commit tuning_cache.json (verified
+#                   bit-identical through a save→load→save round-trip),
+#                   fit HW constants, and write the decomposed-vs-native
+#                   guideline report (BENCH_tuning.json) — fails on a
+#                   guideline violation above tolerance; bench-smoke
+#                   then feeds the committed cache to gradsync_bench so
+#                   the auto row dispatches on measured costs
 #   bench-smoke   — lowers the gradient-sync strategies and structurally
 #                   verifies the §5 lane/node overlap on the optimized HLO
 #                   (writes BENCH_gradsync.json), then drives the
@@ -47,8 +57,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci tier1 props-det api-surface bench-smoke bench bench-schema \
-	train-smoke fault-smoke serve-smoke test
+.PHONY: ci tier1 props-det api-surface tune-smoke bench-smoke bench \
+	bench-schema train-smoke fault-smoke serve-smoke test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -71,6 +81,17 @@ props-det:
 api-surface:
 	$(PY) -m pytest -q tests/test_api_surface.py
 
+# sets its own 8-device flag internally (before jax import); the schema
+# of the emitted BENCH_tuning.json is validated in the same leg
+tune-smoke:
+	$(PY) -m repro.tuning.tune_smoke
+	$(PY) -c "import json, sys; \
+		from benchmarks.check_bench_schema import check_tuning; \
+		errs = check_tuning(json.load(open('BENCH_tuning.json'))); \
+		[print('SCHEMA FAIL:', e) for e in errs]; \
+		print('schema ok: BENCH_tuning.json' if not errs else ''); \
+		sys.exit(1 if errs else 0)"
+
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 
@@ -92,5 +113,5 @@ fault-smoke:
 serve-smoke:
 	$(PY) -m repro.serve.serve_smoke
 
-ci: tier1 props-det api-surface bench-smoke bench-schema train-smoke \
-	fault-smoke serve-smoke
+ci: tier1 props-det api-surface tune-smoke bench-smoke bench-schema \
+	train-smoke fault-smoke serve-smoke

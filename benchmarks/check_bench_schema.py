@@ -1,5 +1,5 @@
-"""Schema check for BENCH_gradsync.json, BENCH_recovery.json and
-BENCH_serve.json.
+"""Schema check for BENCH_gradsync.json, BENCH_recovery.json,
+BENCH_serve.json and BENCH_tuning.json.
 
 The benchmarks are the perf trajectory future PRs regress against; a
 refactor that silently drops a strategy from the grid (or a field from
@@ -22,13 +22,23 @@ import pathlib
 import sys
 
 TOP_KEYS = {"mesh", "payload_elems", "payload_bytes", "auto_num_buckets",
-            "strategies_registered", "cost_model", "smoke", "reps",
-            "results", "family_results", "families_registered",
-            "hlo_per_computation", "structure_ok"}
+            "strategies_registered", "tuning_cache", "cost_model",
+            "smoke", "reps", "results", "family_results",
+            "families_registered", "hlo_per_computation", "structure_ok"}
 
 ROW_KEYS = {"strategy", "selected", "num_buckets", "avg_us", "min_us",
-            "max_abs_err_vs_native", "model_pred_us", "hlo_concurrent",
-            "hlo_concurrent_pairs"}
+            "max_abs_err_vs_native", "model_pred_us", "predicted_us",
+            "hlo_concurrent", "hlo_concurrent_pairs"}
+
+TUNING_TOP_KEYS = {"topology", "tolerance", "measured_cells", "cells",
+                   "violations", "fit", "ok"}
+
+TUNING_CELL_KEYS = {"collective", "topo_sig", "payload_bytes", "native_us",
+                    "best_decomposed_us", "best_strategy", "ratio",
+                    "beats_native", "status"}
+
+TUNING_FIT_KEYS = {"alpha_ici_s", "alpha_dcn_s", "ici_bw_Bps", "dcn_bw_Bps",
+                   "residual_rms_us", "residual_max_us", "num_cells"}
 
 FAMILY_ROW_KEYS = {"family", "arch", "layer_elems", "extra_elems",
                    "num_layers", "num_blocks", "avg_us", "min_us",
@@ -58,6 +68,18 @@ def required_strategies() -> set:
     return set(strategies_for("grad_sync")) | {"auto"}
 
 
+def auto_eligible_strategies() -> set:
+    """The strategies LaneComm.select can actually pick for grad_sync —
+    auto_ok registrations with a cost model.  The measured-dispatch
+    check below must restrict itself to these: a ZeRO row may well
+    measure fastest, but auto can never select a layout-changing
+    strategy, so holding the auto row to the unrestricted argmin would
+    fail CI by construction."""
+    from repro.comm import iter_impls
+    return {e.strategy for e in iter_impls("grad_sync")
+            if e.auto_ok and e.cost is not None}
+
+
 def required_families() -> set:
     """The block-stack registry IS the family requirement: a model family
     that silently loses its lane_zero3 registration (or its benchmark
@@ -76,6 +98,7 @@ def required_serve_families() -> set:
 
 
 REQUIRED_STRATEGIES = required_strategies()
+AUTO_ELIGIBLE = auto_eligible_strategies()
 REQUIRED_FAMILIES = required_families()
 REQUIRED_SERVE_FAMILIES = required_serve_families()
 
@@ -125,6 +148,60 @@ def check(doc: dict) -> list[str]:
     if not doc.get("structure_ok", False):
         errs.append("structure_ok is false: the §5 overlap (or a negative "
                     "control) regressed — see the benchmark output")
+    if doc.get("tuning_cache"):
+        # measured dispatch: with a timing cache the auto row must have
+        # selected the argmin of the MEASURED predictions among the
+        # auto-eligible rows (predicted_us carries the cache's median
+        # for exactly the cells select() ranked)
+        auto_rows = [r for r in rows if r.get("strategy") == "auto"]
+        eligible = [r for r in rows
+                    if r.get("strategy") in AUTO_ELIGIBLE
+                    and r.get("predicted_us") is not None]
+        if auto_rows and eligible:
+            best = min(eligible, key=lambda r: r["predicted_us"])
+            for r in auto_rows:
+                if r.get("selected") != best["strategy"]:
+                    errs.append(
+                        f"tuning cache present but the auto row selected "
+                        f"{r.get('selected')!r}, not the measured argmin "
+                        f"{best['strategy']!r} "
+                        f"({best['predicted_us']} us) — measured costs "
+                        f"are not driving dispatch")
+        elif auto_rows:
+            errs.append("tuning cache present but no auto-eligible row "
+                        "carries a predicted_us to check the auto "
+                        "selection against")
+    return errs
+
+
+def check_tuning(doc: dict) -> list[str]:
+    """BENCH_tuning.json: the probe→fit→guideline report."""
+    errs = []
+    missing = TUNING_TOP_KEYS - set(doc)
+    if missing:
+        errs.append(f"tuning missing top-level keys: {sorted(missing)}")
+    cells = doc.get("cells", [])
+    if not isinstance(cells, list) or not cells:
+        errs.append("tuning cells must be a non-empty list")
+        cells = []
+    for i, c in enumerate(cells):
+        mk = TUNING_CELL_KEYS - set(c)
+        if mk:
+            errs.append(f"tuning cells[{i}] missing {sorted(mk)}")
+        if c.get("status") not in ("ok", "violation"):
+            errs.append(f"tuning cells[{i}] bad status {c.get('status')!r}")
+    fk = TUNING_FIT_KEYS - set(doc.get("fit", {}))
+    if fk:
+        errs.append(f"tuning fit missing {sorted(fk)}")
+    viol = [c for c in cells if c.get("status") == "violation"]
+    if len(viol) != doc.get("violations"):
+        errs.append(f"tuning violations count {doc.get('violations')} "
+                    f"disagrees with the cells ({len(viol)})")
+    if viol or not doc.get("ok", False):
+        errs.append(
+            f"tuning guideline violations: {len(viol)} cell(s) where the "
+            f"best decomposed time exceeds tolerance× native — see "
+            f"BENCH_tuning.json")
     return errs
 
 
@@ -198,6 +275,7 @@ def main(argv=None) -> int:
     ap.add_argument("--file", default="BENCH_gradsync.json")
     ap.add_argument("--recovery-file", default="BENCH_recovery.json")
     ap.add_argument("--serve-file", default="BENCH_serve.json")
+    ap.add_argument("--tuning-file", default="BENCH_tuning.json")
     args = ap.parse_args(argv)
     doc = _load(pathlib.Path(args.file))
     if doc is None:
@@ -230,7 +308,19 @@ def main(argv=None) -> int:
         print(f"schema ok: {args.serve_file} "
               f"({len(sdoc['results'])} rows, {len(fams)} families, "
               f"zero3_identity={sdoc['zero3_identity']})")
-    return 1 if (errs or rerrs or serrs) else 0
+    tdoc = _load(pathlib.Path(args.tuning_file))
+    if tdoc is None:
+        return 1
+    terrs = check_tuning(tdoc)
+    for e in terrs:
+        print(f"SCHEMA FAIL: {e}")
+    if not terrs:
+        print(f"schema ok: {args.tuning_file} "
+              f"({len(tdoc['cells'])} cells, "
+              f"{tdoc['measured_cells']} measured, "
+              f"violations={tdoc['violations']}, "
+              f"fit rms={tdoc['fit']['residual_rms_us']}us)")
+    return 1 if (errs or rerrs or serrs or terrs) else 0
 
 
 if __name__ == "__main__":

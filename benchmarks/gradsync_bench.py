@@ -36,11 +36,12 @@ import numpy as np
 import jax
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-from repro.comm import CommConfig, LaneComm, strategies_for
-from repro.core import LaneTopology, time_fn, bucket_pipeline_time, HW
+from repro.comm import CommConfig, LaneComm, iter_impls, strategies_for
+from repro.core import LaneTopology, time_fn, bucket_pipeline_time, get_hw
 from repro.core.costmodel import optimal_num_buckets
 from repro.optim.gradsync import resolve_num_buckets
 from repro.launch import hlo_stats
+from repro.tuning import Tuner, load_timing_table_or_none
 
 POD = 4                               # chips per pod on the 2×4 bench mesh
 
@@ -106,9 +107,25 @@ def bench_families(mesh, topo, reps, warmup):
     return rows
 
 
-def build(mesh, topo, strategy, num_buckets):
+def predicted_us(strategy, K, local_bytes, n, N, tuner):
+    """The cost auto-dispatch would charge this cell, in µs: the timing
+    cache's measured median when one covers it, else the §3/§5 closed
+    form of the registered impl (None for cost-less registrations)."""
+    if tuner is not None:
+        m = tuner.measured_cost("grad_sync", strategy, n, N, local_bytes)
+        if m is not None:
+            return m * 1e6
+    e = next((e for e in iter_impls("grad_sync")
+              if e.strategy == strategy), None)
+    if e is None or e.cost is None:
+        return None
+    return e.cost(n, N, local_bytes, CommConfig(buckets=K)) * 1e6
+
+
+def build(mesh, topo, strategy, num_buckets, tuner=None):
     """(jitted fn, comm) — the comm records any auto-dispatch selection."""
-    comm = LaneComm(topo, CommConfig(buckets=num_buckets), mesh=mesh)
+    comm = LaneComm(topo, CommConfig(buckets=num_buckets, tuner=tuner),
+                    mesh=mesh)
 
     def f(g):
         out = comm.grad_sync(g, strategy=strategy, num_buckets=num_buckets)
@@ -140,10 +157,21 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="small payload + few reps (CI)")
     ap.add_argument("--out", default="BENCH_gradsync.json")
+    ap.add_argument("--tuning-cache", default="",
+                    help="timing cache (repro.tuning) feeding the auto "
+                         "row's dispatch + every row's predicted_us; "
+                         "missing/corrupt = closed-form model")
     args = ap.parse_args(argv)
 
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    tuner = None
+    if args.tuning_cache:
+        table = load_timing_table_or_none(args.tuning_cache)
+        if table is not None:
+            tuner = Tuner(table)
+            print(f"tuning cache: {args.tuning_cache} "
+                  f"({len(table)} measured cells)")
 
     topo_n = 4                                        # chips per pod
     elems = 1 << 16 if args.smoke else 1 << 22        # fp32 elements
@@ -184,17 +212,23 @@ def main(argv=None) -> int:
     hlo_checks = {}
     oracle = None
     for strategy, K in grid:
-        fn, comm = build(mesh, topo, strategy, K)
+        fn, comm = build(mesh, topo, strategy, K, tuner)
         lowered = fn.lower(arr)
         hlo = lowered.compile().as_text()
         conc = hlo_stats.collective_concurrency(hlo, pod_size=POD)
         # what actually ran: the auto row records the dispatcher's pick
         selected = strategy
+        local_bytes = elems // 8 * 4     # per-chip trace-time payload
+        n_, N_ = topo.sizes(mesh)
         if strategy == "auto":
             sel = comm.last_selection
             selected = sel.strategy
-            print(f"auto-dispatch: {selected} "
+            pred = round(sel.ranking[0][0] * 1e6, 2)
+            print(f"auto-dispatch: {selected} [{sel.source}] "
                   f"(ranking {[(s, round(t * 1e6, 1)) for t, s in sel.ranking]})")
+        else:
+            pred = predicted_us(strategy, K, local_bytes, n_, N_, tuner)
+            pred = None if pred is None else round(pred, 2)
         avg, best = time_fn(fn, arr, reps=reps, warmup=warmup)
         out = np.asarray(fn(arr))
         if oracle is None and strategy == "native":
@@ -207,6 +241,7 @@ def main(argv=None) -> int:
                "avg_us": round(avg, 2), "min_us": round(best, 2),
                "max_abs_err_vs_native": max_err,
                "model_pred_us": round(pred_us, 2),
+               "predicted_us": pred,
                "hlo_concurrent": conc["concurrent"],
                "hlo_concurrent_pairs": len(conc["pairs"])}
         results.append(row)
@@ -246,8 +281,9 @@ def main(argv=None) -> int:
         "mesh": "2x4 (pod,data)", "payload_elems": elems,
         "payload_bytes": elems * 4, "auto_num_buckets": auto_k,
         "strategies_registered": list(registered),
-        "cost_model": {"alpha_dcn_s": HW.alpha_dcn,
-                       "dcn_bw_Bps": HW.dcn_bw,
+        "tuning_cache": args.tuning_cache if tuner is not None else None,
+        "cost_model": {"alpha_dcn_s": get_hw().alpha_dcn,
+                       "dcn_bw_Bps": get_hw().dcn_bw,
                        "optimal_K_model":
                            optimal_num_buckets(elems * 4 / topo_n)},
         "smoke": bool(args.smoke), "reps": reps,

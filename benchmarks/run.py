@@ -57,6 +57,12 @@ def main(argv=None) -> int:
         cmd = ["benchmarks.gradsync_bench"]
         if args.smoke:
             cmd.append("--smoke")
+        # feed the committed timing cache (written by the tune-smoke leg /
+        # repro.tuning.tune_smoke) so the auto row dispatches on measured
+        # costs; gradsync_bench degrades to the closed-form model when
+        # the cache is absent or stale
+        if (root / "tuning_cache.json").exists():
+            cmd += ["--tuning-cache", "tuning_cache.json"]
         rc |= _sub(cmd, env, root)
 
     if not args.skip_recovery:

@@ -9,10 +9,11 @@ through every call site.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Optional
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.configs.base import RunConfig
+    from repro.tuning.table import Tuner
 
 _COMPRESSIONS = ("none", "int8")
 
@@ -35,6 +36,12 @@ class CommConfig:
         the owner opted in.
     record_selections: append a Selection record per auto dispatch (read
         by the HLO structural checkers / benchmarks).
+    tuner: measured-cost hook (``repro.tuning.table.Tuner``).  When set,
+        ``LaneComm.select`` asks it for a MEASURED cost per candidate
+        strategy and ranks measured cells ahead of closed-form-modelled
+        ones (unmeasured cells fall back to the §3/§5 model — the
+        measure-once-then-commit contract, DESIGN.md §11).  None (the
+        default) keeps dispatch purely on the closed-form model.
     """
 
     strategy: str = "auto"
@@ -42,6 +49,7 @@ class CommConfig:
     prefetch_blocks: int = 0
     compression: str = "none"
     record_selections: bool = True
+    tuner: Optional[Tuner] = None
 
     def __post_init__(self):
         if self.compression not in _COMPRESSIONS:

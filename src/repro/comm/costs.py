@@ -24,7 +24,7 @@ reproducible and the recorded Selection can be asserted in tests.
 from __future__ import annotations
 
 from repro.core.costmodel import (
-    HW, _lg, bucket_pipeline_time, klane_time, mockup_cost,
+    _lg, bucket_pipeline_time, get_hw, klane_time, mockup_cost,
     optimal_num_buckets,
 )
 from repro.core.pipeline import ALLGATHER_STAGES, ALLREDUCE_STAGES
@@ -40,10 +40,16 @@ _ROUND_FACTOR = {  # rounds multiplier: reduce+broadcast shapes pay 2 phases
 
 
 def _level(N: int) -> tuple[float, float]:
-    """(alpha, beta) of the slowest level present: DCN iff multi-node."""
+    """(alpha, beta) of the slowest level present: DCN iff multi-node.
+
+    Reads the ACTIVE constants (core.costmodel.get_hw) at call time, so
+    a fitted HW installed by the tuning subsystem reprices every ranking
+    without re-registering a single cost function.
+    """
+    hw = get_hw()
     if N > 1:
-        return HW.alpha_dcn, 1.0 / HW.dcn_bw
-    return HW.alpha_ici, 1.0 / HW.ici_bw
+        return hw.alpha_dcn, 1.0 / hw.dcn_bw
+    return hw.alpha_ici, 1.0 / hw.ici_bw
 
 
 def native_cost(coll: str):
@@ -60,10 +66,11 @@ def native_cost(coll: str):
 def lane_cost(coll: str):
     """Full-lane mock-up under the k-lane model (paper §5)."""
     def cost(n: int, N: int, c_bytes: float, cfg) -> float:
+        hw = get_hw()
         return klane_time(
             mockup_cost(coll, n, N, c_bytes), k=n, elem_bytes=1,
-            alpha_node=HW.alpha_ici, beta_node=1.0 / HW.ici_bw,
-            alpha_lane=HW.alpha_dcn, beta_lane=1.0 / HW.dcn_bw)
+            alpha_node=hw.alpha_ici, beta_node=1.0 / hw.ici_bw,
+            alpha_lane=hw.alpha_dcn, beta_lane=1.0 / hw.dcn_bw)
     return cost
 
 
@@ -103,8 +110,9 @@ def cost_native_scan(n: int, N: int, c_bytes: float, cfg) -> float:
 
 def cost_lane_scan(n: int, N: int, c_bytes: float, cfg) -> float:
     """Scan(node) + striped Exscan(lane) + AG(node) emulation volumes."""
-    t_node = 2 * _lg(n) * HW.alpha_ici \
-        + 2 * (n - 1) * c_bytes / HW.ici_bw          # node scan + final AG
-    t_lane = _lg(N) * HW.alpha_dcn \
-        + (N - 1) / max(N, 1) * (c_bytes / max(n, 1)) / HW.dcn_bw
+    hw = get_hw()
+    t_node = 2 * _lg(n) * hw.alpha_ici \
+        + 2 * (n - 1) * c_bytes / hw.ici_bw          # node scan + final AG
+    t_lane = _lg(N) * hw.alpha_dcn \
+        + (N - 1) / max(N, 1) * (c_bytes / max(n, 1)) / hw.dcn_bw
     return t_node + t_lane

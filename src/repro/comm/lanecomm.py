@@ -38,13 +38,18 @@ __all__ = ["LaneComm", "Selection"]
 class Selection:
     """One recorded auto-dispatch decision (trace-time).
 
-    ranking: ((seconds, strategy), ...) ascending — the full cost table
-    the choice was made from, for benchmarks and failure messages.
+    ranking: ((seconds, strategy), ...) — the full cost table the choice
+    was made from, for benchmarks and failure messages.  Ascending in
+    seconds; with a tuner attached, measured cells sort ahead of
+    modelled ones (so seconds are ascending only within each tier).
+    source: where the winning cost came from — ``"measured"`` (timing
+    cache, ``cfg.tuner``) or ``"model"`` (the §3/§5 closed form).
     """
     collective: str
     strategy: str
     payload_bytes: int
     ranking: tuple
+    source: str = "model"
 
 
 def _payload_bytes(x: Any) -> int:
@@ -80,6 +85,7 @@ class LaneComm:
         self.cfg = cfg if cfg is not None else CommConfig()
         self.mesh = mesh
         self.selections: list[Selection] = []
+        self._select_source = "model"   # source of the last select() win
 
     # -- sizes -----------------------------------------------------------
     def sizes(self) -> tuple[int, int]:
@@ -95,15 +101,25 @@ class LaneComm:
     def select(self, collective: str, payload_bytes: int, *,
                n: Optional[int] = None, N: Optional[int] = None,
                lead: Optional[int] = None) -> tuple[str, tuple]:
-        """Rank auto-eligible registrations by modelled cost.
+        """Rank auto-eligible registrations by measured-then-modelled cost.
 
-        Returns (winning strategy, ((seconds, strategy), ...) ascending).
-        Entries are skipped when they are lossy/layout-changing
+        Returns (winning strategy, ((seconds, strategy), ...)).  Entries
+        are skipped when they are lossy/layout-changing
         (``auto_ok=False``), have no cost model, or fail their
         divisibility precondition for ``lead``.
+
+        Without a tuner (``cfg.tuner is None``) every cell is priced by
+        the §3/§5 closed form and the ranking is ascending in seconds.
+        With a tuner, each cell is first looked up in the measured
+        timing table; MEASURED cells rank ahead of modelled ones (a
+        measured 394 µs must beat a modelled 68 µs fiction — the
+        BENCH_gradsync mispredict this subsystem exists to fix), and
+        unmeasured cells keep their closed-form fallback.  The source of
+        the winning cost lands on the recorded ``Selection.source``.
         """
         if n is None or N is None:
             n, N = self.sizes()
+        tuner = self.cfg.tuner
         table = []
         for e in iter_impls(collective):
             if not e.auto_ok or e.cost is None:
@@ -111,14 +127,21 @@ class LaneComm:
             if lead is not None and e.feasible is not None \
                     and not e.feasible(n, N, lead):
                 continue
-            table.append((float(e.cost(n, N, payload_bytes, self.cfg)),
-                          e.strategy))
+            measured = None if tuner is None else tuner.measured_cost(
+                collective, e.strategy, n, N, payload_bytes)
+            if measured is not None:
+                table.append((0, float(measured), e.strategy))
+            else:
+                table.append((1, float(e.cost(n, N, payload_bytes,
+                                              self.cfg)), e.strategy))
         if not table:
             raise ValueError(
                 f"no auto-dispatchable implementation for {collective!r} "
                 f"(payload {payload_bytes} B, n={n}, N={N}); registered "
                 f"strategies: {strategies_for(collective)}")
-        ranking = tuple(sorted(table))
+        table.sort()
+        self._select_source = "measured" if table[0][0] == 0 else "model"
+        ranking = tuple((t, s) for _, t, s in table)
         return ranking[0][1], ranking
 
     @property
@@ -162,7 +185,8 @@ class LaneComm:
                                             lead=_lead(x))
             if self.cfg.record_selections:
                 self.selections.append(
-                    Selection(collective, strategy, payload, ranking))
+                    Selection(collective, strategy, payload, ranking,
+                              self._select_source))
         return get_impl(collective, strategy).fn(self, x, **kw)
 
     # -- the collective surface (paper §3, Listings 1-6 + Scan) ----------

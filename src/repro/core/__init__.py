@@ -16,10 +16,12 @@ from .pipeline import (
     pipeline_steps, allreduce_pipeline_steps, allgather_pipeline_steps,
 )
 from .costmodel import (
-    CollectiveCost, mockup_cost, klane_time, HW, optimal_num_buckets,
-    bucket_pipeline_time, optimal_prefetch_blocks,
+    CollectiveCost, mockup_cost, klane_time, HW, get_hw, set_hw,
+    optimal_num_buckets, bucket_pipeline_time, optimal_prefetch_blocks,
 )
-from .guidelines import check_guideline, GuidelineResult, time_fn
+from .guidelines import (
+    check_guideline, GuidelineResult, median_us, time_fn, time_fn_samples,
+)
 
 __all__ = [
     "LaneTopology", "PRODUCTION", "SINGLE_POD",
@@ -31,7 +33,8 @@ __all__ = [
     "pipelined_bcast_lane", "pipelined_allreduce_lane",
     "pipelined_allgather_lane", "pipeline_steps",
     "allreduce_pipeline_steps", "allgather_pipeline_steps",
-    "CollectiveCost", "mockup_cost", "klane_time", "HW",
+    "CollectiveCost", "mockup_cost", "klane_time", "HW", "get_hw", "set_hw",
     "optimal_num_buckets", "bucket_pipeline_time", "optimal_prefetch_blocks",
-    "check_guideline", "GuidelineResult", "time_fn",
+    "check_guideline", "GuidelineResult", "time_fn", "time_fn_samples",
+    "median_us",
 ]

@@ -19,8 +19,8 @@ import dataclasses
 import math
 
 __all__ = ["CollectiveCost", "mockup_cost", "klane_time", "speedup_bound",
-           "HW", "optimal_num_buckets", "bucket_pipeline_time",
-           "optimal_prefetch_blocks"]
+           "HW", "get_hw", "set_hw", "optimal_num_buckets",
+           "bucket_pipeline_time", "optimal_prefetch_blocks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,27 +122,65 @@ class HW:
 
 
 # ---------------------------------------------------------------------------
+# active constants: spec-sheet HW() until a fitted instance is installed
+# ---------------------------------------------------------------------------
+#
+# The spec-sheet defaults above are FICTION on any real deployment (the
+# BENCH_gradsync auto row predicted 68 µs for a 394 µs path); the tuning
+# subsystem (repro.tuning.fit) least-squares fits alpha/beta per level
+# from measured timings and installs the result here.  Every cost read
+# goes through get_hw() at CALL time — never bind HW.* as a default
+# argument, or a fitted instance silently won't take.  CAUTION: the
+# bucket/block resolutions below feed ZeRO shard LAYOUTS; installing a
+# different HW between building a layout and building its train step
+# would make the two sides disagree on K/B (the driver therefore never
+# calls set_hw mid-run — see DESIGN.md §11).
+
+_ACTIVE_HW: HW = HW()
+
+
+def get_hw() -> HW:
+    """The active hardware constants (spec-sheet default or fitted)."""
+    return _ACTIVE_HW
+
+
+def set_hw(hw: "HW | None") -> HW:
+    """Install ``hw`` as the active constants (None restores the
+    spec-sheet default).  Returns the PREVIOUS instance so callers can
+    scope the change (tests / what-if reports restore it in finally)."""
+    global _ACTIVE_HW
+    prev = _ACTIVE_HW
+    _ACTIVE_HW = HW() if hw is None else hw
+    return prev
+
+
+# ---------------------------------------------------------------------------
 # §5 pipelining: bucket-count choice from the latency/bandwidth crossover
 # ---------------------------------------------------------------------------
 
 def bucket_pipeline_time(c_bytes: float, K: int, *, stages: int = 3,
-                         alpha: float = HW.alpha_dcn,
-                         beta: float = 1.0 / HW.dcn_bw) -> float:
+                         alpha: "float | None" = None,
+                         beta: "float | None" = None) -> float:
     """Predicted seconds for K buckets through an S-stage pipeline.
 
     Standard pipeline algebra: (K + S - 1) waves, each costing one stage's
     alpha plus the per-bucket bandwidth term c/K·beta.  The bandwidth term
-    is taken at the slowest level (the DCN lane hop by default) — the
-    other stages overlap under it once the pipeline is full.
+    is taken at the slowest level (the DCN lane hop by default; None
+    resolves alpha/beta from the ACTIVE constants, so fitted values flow
+    through) — the other stages overlap under it once the pipeline is
+    full.
     """
     if K < 1:
         raise ValueError(f"K must be >= 1, got {K}")
+    hw = get_hw()
+    alpha = hw.alpha_dcn if alpha is None else alpha
+    beta = 1.0 / hw.dcn_bw if beta is None else beta
     return (K + stages - 1) * (alpha + c_bytes * beta / K)
 
 
 def optimal_num_buckets(c_bytes: float, *, stages: int = 3,
-                        alpha: float = HW.alpha_dcn,
-                        beta: float = 1.0 / HW.dcn_bw,
+                        alpha: "float | None" = None,
+                        beta: "float | None" = None,
                         max_buckets: int = 64) -> int:
     """Bucket count K from the k-lane latency/bandwidth crossover.
 
@@ -151,11 +189,15 @@ def optimal_num_buckets(c_bytes: float, *, stages: int = 3,
     crossover payload (cβ ≲ alpha) a single bucket wins — pipelining pure
     latency backfires; far above it the win saturates at ~S× while per-
     bucket alphas accumulate, hence the clamp.  Deterministic in its
-    inputs so callers on both sides of a shard_map boundary agree on K
-    (the ZeRO-1 shard layout depends on it).
+    inputs AND the active HW so callers on both sides of a shard_map
+    boundary agree on K (the ZeRO-1 shard layout depends on it) — which
+    is why the driver never swaps the active HW mid-run.
     """
     if c_bytes <= 0:
         return 1
+    hw = get_hw()
+    alpha = hw.alpha_dcn if alpha is None else alpha
+    beta = 1.0 / hw.dcn_bw if beta is None else beta
     k_star = math.sqrt(max(stages - 1, 1) * c_bytes * beta / alpha)
     return max(1, min(max_buckets, int(round(k_star))))
 

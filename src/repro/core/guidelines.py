@@ -18,11 +18,17 @@ from typing import Callable
 
 import jax
 
-__all__ = ["time_fn", "GuidelineResult", "check_guideline"]
+__all__ = ["time_fn", "time_fn_samples", "median_us", "GuidelineResult",
+           "check_guideline"]
 
 
-def time_fn(fn: Callable, *args, reps: int = 30, warmup: int = 5):
-    """Return (avg_us, min_us) over `reps` timed calls after `warmup`."""
+def time_fn_samples(fn: Callable, *args, reps: int = 30,
+                    warmup: int = 5) -> list:
+    """Raw per-repetition wall times in µs after ``warmup`` discarded
+    calls — the paper's measurement protocol with the samples kept, so
+    callers choose their own statistic (the tuning probe keys its cache
+    on the MEDIAN: robust to the one-off scheduler hiccups that poison
+    an average and, unlike the minimum, not a best-case fiction)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -30,6 +36,21 @@ def time_fn(fn: Callable, *args, reps: int = 30, warmup: int = 5):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
+    return times
+
+
+def median_us(samples) -> float:
+    """Median of a non-empty sample list (mean of the middle two)."""
+    s = sorted(samples)
+    if not s:
+        raise ValueError("median of an empty sample list")
+    m = len(s) // 2
+    return s[m] if len(s) % 2 else (s[m - 1] + s[m]) / 2.0
+
+
+def time_fn(fn: Callable, *args, reps: int = 30, warmup: int = 5):
+    """Return (avg_us, min_us) over `reps` timed calls after `warmup`."""
+    times = time_fn_samples(fn, *args, reps=reps, warmup=warmup)
     return sum(times) / len(times), min(times)
 
 

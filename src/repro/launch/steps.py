@@ -30,7 +30,8 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core import LaneTopology
 from repro.models import init_model, loss_fn, prefill, decode_step
 from repro.models.blockstack import (
-    ShardedStack, StackLayout, block_stack_spec, resolve_prefetch_blocks,
+    ShardedStack, StackLayout, block_stack_spec,
+    resolve_extras_prefetch_blocks, resolve_prefetch_blocks,
     shard_stack, split_params, stack_layout,
 )
 from repro.models.transformer import ShardedBlocks  # noqa: F401 (re-export)
@@ -134,7 +135,7 @@ class StepContext:
 
 
 def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
-                          mesh, param_specs):
+                          mesh, param_specs, *, tuner=None):
     """Manual over batch axes; collectives via repro.comm.LaneComm.
 
     The step flavor is resolved from the train_step registry by
@@ -151,6 +152,9 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     replicated flavor degrades to the native one-shot psum.
     ``param_specs`` is accepted for call-site compatibility but unused:
     the caller owns the shard_map in/out specs of the returned step.
+    ``tuner`` (a ``repro.tuning.Tuner`` or None) lands on the comm's
+    ``CommConfig.tuner``: measured timing-cache costs then outrank the
+    closed-form model in every auto dispatch this step makes.
 
     Returns ``(step, comm)``: the comm carries the topology
     (``comm.topo``), the recorded auto ``Selection``s, and the
@@ -162,7 +166,10 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     # single-axis meshes get an empty node level (n = 1): the lane axis
     # IS the communicator, matching the paper's N-node/1-per-node corner
     topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
-    comm = LaneComm(topo, CommConfig.from_run(run), mesh=mesh)
+    ccfg = CommConfig.from_run(run)
+    if tuner is not None:
+        ccfg = dataclasses.replace(ccfg, tuner=tuner)
+    comm = LaneComm(topo, ccfg, mesh=mesh)
     ctx = StepContext(cfg, run, opt, mesh, ba, single)
     builder = get_impl("train_step", run.gradsync)
     return builder.fn(comm, ctx), comm
@@ -338,7 +345,10 @@ def _build_zero3(comm, ctx: StepContext):
     layouts = zero3_stack_layouts(cfg)
     lay_b, lay_e = layouts["blocks"], layouts["extras"]
     Bb = resolve_prefetch_blocks(lay_b.row_elems, n_, N_, run.fsdp_prefetch)
-    Be = resolve_prefetch_blocks(lay_e.row_elems, n_, N_, run.fsdp_prefetch)
+    # extras (vocab·d embed + head) resolves from its OWN row payload —
+    # a positive override tuned for the layer stack is not inherited
+    Be = resolve_extras_prefetch_blocks(lay_e.row_elems, n_, N_,
+                                        run.fsdp_prefetch)
     blocking = run.fsdp_prefetch == -1
     if blocking and run.fsdp_regather:
         raise ValueError(
@@ -664,7 +674,8 @@ def zero3_checkpoint_layout(cfg: ModelConfig, n: int, N: int,
     layouts = zero3_stack_layouts(cfg)
     lay_b, lay_e = layouts["blocks"], layouts["extras"]
     Bb = resolve_prefetch_blocks(lay_b.row_elems, n, N, fsdp_prefetch)
-    Be = resolve_prefetch_blocks(lay_e.row_elems, n, N, fsdp_prefetch)
+    Be = resolve_extras_prefetch_blocks(lay_e.row_elems, n, N,
+                                        fsdp_prefetch)
     return Zero3CheckpointLayout(lay_b.length, lay_b.row_elems, Bb,
                                  max(n * N, 1),
                                  extra_elems=lay_e.row_elems,

@@ -218,6 +218,15 @@ def main(argv=None):
                          "pod_slow/pod_lost/ckpt_io/corrupt_leaf, see "
                          "runtime.faults) or 'seed:<n>' for a seeded "
                          "random plan")
+    ap.add_argument("--tune", action="store_true",
+                    help="probe the live topology's collective timings "
+                         "before training (repro.tuning): measured "
+                         "costs then outrank the closed-form model in "
+                         "auto dispatch; results merge into the cache")
+    ap.add_argument("--tuning-cache", default="",
+                    help="timing-cache path (default: tuning_cache.json "
+                         "inside --ckpt when one is set); restored "
+                         "entries feed dispatch without re-probing")
     ap.add_argument("--quorum-staleness", type=int, default=2,
                     help="K: consecutive steps a pod may be masked out "
                          "of the quorum before DEGRADED escalates to "
@@ -256,6 +265,39 @@ def main(argv=None):
     return 1
 
 
+def _setup_tuner(args, mesh, ba):
+    """Restore/probe the timing cache and return a Tuner (or None).
+
+    The cache rides in the checkpoint directory by default
+    (``--tuning-cache`` overrides), so a resumed run re-ranks with the
+    same measured costs it committed to — measure once, then commit.
+    A missing or corrupt cache degrades to the closed-form model; with
+    ``--tune`` the probe fills (only) unmeasured cells and the merged
+    table is saved back atomically.
+    """
+    import os
+    from repro.core.lane import LaneTopology
+    from repro.tuning import (DEFAULT_CACHE_NAME, DEFAULT_LADDER,
+                              SMOKE_LADDER, TimingTable, Tuner,
+                              load_timing_table_or_none, probe_cells,
+                              save_timing_table)
+    cache_path = args.tuning_cache or (
+        os.path.join(args.ckpt, DEFAULT_CACHE_NAME) if args.ckpt else "")
+    if not cache_path and not args.tune:
+        return None
+    table = (load_timing_table_or_none(cache_path)
+             if cache_path else None) or TimingTable()
+    if args.tune:
+        topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
+        ladder = SMOKE_LADDER if args.smoke else DEFAULT_LADDER
+        probe_cells(mesh, topo, ladder=ladder, table=table)
+        if cache_path:
+            save_timing_table(cache_path, table)
+            print(f"tuning cache committed: {cache_path} "
+                  f"({len(table)} cells)", flush=True)
+    return Tuner(table) if len(table) else None
+
+
 def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
     """One attempt of the run on the mesh that survives ``lost``.
 
@@ -281,9 +323,19 @@ def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
 
+    # measured-cost tuning (repro.tuning): restore the cache living
+    # beside the checkpoints, optionally probe this topology (--tune;
+    # measure-once — already-measured cells are skipped), and hand the
+    # tuner to the step builder so auto dispatch ranks by measured cost.
+    # NOTE: the fitted-HW install (set_hw) is deliberately NOT done
+    # here — swapping constants mid-run would desync the K/B layout
+    # resolutions the checkpoint geometry already committed to.
+    tuner = _setup_tuner(args, mesh, ba)
+
     # step first (it validates strategy × topology, e.g. lane_zero3 on a
     # single-batch-axis mesh), then the layout-matched master state
-    step, comm = build_train_step_lane(cfg, run, opt_cfg, mesh, None)
+    step, comm = build_train_step_lane(cfg, run, opt_cfg, mesh, None,
+                                       tuner=tuner)
     params0 = init_model(jax.random.PRNGKey(args.seed), cfg)
     st = init_lane_train_state(cfg, run, mesh, params0, comm=comm)
     pshard, oshard = st.to_shardings(mesh)

@@ -58,7 +58,8 @@ from repro.core.costmodel import optimal_prefetch_blocks
 __all__ = [
     "ShardedStack", "ShardedBlocks", "scan_stack", "scan_stack_cached",
     "StackLayout",
-    "stack_layout", "shard_stack", "resolve_prefetch_blocks", "BlockSpec",
+    "stack_layout", "shard_stack", "resolve_prefetch_blocks",
+    "resolve_extras_prefetch_blocks", "BlockSpec",
     "register_block_stack", "block_stack_spec", "block_stack_families",
     "family_smoke_archs", "split_params",
 ]
@@ -364,14 +365,37 @@ def resolve_prefetch_blocks(row_elems: int, n: int, N: int,
     return max(1, min(b, max(1, row_elems // p)))
 
 
+def resolve_extras_prefetch_blocks(row_elems: int, n: int, N: int,
+                                   override: int = 0) -> int:
+    """Block count for the EXTRAS pseudo-layer (embed/head/norm tree).
+
+    The extras row is not one more layer: with a real vocab its vocab·d
+    embedding makes the row's gather payload dwarf a block row, so a
+    positive ``--fsdp-prefetch`` override hand-tuned for the layer
+    stack must NOT be inherited here — a B sized for a ~12·d² row
+    starves the much larger extras gather of pipeline depth (and a B
+    sized for extras over-splits the layers).  Only the blocking
+    negative control (-1) passes through; any other override defers to
+    the cost model on the extras row's OWN per-chip stripe.
+    """
+    return resolve_prefetch_blocks(row_elems, n, N,
+                                   -1 if override < 0 else 0)
+
+
 def shard_stack(tree, n: int, N: int, fsdp_prefetch: int = 0, *,
                 stacked: bool = True):
     """Host-side: the (L, B, n·N, s) fp32 master layout of one stack.
     Place on the mesh with ``P(None, None, (*node_axes, lane_axis),
     None)`` and each chip's local block reshapes to the (L, B·s) shard
-    the train step expects.  Returns (array, B)."""
+    the train step expects.  Returns (array, B).
+
+    ``stacked=False`` is the extras pseudo-layer: its B resolves from
+    its own row payload (:func:`resolve_extras_prefetch_blocks`), never
+    from a positive override tuned for the layer stack."""
     layout = stack_layout(tree, stacked=stacked)
-    B = resolve_prefetch_blocks(layout.row_elems, n, N, fsdp_prefetch)
+    resolve = resolve_prefetch_blocks if stacked \
+        else resolve_extras_prefetch_blocks
+    B = resolve(layout.row_elems, n, N, fsdp_prefetch)
     p = max(n * N, 1)
     flat = layout.flatten(tree, pad_to=B * p)
     s = flat.shape[1] // (B * p)

@@ -42,7 +42,8 @@ from repro.configs.base import ModelConfig
 from repro.core import LaneTopology
 from repro.models import decode_step, init_cache, prefill
 from repro.models.blockstack import (
-    ShardedStack, block_stack_spec, resolve_prefetch_blocks, shard_stack,
+    ShardedStack, block_stack_spec, resolve_extras_prefetch_blocks,
+    resolve_prefetch_blocks, shard_stack,
     split_params,
 )
 from repro.models.layers import _dtype
@@ -214,7 +215,8 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
     lays = zero3_stack_layouts(cfg)
     lay_b, lay_e = lays["blocks"], lays["extras"]
     Bb = resolve_prefetch_blocks(lay_b.row_elems, n, N, ctx.prefetch_blocks)
-    Be = resolve_prefetch_blocks(lay_e.row_elems, n, N, ctx.prefetch_blocks)
+    Be = resolve_extras_prefetch_blocks(lay_e.row_elems, n, N,
+                                        ctx.prefetch_blocks)
     blocking = ctx.prefetch_blocks == -1
     ccfg = CommConfig(prefetch_blocks=ctx.prefetch_blocks)
     weights_cell = ("prefetch_allgather",

@@ -947,7 +947,8 @@ def zero3_microbatch_single_extras_gather():
     from repro.configs.base import RunConfig, SHAPES
     from repro.launch import hlo_stats
     from repro.launch.steps import (build_train_step_lane,
-                                    init_lane_train_state)
+                                    init_lane_train_state,
+                                    zero3_checkpoint_layout)
     from repro.models import init_model
     from repro.optim import AdamWConfig
     cfg = resolve("llama3.2-3b", smoke=True)
@@ -957,12 +958,14 @@ def zero3_microbatch_single_extras_gather():
     rng = np.random.default_rng(11)
     toks = rng.integers(0, cfg.vocab_size, (16, 8)).astype(np.int32)
     labs = rng.integers(0, cfg.vocab_size, (16, 8)).astype(np.int32)
+    sizes = {}
 
     def ag_count(mb):
         run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
                         gradsync="lane_zero3", fsdp_prefetch=2,
                         microbatch=mb)
         step, comm = build_train_step_lane(cfg, run, opt, mesh, None)
+        sizes["nN"] = comm.sizes()
         st = init_lane_train_state(cfg, run, mesh, params, comm=comm)
         dspec = P(("pod", "data"))
         sm = jax.shard_map(step, mesh=mesh,
@@ -977,10 +980,18 @@ def zero3_microbatch_single_extras_gather():
 
     L = cfg.num_layers
     ag1, ag2 = ag_count(1), ag_count(2)
-    per_gather = ag1 // (L + 1)           # L layer gathers + 1 extras
-    assert ag1 == per_gather * (L + 1), (ag1, L)
-    assert ag2 <= ag1 + per_gather * L, \
-        f"extras re-gathered under microbatch: ag1={ag1} ag2={ag2} L={L}"
+    # layers keep the forced B; the extras pseudo-layer resolves its OWN
+    # depth from the vocab·d stripe (resolve_extras_prefetch_blocks), so
+    # read both block counts off the checkpoint-layout geometry and
+    # derive the per-BLOCK gather unit from the mb=1 lowering
+    n_, N_ = sizes["nN"]
+    lay = zero3_checkpoint_layout(cfg, n_, N_, 2)
+    Bb, Be = lay.num_blocks, lay.extra_blocks
+    g, rem = divmod(ag1, Bb * L + Be)
+    assert rem == 0, (ag1, Bb, Be, L)
+    assert ag2 <= ag1 + g * Bb * L, \
+        f"extras re-gathered under microbatch: ag1={ag1} ag2={ag2} " \
+        f"L={L} Bb={Bb} Be={Be}"
 
 
 @case

@@ -420,8 +420,9 @@ def _b_zero3_stack_roundtrip(family, topo_key):
     from repro.configs import resolve
     from repro.launch.steps import zero3_stack_layouts
     from repro.models import init_model
-    from repro.models.blockstack import (block_stack_spec, shard_stack,
-                                         split_params)
+    from repro.models.blockstack import (block_stack_spec,
+                                         resolve_extras_prefetch_blocks,
+                                         shard_stack, split_params)
     mesh, topo = _make(topo_key)
     n, N = topo.sizes(mesh)
     cfg = resolve(_ZERO3_FAMILY_ARCHS[family], smoke=True)
@@ -436,14 +437,22 @@ def _b_zero3_stack_roundtrip(family, topo_key):
                                      ("extras", extras, lays["extras"],
                                       False)):
         master, got_b = shard_stack(tree, n, N, B, stacked=stacked)
-        assert got_b == B, (name, got_b)
+        if stacked:
+            assert got_b == B, (name, got_b)
+        else:
+            # the extras pseudo-layer resolves its OWN depth from its
+            # vocab·d stripe — a positive override tuned for the layer
+            # stack must not be inherited (PR-8 satellite)
+            assert got_b == resolve_extras_prefetch_blocks(
+                lay.row_elems, n, N, B), (name, got_b)
+        Bg = got_b
         L = master.shape[0]
 
-        def gather_all(m, L=L):
+        def gather_all(m, L=L, Bg=Bg):
             rows = m.reshape(L, -1)
 
             def one(_, row):
-                return None, comm.prefetch_allgather(row, num_blocks=B)
+                return None, comm.prefetch_allgather(row, num_blocks=Bg)
             _, full = jax.lax.scan(one, None, rows)
             return full
 

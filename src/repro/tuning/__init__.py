@@ -1,0 +1,61 @@
+"""repro.tuning — self-tuning dispatch: measured costs over spec sheets.
+
+The §3/§5 cost model's STRUCTURE is the paper's analysis; its CONSTANTS
+(``core.costmodel.HW``) were a spec sheet, and BENCH_gradsync showed the
+gap (a 68 µs prediction for a 394 µs path).  This subsystem closes the
+loop in four parts (DESIGN.md §11):
+
+  probe   (:mod:`.probe`)   time registered (collective, strategy)
+                            cells on the live topology → TimingTable
+  store   (:mod:`.store`)   JSON+crc32 cache beside the checkpoints;
+                            measure once, commit, restore on relaunch
+  dispatch (:mod:`.table`)  ``Tuner`` behind ``CommConfig.tuner``:
+                            measured cells outrank modelled ones in
+                            ``LaneComm.select``; unmeasured cells fall
+                            back to the closed form
+  fit     (:mod:`.fit`)     least-squares HW constants from the table
+                            (ranking forms unchanged, constants real),
+                            with residuals in the guideline report
+                            (:mod:`.guideline_report` → BENCH_tuning)
+
+:mod:`.backend` owns the per-backend XLA knobs every timing entry point
+must apply before its first jax import.
+"""
+from __future__ import annotations
+
+from .backend import (
+    GPU_XLA_FLAGS, HOST_DEVICE_COUNT_FLAG, apply_backend_setup,
+    merge_xla_flags, xla_flags_for,
+)
+from .fit import FitResult, design_row, fit_hw, predicted_us
+from .guideline_report import DEFAULT_TOLERANCE, build_report
+from .probe import (
+    DEFAULT_LADDER, SMOKE_LADDER, probe_cells, probeable_collectives,
+)
+from .store import (
+    DEFAULT_CACHE_NAME, TuningCacheError, load_timing_table,
+    load_timing_table_or_none, save_timing_table,
+)
+from .table import (
+    TimingEntry, TimingTable, Tuner, parse_topology_signature,
+    payload_bucket, topology_signature,
+)
+
+__all__ = [
+    # table / tuner
+    "TimingEntry", "TimingTable", "Tuner", "payload_bucket",
+    "topology_signature", "parse_topology_signature",
+    # store
+    "TuningCacheError", "save_timing_table", "load_timing_table",
+    "load_timing_table_or_none", "DEFAULT_CACHE_NAME",
+    # probe
+    "probe_cells", "probeable_collectives", "DEFAULT_LADDER",
+    "SMOKE_LADDER",
+    # fit
+    "FitResult", "fit_hw", "design_row", "predicted_us",
+    # report
+    "build_report", "DEFAULT_TOLERANCE",
+    # backend
+    "apply_backend_setup", "xla_flags_for", "merge_xla_flags",
+    "GPU_XLA_FLAGS", "HOST_DEVICE_COUNT_FLAG",
+]

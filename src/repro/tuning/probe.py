@@ -1,0 +1,134 @@
+"""Probe harness: time registered (collective, strategy) cells in place.
+
+Walks the :mod:`repro.comm` registry — the probe grid IS the dispatch
+grid: exactly the auto-eligible, costed cells ``LaneComm.select`` ranks
+— and times each one under ``jax.shard_map`` on the live mesh at a
+ladder of payload sizes, producing :class:`~repro.tuning.table.
+TimingTable` entries keyed the way dispatch will look them up (LOCAL
+per-chip payload bytes, the trace-time ``_payload_bytes`` quantity).
+
+Measurement reuses the guideline discipline of
+:mod:`repro.core.guidelines`: seeded payloads, warmup discarded,
+repetitions separated by ``block_until_ready``; the cache records the
+MEDIAN (robust to scheduler hiccups) plus the paper's headline minimum.
+
+Cells already present in the table are skipped — the "once" half of
+measure-once-then-commit: a fleet restoring its cache from the
+checkpoint directory re-probes only what it has never measured (e.g.
+after an elastic restart changed (n, N) and the old signatures went
+stale).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm import CommConfig, LaneComm, iter_impls
+from repro.core.guidelines import median_us, time_fn_samples
+
+from .table import TimingEntry, TimingTable, payload_bucket, \
+    topology_signature
+
+__all__ = ["probe_cells", "probeable_collectives", "DEFAULT_LADDER",
+           "SMOKE_LADDER"]
+
+# local per-chip payload bytes; the non-smoke top rung (2 MiB) is the
+# full gradsync bench's per-chip stripe, the 32 KiB rung its smoke one
+DEFAULT_LADDER = (1 << 12, 1 << 15, 1 << 18, 1 << 21)
+SMOKE_LADDER = (1 << 12, 1 << 15, 1 << 18)
+
+# out_specs per probeable collective: "local" = each chip keeps its own
+# distinct block (reassemble over the axes), "repl" = every chip ends
+# with the identical buffer (P() output)
+_PROBE_OUT = {
+    "grad_sync": "repl",
+    "allreduce": "repl",
+    "allgather": "repl",
+    "reduce_scatter": "local",
+}
+
+
+def probeable_collectives() -> tuple:
+    """The collectives this harness knows how to drive (a subset of the
+    registry chosen for having a uniform array→array call shape)."""
+    return tuple(_PROBE_OUT)
+
+
+def _build_cell(mesh, topo, collective: str, strategy: str,
+                local_elems: int, cfg: CommConfig):
+    """(jitted fn, device payload) timing one cell at one payload."""
+    comm = LaneComm(topo, cfg, mesh=mesh)
+    n, N = topo.sizes(mesh)
+    p = max(n * N, 1)
+    spec = P((topo.lane_axis, *topo.node_axes))
+    out_spec = spec if _PROBE_OUT[collective] == "local" else P()
+
+    def f(x):
+        return getattr(comm, collective)(x, strategy=strategy)
+
+    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=spec,
+                               out_specs=out_spec, check_vma=False))
+    rng = np.random.default_rng(0)          # seeded payloads, per protocol
+    x = rng.normal(size=(local_elems * p,)).astype(np.float32)
+    arr = jax.device_put(x, NamedSharding(mesh, spec))
+    return fn, arr
+
+
+def probe_cells(mesh, topo, *, collectives: Optional[tuple] = None,
+                ladder: Optional[tuple] = None, reps: int = 5,
+                warmup: int = 2, table: Optional[TimingTable] = None,
+                verbose: bool = True) -> TimingTable:
+    """Time every auto-eligible registered cell of ``collectives`` at
+    each ``ladder`` payload (local per-chip bytes) on ``(mesh, topo)``,
+    into ``table`` (fresh one by default).  Already-measured cells are
+    skipped (measure-once); infeasible cells (divisibility) are skipped
+    exactly as dispatch would skip them.  Returns the table."""
+    if collectives is None:
+        collectives = ("grad_sync", "allreduce")
+    if ladder is None:
+        ladder = DEFAULT_LADDER
+    if table is None:
+        table = TimingTable()
+    n, N = topo.sizes(mesh)
+    p = max(n * N, 1)
+    sig = topology_signature(n, N)
+    cfg = CommConfig(record_selections=False)
+    for coll in collectives:
+        if coll not in _PROBE_OUT:
+            raise ValueError(
+                f"don't know how to probe {coll!r}; probeable: "
+                f"{probeable_collectives()}")
+        for e in iter_impls(coll):
+            if not e.auto_ok or e.cost is None:
+                continue        # exactly the set select() ranks
+            for local_bytes in ladder:
+                # round the per-chip payload up to a p² multiple of
+                # elements so every lane/node split divides evenly
+                # (the same divisibility dispatch's feasible() gates on)
+                unit = p * p
+                local_elems = max(unit,
+                                  (local_bytes // 4 + unit - 1)
+                                  // unit * unit)
+                payload = local_elems * 4
+                if e.feasible is not None \
+                        and not e.feasible(n, N, local_elems):
+                    continue
+                if table.get(coll, e.strategy, sig,
+                             payload_bucket(payload)) is not None:
+                    continue    # measured once already — committed
+                fn, arr = _build_cell(mesh, topo, coll, e.strategy,
+                                      local_elems, cfg)
+                samples = time_fn_samples(fn, arr, reps=reps,
+                                          warmup=warmup)
+                entry = TimingEntry(coll, e.strategy, sig, payload,
+                                    median_us(samples), min(samples),
+                                    reps)
+                table.put(entry)
+                if verbose:
+                    print(f"probe {coll:14s} {e.strategy:15s} "
+                          f"{payload:>9d}B  median={entry.median_us:9.1f}us"
+                          f"  min={entry.min_us:9.1f}us", flush=True)
+    return table

@@ -1,0 +1,106 @@
+"""tune-smoke CI leg: probe → persist → round-trip → fit → report.
+
+Runs the whole tuning loop end-to-end on the host-platform 2×4 mesh
+(the same topology every other smoke leg uses): probes the auto-
+eligible grad_sync/allreduce cells at the reduced ladder, commits the
+TimingTable to ``tuning_cache.json`` (the artifact the gradsync bench
+and the driver consume), verifies the cache round-trips BIT-identically
+through save → load → save, fits HW constants, and writes the
+decomposed-vs-native guideline report to ``BENCH_tuning.json``.
+
+Exit status is the CI verdict: nonzero on a guideline violation above
+tolerance, a broken round-trip, or a failed fit.  Schema validation of
+the emitted document is the Makefile's next command
+(``benchmarks/check_bench_schema.py --tuning-file``), keeping one
+schema checker for every BENCH artifact.
+
+Usage: python -m repro.tuning.tune_smoke [--cache PATH] [--out PATH]
+           [--reps R] [--tolerance X] [--full-ladder]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+from repro.tuning.backend import apply_backend_setup
+
+# flags BEFORE the first jax import (see tuning.backend) — 8 host
+# devices, factored 2 pods x 4 chips like every other smoke leg
+apply_backend_setup("cpu", host_device_count=8)
+
+import jax  # noqa: E402
+
+from repro.core.lane import LaneTopology  # noqa: E402
+from repro.tuning.fit import fit_hw  # noqa: E402
+from repro.tuning.guideline_report import (  # noqa: E402
+    DEFAULT_TOLERANCE, build_report,
+)
+from repro.tuning.probe import (  # noqa: E402
+    DEFAULT_LADDER, SMOKE_LADDER, probe_cells,
+)
+from repro.tuning.store import (  # noqa: E402
+    load_timing_table, save_timing_table,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cache", default="tuning_cache.json",
+                    help="timing-cache artifact to write")
+    ap.add_argument("--out", default="BENCH_tuning.json",
+                    help="guideline report to write")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    ap.add_argument("--full-ladder", action="store_true",
+                    help="probe the full payload ladder (default: smoke)")
+    args = ap.parse_args(argv)
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    ladder = DEFAULT_LADDER if args.full_ladder else SMOKE_LADDER
+    table = probe_cells(mesh, topo, ladder=ladder, reps=args.reps)
+    print(f"probed {len(table)} cells on {table.signatures()}")
+
+    # persist + the bit-identical round-trip check: the cache is a pure
+    # function of its entries, so save(load(save(T))) == save(T)
+    cache = save_timing_table(args.cache, table)
+    restored = load_timing_table(cache)
+    if restored.to_doc() != table.to_doc():
+        print("FAIL: cache round-trip changed the table", flush=True)
+        return 1
+    second = pathlib.Path(str(cache) + ".roundtrip")
+    save_timing_table(second, restored)
+    same_bytes = second.read_bytes() == cache.read_bytes()
+    second.unlink()
+    if not same_bytes:
+        print("FAIL: cache bytes not reproducible across save/load/save",
+              flush=True)
+        return 1
+    print(f"cache committed: {cache} ({os.path.getsize(cache)} B, "
+          f"round-trip bit-identical)")
+
+    fit = fit_hw(table)
+    print(f"fit: alpha_ici={fit.params['alpha_ici']:.3e}s "
+          f"alpha_dcn={fit.params['alpha_dcn']:.3e}s "
+          f"ici_bw={fit.hw.ici_bw:.3e}B/s dcn_bw={fit.hw.dcn_bw:.3e}B/s "
+          f"residual_rms={fit.residual_rms_us:.1f}us "
+          f"over {fit.num_cells} cells")
+
+    report = build_report(table, tolerance=args.tolerance, fit=fit)
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=2))
+    for c in report["cells"]:
+        mark = "OK " if c["status"] == "ok" else "VIOLATION"
+        print(f"  {mark} {c['collective']:10s} {c['payload_bytes']:>9d}B "
+              f"native={c['native_us']:9.1f}us best "
+              f"{c['best_strategy']:15s}={c['best_decomposed_us']:9.1f}us "
+              f"ratio={c['ratio']:.2f}")
+    print(f"wrote {args.out}: {len(report['cells'])} cells, "
+          f"{report['violations']} violation(s), ok={report['ok']}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

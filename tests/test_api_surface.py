@@ -23,10 +23,10 @@ EXPECTED_EXPORTS = {
     "CommConfig":
         "(strategy: 'str' = 'auto', buckets: 'int' = 0, prefetch_blocks: "
         "'int' = 0, compression: 'str' = 'none', record_selections: 'bool' "
-        "= True) -> None",
+        "= True, tuner: 'Optional[Tuner]' = None) -> None",
     "Selection":
         "(collective: 'str', strategy: 'str', payload_bytes: 'int', "
-        "ranking: 'tuple') -> None",
+        "ranking: 'tuple', source: 'str' = 'model') -> None",
     "ImplEntry":
         "(collective: 'str', strategy: 'str', fn: 'Callable', cost: "
         "'Optional[Callable]' = None, auto_ok: 'bool' = True, feasible: "
@@ -150,6 +150,63 @@ def test_param_layout_table_locked():
         assert comm.param_layout_kind(strategy) == kind, strategy
     with pytest.raises(ValueError, match="no param layout"):
         comm.param_layout_kind("nope")
+
+
+EXPECTED_TUNING_EXPORTS = {
+    # table / tuner
+    "TimingEntry", "TimingTable", "Tuner", "payload_bucket",
+    "topology_signature", "parse_topology_signature",
+    # store
+    "TuningCacheError", "save_timing_table", "load_timing_table",
+    "load_timing_table_or_none", "DEFAULT_CACHE_NAME",
+    # probe
+    "probe_cells", "probeable_collectives", "DEFAULT_LADDER",
+    "SMOKE_LADDER",
+    # fit
+    "FitResult", "fit_hw", "design_row", "predicted_us",
+    # report
+    "build_report", "DEFAULT_TOLERANCE",
+    # backend
+    "apply_backend_setup", "xla_flags_for", "merge_xla_flags",
+    "GPU_XLA_FLAGS", "HOST_DEVICE_COUNT_FLAG",
+}
+
+EXPECTED_TUNING_SIGNATURES = {
+    "Tuner":
+        "(table: 'TimingTable', *, platform: 'Optional[str]' = None, "
+        "device_kind: 'Optional[str]' = None)",
+    "save_timing_table":
+        "(path: 'Union[str, pathlib.Path]', table: 'TimingTable') -> "
+        "'pathlib.Path'",
+    "load_timing_table":
+        "(path: 'Union[str, pathlib.Path]') -> 'TimingTable'",
+    "load_timing_table_or_none":
+        "(path: 'Union[str, pathlib.Path]') -> 'Optional[TimingTable]'",
+    "fit_hw":
+        "(table: 'TimingTable', *, topo_sig: 'str' = None, alpha_floor: "
+        "'float' = 1e-09, beta_floor: 'float' = 1e-13) -> 'FitResult'",
+    "apply_backend_setup":
+        "(platform: 'str', *, host_device_count: 'Optional[int]' = None, "
+        "env: 'Optional[MutableMapping]' = None) -> 'str'",
+}
+
+
+def test_tuning_surface_locked():
+    """The measured-cost tuning subsystem is public surface: the
+    CommConfig.tuner hook's provider (Tuner.measured_cost), the cache
+    the driver persists beside checkpoints, and the fit/backend entry
+    points are all named by drivers, benches and CI legs."""
+    import repro.tuning as tuning
+    assert set(tuning.__all__) == EXPECTED_TUNING_EXPORTS
+    for name in EXPECTED_TUNING_EXPORTS:
+        assert hasattr(tuning, name), name
+    for name, sig in EXPECTED_TUNING_SIGNATURES.items():
+        got = str(inspect.signature(getattr(tuning, name)))
+        assert got == sig, (name, got)
+    # the hook contract select() relies on: seconds-or-None per cell
+    assert str(inspect.signature(tuning.Tuner.measured_cost)) == \
+        "(self, collective: 'str', strategy: 'str', n: 'int', N: 'int', " \
+        "payload_bytes: 'int') -> 'Optional[float]'"
 
 
 def test_auto_eligibility_locked():

@@ -455,8 +455,8 @@ def test_bench_schema_flags_missing_strategy():
     assert REQUIRED_FAMILIES == set(block_stack_families())
     row = {"strategy": "native", "selected": "native", "num_buckets": 0,
            "avg_us": 1.0, "min_us": 1.0, "max_abs_err_vs_native": 0.0,
-           "model_pred_us": 1.0, "hlo_concurrent": False,
-           "hlo_concurrent_pairs": 0}
+           "model_pred_us": 1.0, "predicted_us": None,
+           "hlo_concurrent": False, "hlo_concurrent_pairs": 0}
     frow = {"family": "dense", "arch": "a", "layer_elems": 1,
             "extra_elems": 1, "num_layers": 1, "num_blocks": 1,
             "avg_us": 1.0, "min_us": 1.0, "gather_exact": True,
@@ -464,6 +464,7 @@ def test_bench_schema_flags_missing_strategy():
     doc = {"mesh": "2x4", "payload_elems": 1, "payload_bytes": 4,
            "auto_num_buckets": 1, "cost_model": {}, "smoke": True,
            "reps": 1, "hlo_per_computation": {}, "structure_ok": True,
+           "tuning_cache": None,
            "strategies_registered": sorted(REQUIRED_STRATEGIES - {"auto"}),
            "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES],
            "families_registered": sorted(REQUIRED_FAMILIES),
@@ -498,3 +499,21 @@ def test_bench_schema_flags_missing_strategy():
     broken_f = dict(doc, family_results=[dict(doc["family_results"][0])])
     del broken_f["family_results"][0]["gather_exact"]
     assert any("family_results[0] missing" in e for e in check(broken_f))
+    # with a tuning cache present, the auto row's selected strategy must
+    # equal the argmin of the MEASURED (predicted_us) auto-eligible rows
+    from benchmarks.check_bench_schema import AUTO_ELIGIBLE
+    assert set(AUTO_ELIGIBLE) == {"native", "lane", "lane_pipelined"}
+    pred = {"native": 2.0, "lane": 1.0, "lane_pipelined": 3.0}
+    tuned = dict(doc, tuning_cache="tuning_cache.json",
+                 results=[dict(r, predicted_us=pred.get(r["strategy"]),
+                               selected=("lane" if r["strategy"] == "auto"
+                                         else r["selected"]))
+                          for r in doc["results"]])
+    assert check(tuned) == []
+    mis = dict(tuned, results=[dict(r, selected="native")
+                               if r["strategy"] == "auto" else r
+                               for r in tuned["results"]])
+    assert any("argmin" in e for e in check(mis))
+    nopred = dict(tuned, results=[dict(r, predicted_us=None)
+                                  for r in tuned["results"]])
+    assert any("predicted_us" in e for e in check(nopred))

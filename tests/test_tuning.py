@@ -1,0 +1,391 @@
+"""Tier-1 coverage of the measured-cost tuning subsystem (repro.tuning).
+
+Everything here runs on the main pytest process's single CPU device:
+the table/store/fit layers are device-free, the dispatch tests trace on
+a 1×1 mesh, and the one real probe runs three tiny cells.  The key
+contracts under test (ISSUE acceptance):
+
+  * a planted timing cache CONTRADICTING the spec-sheet model flips the
+    recorded auto Selection (measured costs actually drive dispatch);
+  * the cache round-trips through save → load → save bit-identically;
+  * a stale topology signature or corrupt cache degrades dispatch to
+    the closed-form model — never crashes it;
+  * the fitter recovers known alpha/beta from synthetic timings.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.costmodel import HW, get_hw, set_hw
+from repro.core.lane import LaneTopology
+from repro.comm import CommConfig, LaneComm
+from repro.tuning import (
+    DEFAULT_TOLERANCE, TimingEntry, TimingTable, Tuner, TuningCacheError,
+    apply_backend_setup, build_report, design_row, fit_hw,
+    load_timing_table, load_timing_table_or_none, merge_xla_flags,
+    parse_topology_signature, payload_bucket, probe_cells,
+    save_timing_table, topology_signature, xla_flags_for,
+)
+
+
+def _entry(coll, strat, sig, payload, med, **kw):
+    return TimingEntry(coll, strat, sig, payload, med,
+                       kw.pop("min_us", med), kw.pop("reps", 3))
+
+
+# ---------------------------------------------------------------------------
+# table: buckets, signatures, lookup interpolation
+# ---------------------------------------------------------------------------
+
+def test_payload_bucket():
+    assert payload_bucket(1) == 1
+    assert payload_bucket(2) == 2
+    assert payload_bucket(3) == 4
+    assert payload_bucket(4096) == 4096
+    assert payload_bucket(4097) == 8192
+    assert payload_bucket(0) == 1        # degenerate payloads clamp
+
+
+def test_topology_signature_roundtrip():
+    sig = topology_signature(4, 2, platform="cpu", device_kind="host x")
+    assert sig == "cpu/host_x/n4xN2"
+    assert parse_topology_signature(sig) == (4, 2)
+    with pytest.raises(ValueError, match="malformed"):
+        parse_topology_signature("cpu/host/whatever")
+
+
+def test_lookup_interpolation():
+    sig = "cpu/cpu/n2xN2"
+    t = TimingTable([_entry("grad_sync", "lane", sig, 1 << 12, 100.0),
+                     _entry("grad_sync", "lane", sig, 1 << 16, 1600.0)])
+    # exact probed sizes
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 12) == 100.0
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 16) == 1600.0
+    # log-log midpoint of (2^12, 100) .. (2^16, 1600) = (2^14, 400)
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 14) == \
+        pytest.approx(400.0, rel=1e-6)
+    # within 2x beyond either end: linear byte scaling
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 17) == \
+        pytest.approx(3200.0, rel=1e-6)
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 11) == \
+        pytest.approx(50.0, rel=1e-6)
+    # outside the trusted margin, or the wrong cell: a miss
+    assert t.lookup_us("grad_sync", "lane", sig, 1 << 20) is None
+    assert t.lookup_us("grad_sync", "native", sig, 1 << 12) is None
+    assert t.lookup_us("grad_sync", "lane", "cpu/cpu/n1xN1", 1 << 12) is None
+
+
+def test_measure_once_put_and_merge():
+    sig = "cpu/cpu/n2xN2"
+    t = TimingTable()
+    assert t.put(_entry("grad_sync", "lane", sig, 4096, 10.0))
+    # same cell (same bucket) measured again: first one is committed
+    assert not t.put(_entry("grad_sync", "lane", sig, 4096, 99.0))
+    assert t.lookup_us("grad_sync", "lane", sig, 4096) == 10.0
+    other = TimingTable([_entry("grad_sync", "lane", sig, 4096, 99.0),
+                         _entry("grad_sync", "native", sig, 4096, 7.0)])
+    assert t.merge(other) == 1           # only the new cell lands
+    assert t.lookup_us("grad_sync", "lane", sig, 4096) == 10.0
+    assert len(t) == 2
+
+
+# ---------------------------------------------------------------------------
+# store: bit-identical round-trip + corruption fallback
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_bit_identical(tmp_path):
+    sig = topology_signature(2, 2, platform="cpu", device_kind="cpu")
+    t = TimingTable([
+        _entry("grad_sync", "native", sig, 4096, 123.45, min_us=100.0),
+        _entry("grad_sync", "lane", sig, 4096, 222.5),
+        _entry("allreduce", "lane_pipelined", sig, 1 << 15, 999.0),
+    ])
+    p = save_timing_table(tmp_path / "cache.json", t)
+    restored = load_timing_table(p)
+    assert restored.to_doc() == t.to_doc()
+    p2 = save_timing_table(tmp_path / "cache2.json", restored)
+    assert p2.read_bytes() == p.read_bytes()
+    # and through the checkpoint-directory pattern: save-over is stable
+    p3 = save_timing_table(p, restored)
+    assert p3.read_bytes() == p2.read_bytes()
+
+
+def test_corrupt_cache_never_crashes_dispatch(tmp_path):
+    path = tmp_path / "cache.json"
+    t = TimingTable([_entry("grad_sync", "lane", "cpu/cpu/n1xN1",
+                            4096, 10.0)])
+    save_timing_table(path, t)
+    doc = json.loads(path.read_text())
+    doc["payload"]["entries"][0]["median_us"] = 1e9   # rot a field
+    path.write_text(json.dumps(doc))
+    with pytest.raises(TuningCacheError, match="crc32"):
+        load_timing_table(path)
+    assert load_timing_table_or_none(path) is None
+    path.write_text("{not json")
+    assert load_timing_table_or_none(path) is None
+    with pytest.raises(TuningCacheError, match="unreadable"):
+        load_timing_table(path)
+    assert load_timing_table_or_none(tmp_path / "absent.json") is None
+    # version skew is a schema failure, not a crash
+    save_timing_table(path, t)
+    doc = json.loads(path.read_text())
+    doc["payload"]["version"] = 999
+    import zlib
+    body = json.dumps(doc["payload"], sort_keys=True,
+                      separators=(",", ":"))
+    doc["crc32"] = zlib.crc32(body.encode())
+    path.write_text(json.dumps(doc))
+    with pytest.raises(TuningCacheError, match="version"):
+        load_timing_table(path)
+    # the dispatch-facing hook swallows even a broken table object
+    class Boom:
+        def lookup_us(self, *a):
+            raise RuntimeError("rotten")
+    tn = Tuner(Boom(), platform="cpu", device_kind="cpu")
+    assert tn.measured_cost("grad_sync", "lane", 1, 1, 4096) is None
+
+
+# ---------------------------------------------------------------------------
+# dispatch: measured costs outrank the model; stale signatures fall back
+# ---------------------------------------------------------------------------
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("pod", "data"))
+
+
+def _trace_grad_sync(comm, mesh, elems=64):
+    """Trace (not run) one auto grad_sync; returns the recorded Selection."""
+    def f(g):
+        return comm.grad_sync(g)
+    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+                               out_specs=P(), check_vma=False))
+    x = np.zeros((elems,), np.float32)
+    fn.lower(jax.device_put(x, NamedSharding(mesh, P(("pod", "data")))))
+    return comm.last_selection
+
+
+def test_planted_cache_flips_selection():
+    """THE acceptance test: a timing cache contradicting the spec-sheet
+    model must flip the recorded auto Selection to the measured winner.
+
+    On the 1×1 mesh the closed-form model ranks lane_pipelined LAST
+    (its pipeline pays pure latency; native/lane cost ~0 there), so a
+    cache that measured lane_pipelined fastest is a direct
+    contradiction — dispatch must follow the measurement.
+    """
+    mesh = _mesh11()
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    sig = topology_signature(1, 1)       # live-backend platform fields
+    payload = 64 * 4
+    table = TimingTable([
+        _entry("grad_sync", "lane_pipelined", sig, payload, 5.0),
+        _entry("grad_sync", "native", sig, payload, 300.0),
+        _entry("grad_sync", "lane", sig, payload, 400.0),
+    ])
+    # control: model-only dispatch does NOT pick lane_pipelined
+    sel0 = _trace_grad_sync(
+        LaneComm(topo, CommConfig(), mesh=mesh), mesh)
+    assert sel0.source == "model"
+    assert sel0.strategy != "lane_pipelined"
+    # with the cache: measured ranking, measured winner
+    comm = LaneComm(topo, CommConfig(tuner=Tuner(table)), mesh=mesh)
+    sel = _trace_grad_sync(comm, mesh)
+    assert sel.strategy == "lane_pipelined"
+    assert sel.source == "measured"
+    assert sel.ranking[0] == (pytest.approx(5e-6), "lane_pipelined")
+    # ranking stays ((seconds, strategy), ...) 2-tuples for consumers
+    for t, s in sel.ranking:
+        assert isinstance(t, float) and isinstance(s, str)
+
+
+def test_partial_cache_measured_tier_wins():
+    """Measure-once-then-commit: one measured cell outranks every
+    closed-form cell even when its seconds are larger."""
+    mesh = _mesh11()
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    sig = topology_signature(1, 1)
+    table = TimingTable([
+        _entry("grad_sync", "lane_pipelined", sig, 64 * 4, 10_000.0)])
+    comm = LaneComm(topo, CommConfig(tuner=Tuner(table)), mesh=mesh)
+    sel = _trace_grad_sync(comm, mesh)
+    assert sel.strategy == "lane_pipelined"
+    assert sel.source == "measured"
+    # the unmeasured cells are recorded as misses for the next probe
+    missed = {s for _, s, *_ in comm.cfg.tuner.misses}
+    assert missed == {"native", "lane"}
+
+
+def test_stale_topology_signature_falls_back_to_model():
+    """A cache probed on another topology (or backend) must not match:
+    dispatch silently degrades to the closed-form model."""
+    mesh = _mesh11()
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    stale_sig = topology_signature(4, 2, platform="cpu", device_kind="cpu")
+    table = TimingTable([
+        _entry("grad_sync", "lane_pipelined", stale_sig, 64 * 4, 5.0)])
+    comm = LaneComm(topo, CommConfig(tuner=Tuner(table)), mesh=mesh)
+    sel = _trace_grad_sync(comm, mesh)
+    assert sel.source == "model"
+    assert sel.strategy != "lane_pipelined"
+
+
+def test_probe_fills_table_and_drives_dispatch():
+    """The real probe on the 1×1 mesh: every auto-eligible grad_sync
+    cell lands in the table and subsequent dispatch is measured."""
+    mesh = _mesh11()
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    table = probe_cells(mesh, topo, collectives=("grad_sync",),
+                        ladder=(1 << 10,), reps=2, warmup=1,
+                        verbose=False)
+    assert {e.strategy for e in table.entries()} == \
+        {"native", "lane", "lane_pipelined"}
+    assert all(e.median_us > 0 and e.min_us <= e.median_us
+               for e in table.entries())
+    # measure-once: a second probe pass adds nothing
+    n0 = len(table)
+    probe_cells(mesh, topo, collectives=("grad_sync",), ladder=(1 << 10,),
+                reps=2, warmup=1, table=table, verbose=False)
+    assert len(table) == n0
+    comm = LaneComm(topo, CommConfig(tuner=Tuner(table)), mesh=mesh)
+    sel = _trace_grad_sync(comm, mesh, elems=(1 << 10) // 4)
+    assert sel.source == "measured"
+
+
+# ---------------------------------------------------------------------------
+# fit: recover known constants from synthetic timings
+# ---------------------------------------------------------------------------
+
+def test_fitter_recovers_known_hw():
+    true = HW(alpha_ici=3e-6, ici_bw=40e9, alpha_dcn=25e-6, dcn_bw=20e9)
+    x = np.array([true.alpha_ici, 1 / true.ici_bw,
+                  true.alpha_dcn, 1 / true.dcn_bw])
+    sig = topology_signature(4, 2, platform="cpu", device_kind="cpu")
+    entries = []
+    for payload in (1 << 12, 1 << 15, 1 << 18):
+        for strat in ("native", "lane", "lane_pipelined"):
+            us = float(design_row("grad_sync", strat, 4, 2, payload)
+                       @ x) * 1e6
+            entries.append(_entry("grad_sync", strat, sig, payload, us))
+    fit = fit_hw(TimingTable(entries))
+    assert fit.params["alpha_ici"] == pytest.approx(3e-6, rel=1e-3)
+    assert fit.params["alpha_dcn"] == pytest.approx(25e-6, rel=1e-3)
+    assert fit.hw.ici_bw == pytest.approx(40e9, rel=1e-3)
+    assert fit.hw.dcn_bw == pytest.approx(20e9, rel=1e-3)
+    assert fit.residual_rms_us == pytest.approx(0.0, abs=1e-3)
+    assert fit.num_cells == 9 and len(fit.cells) == 9
+
+
+def test_fit_is_clamped_and_degenerate_safe():
+    # one cell cannot identify four parameters; the solution must still
+    # come back positive (clamped), never negative or zero
+    sig = topology_signature(2, 2, platform="cpu", device_kind="cpu")
+    fit = fit_hw(TimingTable([_entry("grad_sync", "native", sig,
+                                     4096, 50.0)]))
+    assert all(v > 0 for v in fit.params.values())
+    assert fit.hw.ici_bw > 0 and fit.hw.dcn_bw > 0
+    with pytest.raises(ValueError, match="no fittable cells"):
+        fit_hw(TimingTable())
+
+
+def test_active_hw_reprices_costs():
+    """set_hw flows into the closed-form costs at CALL time (the fitted
+    constants reprice every ranking without re-registering anything)."""
+    from repro.comm.costs import native_cost
+    c = native_cost("allreduce")
+    base = c(4, 2, 1 << 20, CommConfig())
+    prev = set_hw(dataclasses.replace(get_hw(), dcn_bw=get_hw().dcn_bw / 4))
+    try:
+        assert c(4, 2, 1 << 20, CommConfig()) > base * 2
+    finally:
+        set_hw(prev)
+    assert c(4, 2, 1 << 20, CommConfig()) == pytest.approx(base)
+
+
+# ---------------------------------------------------------------------------
+# guideline report + backend setup
+# ---------------------------------------------------------------------------
+
+def test_build_report_flags_violations():
+    sig = topology_signature(2, 2, platform="cpu", device_kind="cpu")
+    ok_t = TimingTable([
+        _entry("grad_sync", "native", sig, 4096, 100.0),
+        _entry("grad_sync", "lane", sig, 4096, 150.0),
+        _entry("allreduce", "native", sig, 4096, 100.0),
+        _entry("allreduce", "lane", sig, 4096, 90.0),
+    ])
+    rep = build_report(ok_t, tolerance=2.0)
+    assert rep["ok"] and rep["violations"] == 0
+    cells = {c["collective"]: c for c in rep["cells"]}
+    assert not cells["grad_sync"]["beats_native"]
+    assert cells["allreduce"]["beats_native"]
+    assert cells["allreduce"]["best_strategy"] == "lane"
+    bad = TimingTable([
+        _entry("grad_sync", "native", sig, 4096, 100.0),
+        _entry("grad_sync", "lane", sig, 4096, 500.0),
+    ])
+    rep = build_report(bad, tolerance=2.0)
+    assert not rep["ok"] and rep["violations"] == 1
+    assert rep["cells"][0]["status"] == "violation"
+    assert DEFAULT_TOLERANCE >= 1.0
+
+
+def test_backend_setup_merge_idempotent():
+    assert xla_flags_for("cpu", host_device_count=8) == \
+        {"--xla_force_host_platform_device_count": "8"}
+    assert xla_flags_for("tpu") == {}
+    gpu = xla_flags_for("gpu")
+    assert gpu["--xla_gpu_enable_async_collectives"] == "true"
+    assert gpu["--xla_gpu_enable_latency_hiding_scheduler"] == "true"
+    with pytest.raises(ValueError, match="unknown platform"):
+        xla_flags_for("quantum")
+    merged = merge_xla_flags(
+        "--user_flag=1 --xla_force_host_platform_device_count=2",
+        {"--xla_force_host_platform_device_count": "8"})
+    assert merged == \
+        "--user_flag=1 --xla_force_host_platform_device_count=8"
+    # idempotent: applying the same flags twice changes nothing
+    assert merge_xla_flags(
+        merged, {"--xla_force_host_platform_device_count": "8"}) == merged
+    env = {}
+    out = apply_backend_setup("cpu", host_device_count=8, env=env)
+    assert env["XLA_FLAGS"] == out
+    assert apply_backend_setup("cpu", host_device_count=8, env=env) == out
+
+
+# ---------------------------------------------------------------------------
+# extras pseudo-layer prefetch resolution (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_extras_prefetch_gets_own_resolution():
+    from repro.models.blockstack import (resolve_extras_prefetch_blocks,
+                                         resolve_prefetch_blocks)
+    n, N = 4, 2
+    big = 1 << 24                        # a vocab·d-sized extras row
+    model_b = resolve_prefetch_blocks(big, n, N, 0)
+    assert model_b > 2                   # cost model wants real depth here
+    # a positive override tuned for the LAYER stack is not inherited:
+    # extras resolves from its own payload
+    assert resolve_extras_prefetch_blocks(big, n, N, 2) == model_b
+    assert resolve_prefetch_blocks(big, n, N, 2) == 2
+    # the blocking negative control still reaches the extras gather
+    assert resolve_extras_prefetch_blocks(big, n, N, -1) == 1
+    assert resolve_extras_prefetch_blocks(big, n, N, 0) == model_b
+
+
+def test_shard_stack_extras_uses_own_resolution():
+    import jax.numpy as jnp
+    from repro.models.blockstack import (resolve_extras_prefetch_blocks,
+                                         shard_stack, stack_layout)
+    extras = {"w": jnp.arange(64.0), "b": jnp.arange(8.0)}
+    lay = stack_layout(extras, stacked=False)
+    _, B = shard_stack(extras, 2, 2, fsdp_prefetch=3, stacked=False)
+    assert B == resolve_extras_prefetch_blocks(lay.row_elems, 2, 2, 3)
+    assert B == 1                        # model-resolved, not the layer 3
+    stacked = {"w": jnp.zeros((2, 64)), "b": jnp.zeros((2, 8))}
+    _, Bs = shard_stack(stacked, 2, 2, fsdp_prefetch=3)
+    assert Bs == 3                       # the layer stack keeps overrides
