@@ -44,6 +44,15 @@
 #                   so a strategy the driver can't actually serve fails
 #                   the build (the strategy list derives from the
 #                   registry; incl. auto and the ZeRO layouts)
+#   lint          — lanelint (repro.analysis): lowers EVERY registered
+#                   (collective, strategy) cell plus the train/serve
+#                   step builders on the 8-host-device grid and checks
+#                   the R1-R4 communication invariants against the
+#                   closed-form algebra, then runs the A1-A4
+#                   architectural AST rules over src/repro/**; exit 1
+#                   on any unsuppressed finding (suppressions live in
+#                   lint_baseline.json, each with a justification),
+#                   exit 2 if the lint itself breaks
 #   serve-smoke   — drives the SERVING TIER (repro.serve) end to end:
 #                   the registry-derived scenario generator through the
 #                   continuous batcher for a bucketed and an exact-
@@ -58,7 +67,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci tier1 props-det api-surface tune-smoke bench-smoke bench \
-	bench-schema train-smoke fault-smoke serve-smoke test
+	bench-schema train-smoke fault-smoke serve-smoke lint test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -113,5 +122,9 @@ fault-smoke:
 serve-smoke:
 	$(PY) -m repro.serve.serve_smoke
 
-ci: tier1 props-det api-surface tune-smoke bench-smoke bench-schema \
+# sets its own 8-device flag internally (before jax import)
+lint:
+	$(PY) -m repro.analysis.lint
+
+ci: tier1 props-det api-surface lint tune-smoke bench-smoke bench-schema \
 	train-smoke fault-smoke serve-smoke

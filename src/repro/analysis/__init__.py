@@ -1,0 +1,39 @@
+"""repro.analysis — lanelint: static communication-invariant analysis.
+
+Two layers over one diagnostics/baseline spine (DESIGN.md §12):
+
+* ``footprint`` — the shared HLO parse/accounting core (moved up from
+  ``launch/hlo_stats``) plus the per-level communication footprint:
+  every collective op classified node/lane/global/mixed with
+  trip-corrected wire bytes.
+* ``rules`` — R1 level-disjointness, R2 payload conservation, R3
+  guideline consistency, R4 overlap shape, over every registered
+  ``(collective, strategy)`` cell and the composed step builders.
+* ``astlint`` — A1 raw-collective containment, A2 no user-facing bare
+  asserts, A3 seeded-determinism hygiene, A4 priced-or-opted-out
+  registry cells.
+* ``lint`` — the CLI (``python -m repro.analysis.lint``, ``make
+  lint``): exit 0 clean / 1 findings / 2 internal error.
+
+Import cost: this package root is jax-free; the HLO layer imports jax
+lazily AFTER installing the host-device XLA flags.
+"""
+from .baseline import (apply_baseline, default_baseline_path,
+                       load_baseline, save_baseline)
+from .diagnostics import ERROR, WARNING, Finding, format_findings
+from .footprint import (CollOp, CommFootprint, analyze,
+                        collective_compute_concurrency,
+                        collective_concurrency, collective_kind_counts,
+                        comm_footprint, group_info, parse_hlo,
+                        permute_edges, replica_groups,
+                        scan_carried_concurrency)
+
+__all__ = [
+    "Finding", "ERROR", "WARNING", "format_findings",
+    "load_baseline", "save_baseline", "apply_baseline",
+    "default_baseline_path",
+    "CollOp", "CommFootprint", "comm_footprint", "analyze",
+    "collective_kind_counts", "collective_concurrency",
+    "collective_compute_concurrency", "scan_carried_concurrency",
+    "group_info", "parse_hlo", "replica_groups", "permute_edges",
+]

@@ -1,0 +1,243 @@
+"""lanelint layer 2 — architectural AST rules over ``src/repro/**``.
+
+Where layer 1 proves the LOWERED communication is the paper's, this
+layer keeps the SOURCE honest about how it gets there:
+
+  A1  no raw collectives outside the communication layers — every
+      ``lax.psum``/``ppermute``/``all_gather``/…/``shard_map`` call site
+      must live in ``comm/``, ``core/``, ``testing/`` or the explicit
+      whitelist below.  Everything else goes through ``LaneComm`` so the
+      registry/dispatch/lint machinery sees it.
+  A2  no user-facing control flow on bare ``assert`` — ``python -O``
+      strips asserts, so input validation must raise.  (Trace-time shape
+      checks in the reference layer and test harnesses are exempt.)
+  A3  no wall-clock or unseeded randomness in the seeded-determinism
+      modules (``serve/sampling``, ``runtime/faults``, ``data/``):
+      ``time.time*``, legacy ``numpy.random.*`` globals and a zero-arg
+      ``default_rng()`` all break replay.
+  A4  every ``register_impl`` cell is priced or explicitly opts out:
+      the call must pass ``cost=`` or a literal ``auto_ok=False`` —
+      an unpriced auto-eligible cell would silently never win (or worse,
+      win by registration-order accident) in auto dispatch.
+
+Pure stdlib ``ast`` — no jax import, so the AST leg runs anywhere in
+milliseconds.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, Optional
+
+from .diagnostics import Finding
+
+__all__ = ["run_ast_rules", "iter_source_files", "lint_file",
+           "RAW_COLLECTIVES", "A1_ALLOWED_DIRS", "A1_FILE_WHITELIST",
+           "A2_EXEMPT", "A3_SCOPE"]
+
+#: jax.lax (and jax.) names A1 treats as raw collective machinery
+RAW_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+    "psum_scatter", "pbroadcast", "all_gather", "all_to_all",
+    "axis_index", "shard_map",
+})
+
+#: directories (relative to the repro package) allowed raw collectives
+A1_ALLOWED_DIRS = ("comm", "core", "testing")
+
+#: file → why it may touch raw collectives / shard_map
+A1_FILE_WHITELIST = {
+    "compat.py": "jax version shim: re-exports shard_map itself",
+    "launch/steps.py": "step assembly: shard_map wrapping and the "
+                       "scalar loss/grad-norm reductions of the step "
+                       "skeleton (payload comm goes through LaneComm)",
+    "launch/train.py": "driver: wraps the built step in shard_map",
+    "launch/sharding.py": "sharding audit: reads axis_index to label "
+                          "placements, moves no payload",
+    "optim/gradsync.py": "gradient-sync stage library: the node/lane "
+                         "stage primitives the registry cells compose",
+    "runtime/straggler.py": "quorum machinery: masked psum votes are "
+                            "the fault-detection protocol itself",
+    "serve/steps.py": "serving step assembly: shard_map wrapping only",
+    "tuning/probe.py": "probe harness: shard_map wrapping of registry "
+                       "cells under measurement",
+    "analysis/rules.py": "the lint's own cell-lowering harness",
+    "analysis/steps.py": "the lint's own step-lowering harness",
+}
+
+#: files/dirs exempt from A2 (bare asserts fine: never ships user input)
+A2_EXEMPT = ("testing", "core/ref.py", "analysis")
+
+#: seeded-determinism scope for A3
+A3_SCOPE = ("serve/sampling.py", "runtime/faults.py", "data")
+
+_TIME_BANNED = frozenset({"time", "time_ns"})
+
+
+def _pkg_root() -> str:
+    """Absolute path of the ``repro`` package directory."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _under(rel: str, prefixes: Iterable[str]) -> bool:
+    for p in prefixes:
+        if rel == p or rel.startswith(p.rstrip("/") + "/"):
+            return True
+    return False
+
+
+def iter_source_files(root: Optional[str] = None):
+    """(abs_path, package-relative posix path) of every repro module."""
+    root = root or _pkg_root()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            ap = os.path.join(dirpath, fn)
+            yield ap, os.path.relpath(ap, root).replace(os.sep, "/")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jax.lax.psum', …)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _lax_imported_names(tree: ast.Module) -> set:
+    """Collective names this module imported DIRECTLY from jax.lax /
+    jax (``from jax.lax import psum`` / ``from jax import shard_map``),
+    so bare-name calls can be attributed."""
+    out: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) \
+                and node.module in ("jax.lax", "jax"):
+            for a in node.names:
+                if a.name in RAW_COLLECTIVES:
+                    out.add(a.asname or a.name)
+    return out
+
+
+def _check_a1(tree: ast.Module, rel: str, target_file: str) -> list:
+    if _under(rel, A1_ALLOWED_DIRS) or rel in A1_FILE_WHITELIST:
+        return []
+    bare = _lax_imported_names(tree)
+    hits: dict = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = None
+        if isinstance(node.func, ast.Attribute):
+            dotted = _dotted(node.func)
+            head, _, leaf = dotted.rpartition(".")
+            if leaf in RAW_COLLECTIVES and (
+                    head in ("lax", "jax", "jax.lax")
+                    or head.endswith(".lax")):
+                name = leaf
+        elif isinstance(node.func, ast.Name) and node.func.id in bare:
+            name = node.func.id
+        if name:
+            hits.setdefault(name, []).append(node.lineno)
+    return [
+        Finding("A1", f"{target_file}#{name}",
+                f"raw collective `{name}` called at line(s) "
+                f"{sorted(lines)} outside comm/core/testing and the "
+                f"whitelist — route it through LaneComm so dispatch, "
+                f"tuning and lanelint all see it")
+        for name, lines in sorted(hits.items())]
+
+
+def _check_a2(tree: ast.Module, rel: str, target_file: str) -> list:
+    if _under(rel, A2_EXEMPT):
+        return []
+    lines = [n.lineno for n in ast.walk(tree)
+             if isinstance(n, ast.Assert)]
+    if not lines:
+        return []
+    return [Finding(
+        "A2", f"{target_file}#assert",
+        f"bare assert at line(s) {sorted(lines)} — `python -O` strips "
+        f"asserts, so validation that guards user-facing behavior must "
+        f"raise (ValueError/RuntimeError) instead")]
+
+
+def _check_a3(tree: ast.Module, rel: str, target_file: str) -> list:
+    if not _under(rel, A3_SCOPE):
+        return []
+    hits: dict = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        head, _, leaf = dotted.rpartition(".")
+        if head == "time" and leaf in _TIME_BANNED:
+            hits.setdefault(dotted, []).append(node.lineno)
+            continue
+        # jax.random is SEEDED functional randomness — exactly right;
+        # the ban is the stdlib global RNG and numpy's legacy globals
+        legacy = head in ("np.random", "numpy.random", "random")
+        if legacy and leaf == "default_rng":
+            if not node.args and not node.keywords:
+                hits.setdefault(dotted + "()", []).append(node.lineno)
+        elif legacy:
+            hits.setdefault(dotted, []).append(node.lineno)
+    return [
+        Finding("A3", f"{target_file}#{name}",
+                f"`{name}` at line(s) {sorted(lines)} in a "
+                f"seeded-determinism module — wall-clock/unseeded "
+                f"randomness breaks replay; thread an explicit seed or "
+                f"clock through the call")
+        for name, lines in sorted(hits.items())]
+
+
+def _check_a4(tree: ast.Module, rel: str, target_file: str) -> list:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted.rpartition(".")[2] != "register_impl":
+            continue
+        cell = "/".join(
+            a.value for a in node.args[:2]
+            if isinstance(a, ast.Constant) and isinstance(a.value, str))
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        priced = "cost" in kw
+        opted_out = isinstance(kw.get("auto_ok"), ast.Constant) \
+            and kw["auto_ok"].value is False
+        if not (priced or opted_out):
+            out.append(Finding(
+                "A4", f"{target_file}#{cell or 'register_impl'}",
+                f"register_impl({cell or '?'}) at line {node.lineno} "
+                f"has neither cost= nor a literal auto_ok=False — an "
+                f"unpriced auto-eligible cell wins or loses dispatch by "
+                f"registration-order accident"))
+    return out
+
+
+def lint_file(abs_path: str, rel: str, *, src_prefix: str) -> list:
+    with open(abs_path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=abs_path)
+    except SyntaxError as e:
+        return [Finding("A0", f"{src_prefix}{rel}",
+                        f"unparseable module: {e}")]
+    target_file = f"{src_prefix}{rel}"
+    return (_check_a1(tree, rel, target_file)
+            + _check_a2(tree, rel, target_file)
+            + _check_a3(tree, rel, target_file)
+            + _check_a4(tree, rel, target_file))
+
+
+def run_ast_rules(root: Optional[str] = None) -> list:
+    """A1–A4 over every module of the repro package."""
+    findings = []
+    for abs_path, rel in iter_source_files(root):
+        findings += lint_file(abs_path, rel, src_prefix="src/repro/")
+    return findings

@@ -1,0 +1,941 @@
+"""Shared HLO analysis core: parsing, trip-corrected accounting, structural
+concurrency, and the per-level communication footprint behind lanelint.
+
+This module is the home of what used to live in ``launch/hlo_stats.py``
+(which now re-exports from here for back-compat):
+
+  * exact-ish HLO accounting — dot FLOPs, HBM-traffic bytes, collective
+    bytes, with while-loop bodies multiplied by their known trip counts
+    (``analyze``, ``collective_kind_counts``);
+  * structural concurrency proofs for the §5 pipelines
+    (``collective_concurrency``, ``collective_compute_concurrency``);
+
+plus the **communication footprint** layer the static lint rules run on:
+``comm_footprint`` walks a lowered module and returns every executed
+collective op classified by *communication level* under the repo's
+device-id convention (``global_rank = lane_rank·n + node_rank``):
+
+  ``"node"``    every member of the replica group lives in one pod
+                (ICI traffic) — a §3 node-communicator op;
+  ``"lane"``    the group holds at most one member per pod (DCN
+                traffic) — a lane-communicator op;
+  ``"global"``  the group covers every device (the native/whole-machine
+                collective, or a rooted-collective psum emulation);
+  ``"mixed"``   anything else — a group that straddles pods without
+                covering the machine.  This is exactly the shape the R1
+                level-disjointness rule forbids: some of its edges are
+                intra-pod and some cross-pod, so the node and lane
+                communicators would share an edge.
+
+Footprint wire-byte conventions (per op, per execution, ring algorithms,
+g = group size) differ deliberately from the legacy ``analyze`` model in
+one place and are the closed forms ``comm/costs.py:lowered_wire_volumes``
+is written against:
+
+  all-reduce       2·(g−1)/g · result_bytes
+  all-gather         (g−1)/g · result_bytes   (result = the gathered buf)
+  reduce-scatter     (g−1)   · result_bytes   (result = one SHARD — each
+                                               chip forwards g−1 shard-
+                                               sized partials)
+  all-to-all         (g−1)/g · result_bytes
+  collective-permute           result_bytes   (one hop, whole buffer)
+
+``analyze`` keeps its original reduce-scatter convention ((g−1)/g of the
+result) untouched — perf-regression baselines pin those totals.
+
+Why trip correction: ``compiled.cost_analysis()`` counts every while body
+exactly once (verified empirically — a 10-iteration scan reports 1
+iteration of FLOPs).  XLA:CPU annotates optimized while ops with
+``backend_config={"known_trip_count":{"n":...}}``, so executed totals are
+reconstructed by walking the call graph:
+
+  flops(comp)  = Σ own dot/conv flops + Σ_child mult(child) · flops(child)
+  mult = trip count for while bodies, 1 for fusions/calls/branches
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# type may be a tuple containing /*index=N*/ comments (hence '=') — match
+# lazily up to the first ')' that is followed by the op name.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:calls=|condition=|body=|to_apply=)%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_ALL_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?)*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(d) if d else _DTYPE_BYTES[dt]
+               for dt, d in _dims(type_str))
+
+
+def _elems_of(type_str: str) -> int:
+    return sum(math.prod(d) if d else 1 for dt, d in _dims(type_str))
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "line")
+
+    def __init__(self, name, type_str, op, line):
+        self.name, self.type_str, self.op, self.line = name, type_str, op, line
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs: list[Instr] = []
+        self.table: dict[str, str] = {}     # instr name -> type str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_START_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, op = m.group(1), m.group(2), m.group(3)
+            cur.instrs.append(Instr(name, type_str, op, line))
+            cur.table[name] = type_str
+    comps["__entry__"] = comps.get(entry) if entry else None
+    return comps
+
+
+def _operand_names(inst: Instr) -> list[str]:
+    """Raw operand names of one HLO instruction, in order.
+
+    Handles both operand dialects: bare ``op(%a, %b)`` and the typed
+    ``op(f32[8]{0} %a, f32[8]{0} %b)`` form compiled dumps use.  Only the
+    operand parenthesis group is scanned (balanced — tuple types nest), so
+    attribute refs like ``to_apply=%add`` are never picked up.
+    """
+    line = inst.line
+    try:
+        start = line.index(inst.op + "(") + len(inst.op)
+    except ValueError:
+        return []
+    seg = line[start:]
+    depth = 0
+    for k, ch in enumerate(line[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                seg = line[start:k + 1]
+                break
+    names = re.findall(r"%([\w.\-]+)", seg)
+    if not names:
+        # bare dialect: comma-split, strip types, keep name-ish tokens
+        names = [t.split()[-1] for t in seg.strip("()").split(",")
+                 if t.strip()]
+    return names
+
+
+def _dot_flops(inst: Instr, table: dict[str, str]) -> float:
+    out_elems = _elems_of(inst.type_str)
+    mc = _CONTRACT_RE.search(inst.line)
+    k = 1
+    if mc:
+        cdims = [int(x) for x in mc.group(1).split(",") if x]
+        names = _operand_names(inst)
+        lhs_t = table.get(names[0]) if names else None
+        if lhs_t:
+            d = _dims(lhs_t)
+            if d:
+                shape = d[0][1]
+                for c in cdims:
+                    if c < len(shape):
+                        k *= shape[c]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(inst: Instr, table: dict[str, str]) -> float:
+    # flops ≈ 2 · out_elems · (kernel spatial · in_channels); approximate
+    # via rhs (kernel) element count / out_channels
+    out_elems = _elems_of(inst.type_str)
+    names = _operand_names(inst)
+    k = 1
+    if len(names) >= 2 and names[1] in table:
+        d = _dims(table[names[1]])
+        if d:
+            k = max(1, math.prod(d[0][1]))
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(inst: Instr, table: dict[str, str]) -> int:
+    return sum(_bytes_of(table[nm]) for nm in _operand_names(inst)
+               if nm in table)
+
+
+def group_info(line: str, pod_size: int):
+    """(group_size, crosses_pod) from replica_groups, exact for both the
+    explicit {{...}} and the iota [G,S]<=[dims]T(perm) forms."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len(ids), len({i // pod_size for i in ids}) > 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as _np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = _np.arange(math.prod(dims)).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        rows = ids.reshape(g, s) // pod_size
+        return s, bool((rows.max(axis=1) != rows.min(axis=1)).any())
+    return 2, False
+
+
+def replica_groups(line: str,
+                   num_devices: Optional[int] = None) -> Optional[list]:
+    """EVERY replica group of one instruction line as id tuples, or None
+    when the line carries no ``replica_groups=`` attribute at all.
+
+    Handles the explicit ``{{0,1},{2,3}}`` form, the iota
+    ``[G,S]<=[dims]T(perm)`` form, and the degenerate ``{}`` (all devices
+    in one group — requires ``num_devices``; returns ``[()]`` when the
+    machine size is unknown so callers can still see "one global group").
+    """
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as _np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = _np.arange(math.prod(dims)).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        return [tuple(int(x) for x in row) for row in ids.reshape(g, s)]
+    m = _GROUPS_ALL_RE.search(line)
+    if m is None:
+        return None
+    inner = m.group(1)
+    if not inner.strip():
+        # replica_groups={}: one group of the whole machine
+        if num_devices:
+            return [tuple(range(num_devices))]
+        return [()]
+    return [tuple(int(x) for x in grp.split(",") if x)
+            for grp in re.findall(r"\{([\d,]*)\}", inner)]
+
+
+def permute_edges(line: str) -> Optional[list]:
+    """collective-permute ``source_target_pairs`` as (src, dst) tuples."""
+    mp = _PAIRS_RE.search(line)
+    if not mp:
+        return None
+    return [(int(a), int(b)) for a, b in
+            re.findall(r"\{(\d+),(\d+)\}", mp.group(1))]
+
+
+def _collective(inst: Instr, pod_size: int):
+    kind = inst.op.replace("-start", "")
+    if kind not in _COLL_KINDS:
+        return None
+    b = _bytes_of(inst.type_str)
+    g, dcn = group_info(inst.line, pod_size)
+    if kind == "collective-permute":
+        # source-target pairs, not groups: DCN iff ANY pair crosses pods
+        # (the braces nest — match the whole {{a,b},{c,d},...} list, not
+        # just up to the first '}')
+        pairs = permute_edges(inst.line)
+        if pairs:
+            dcn = any(a // pod_size != b2 // pod_size for a, b2 in pairs)
+    if kind == "all-reduce":
+        wire = 2 * (g - 1) / g * b
+    elif kind in ("all-gather", "all-to-all", "reduce-scatter"):
+        wire = (g - 1) / g * b
+    else:
+        wire = float(b)
+    return {"kind": kind, "bytes": float(b), "wire": wire, "group": g,
+            "dcn": dcn}
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "call",
+                   "after-all", "add-dependency"}
+
+# ops whose HBM traffic is a function of the RESULT (or update) size, not
+# the full operand buffers: a dynamic-slice of an (L, d, f) stacked weight
+# reads one layer's slice, not the whole stack — counting operands would
+# overcount loop-heavy models by ~L×.
+_RESULT_BYTES_OPS = {
+    "dynamic-slice": 2,      # read slice + write result
+    "slice": 2,
+    "gather": 2,
+    "reshape": 2,
+    "copy": 2,
+    "transpose": 2,
+    "convert": 2,
+    "broadcast": 1,          # reads a much smaller operand
+    "iota": 1,
+    "reverse": 2,
+    "pad": 2,
+    "concatenate": 2,
+}
+
+
+def _instr_bytes(inst: "Instr", table: dict[str, str]) -> float:
+    if inst.op in _RESULT_BYTES_OPS:
+        return _RESULT_BYTES_OPS[inst.op] * _bytes_of(inst.type_str)
+    if inst.op == "dynamic-update-slice":
+        # aliased in place: read+write the update operand only
+        names = _operand_names(inst)
+        if len(names) >= 2 and names[1] in table:
+            return 2.0 * _bytes_of(table[names[1]])
+        return 2.0 * _bytes_of(inst.type_str)
+    return _bytes_of(inst.type_str) + _operand_bytes(inst, table)
+
+
+def analyze(text: str, *, pod_size: int = 256) -> dict:
+    """Trip-corrected totals + per-loop-depth byte attribution.
+
+    ``bytes_depth`` maps while-nesting depth → HBM bytes.  Depth ≥ 3 in a
+    train step (µbatch × layer × attention-block scans) is the traffic a
+    fused Pallas kernel keeps in VMEM — the §Perf memory-term lever.
+    """
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    memo: dict[str, dict] = {}
+
+    def walk(comp: Computation, depth: int = 0) -> dict:
+        if (comp.name, depth) in memo:
+            return memo[(comp.name, depth)]
+        res = {"flops": 0.0, "bytes": 0.0, "bytes_depth": {},
+               "coll": {}, "coll_wire": 0.0, "dcn_wire": 0.0,
+               "ici_wire": 0.0, "coll_count": 0}
+        memo[(comp.name, depth)] = res  # cycle guard (HLO is acyclic)
+        def add_depth(d, b):
+            res["bytes_depth"][d] = res["bytes_depth"].get(d, 0.0) + b
+
+        for inst in comp.instrs:
+            if inst.op == "dot":
+                res["flops"] += _dot_flops(inst, comp.table)
+            elif inst.op == "convolution":
+                res["flops"] += _conv_flops(inst, comp.table)
+            c = _collective(inst, pod_size)
+            if c:
+                k = c["kind"]
+                rec = res["coll"].setdefault(k, {"count": 0, "bytes": 0.0,
+                                                 "wire_bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += c["bytes"]
+                rec["wire_bytes"] += c["wire"]
+                res["coll_wire"] += c["wire"]
+                res["coll_count"] += 1
+                if c["dcn"]:
+                    res["dcn_wire"] += c["wire"]
+                else:
+                    res["ici_wire"] += c["wire"]
+            if inst.op not in _SKIP_BYTES_OPS:
+                b = _instr_bytes(inst, comp.table)
+                res["bytes"] += b
+                add_depth(depth, b)
+            # recurse
+            mult = 1
+            depth_child = depth
+            children = []
+            if inst.op == "while":
+                mt = _TRIP_RE.search(inst.line)
+                mult = int(mt.group(1)) if mt else 1
+                depth_child = depth + 1
+                mb = re.search(r"body=%?([\w.\-]+)", inst.line)
+                if mb:
+                    children = [mb.group(1)]
+            elif inst.op in ("fusion", "call", "map", "reduce",
+                             "reduce-window", "sort", "scatter",
+                             "select-and-scatter", "all-reduce"):
+                children = _CALLED_RE.findall(inst.line)
+            elif inst.op == "conditional":
+                mb = _BRANCHES_RE.search(inst.line)
+                if mb:
+                    children = [c.strip().lstrip("%")
+                                for c in mb.group(1).split(",")]
+            for ch in children:
+                if ch in comps:
+                    sub = walk(comps[ch], depth_child)
+                    if inst.op == "fusion":
+                        # fusion: count internal dot flops (they execute)
+                        res["flops"] += mult * sub["flops"]
+                        # bytes already counted at the call site
+                    else:
+                        res["flops"] += mult * sub["flops"]
+                        res["bytes"] += mult * sub["bytes"]
+                        for d, b in sub["bytes_depth"].items():
+                            add_depth(d, mult * b)
+                    for k, rec in sub["coll"].items():
+                        dst = res["coll"].setdefault(
+                            k, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+                        dst["count"] += mult * rec["count"]
+                        dst["bytes"] += mult * rec["bytes"]
+                        dst["wire_bytes"] += mult * rec["wire_bytes"]
+                    res["coll_wire"] += mult * sub["coll_wire"]
+                    res["dcn_wire"] += mult * sub["dcn_wire"]
+                    res["ici_wire"] += mult * sub["ici_wire"]
+                    res["coll_count"] += mult * sub["coll_count"]
+        return res
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    out = dict(walk(entry))
+    out["computations"] = len(comps)
+    return out
+
+
+def collective_kind_counts(text: str, *, pod_size: int = 256) -> dict:
+    """Trip-corrected executed-op counts per collective kind for the
+    whole module (``{"all-gather": 12, ...}``; absent kinds are 0 via
+    ``.get``).  The backward re-gather and hybrid single-gather-per-layer
+    pins compare these counts across lowerings: a remat cell that
+    accidentally recomputes a weight gather, or a backward that is
+    SUPPOSED to re-gather, both show up as an all-gather count delta."""
+    res = analyze(text, pod_size=pod_size)
+    return {k: int(v["count"]) for k, v in res["coll"].items()}
+
+
+# ---------------------------------------------------------------------------
+# communication footprint: every executed collective, classified by level
+# ---------------------------------------------------------------------------
+
+#: footprint wire-byte conventions (see module docstring) — per op, per
+#: execution, as a function of (group size, RESULT bytes)
+def _footprint_wire(kind: str, g: int, result_bytes: float) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * result_bytes
+    if kind == "reduce-scatter":
+        return float(g - 1) * result_bytes
+    if kind == "all-to-all":
+        return (g - 1) / g * result_bytes
+    return float(result_bytes)             # collective-permute
+
+
+def classify_group(ids, *, n: int, num_devices: Optional[int] = None) -> str:
+    """Communication level of one replica group under the lane-major
+    device convention (pod of device g is ``g // n``).
+
+    "node" = one pod; "lane" = at most one member per pod; "global" =
+    the whole machine; "mixed" = straddles pods without covering them —
+    the R1-forbidden shape.  Single-member groups are "node" (no wire).
+    """
+    ids = tuple(ids)
+    if not ids:                             # replica_groups={} placeholder
+        return "global"
+    if len(ids) <= 1:
+        return "node"
+    pods = {d // n for d in ids}
+    if len(pods) == 1:
+        return "node"
+    if num_devices is not None and len(ids) == num_devices:
+        return "global"
+    if len(pods) == len(ids):
+        return "lane"
+    return "mixed"
+
+
+def _classify_edges(pairs, *, n: int) -> str:
+    """Level of a collective-permute from its edges: all intra-pod →
+    node, all cross-pod → lane, a mix → mixed."""
+    kinds = {"node" if a // n == b // n else "lane" for a, b in pairs}
+    if kinds == {"node"}:
+        return "node"
+    if kinds == {"lane"}:
+        return "lane"
+    return "mixed"
+
+
+@dataclasses.dataclass(frozen=True)
+class CollOp:
+    """One executed collective site in a lowered module.
+
+    ``count`` is the trip-corrected executed multiplicity (a collective
+    inside a B-trip scan body appears once with count == B·outer trips);
+    ``result_bytes``/``wire_bytes`` are PER EXECUTION, so executed totals
+    are ``count · wire_bytes``.
+    """
+    kind: str                # all-reduce | all-gather | ...
+    level: str               # node | lane | global | mixed
+    group_size: int
+    count: int
+    result_bytes: float
+    wire_bytes: float
+    computation: str
+    name: str                # instruction name (diagnostics)
+
+    @property
+    def total_wire(self) -> float:
+        return self.count * self.wire_bytes
+
+
+class CommFootprint:
+    """The collective ops of one lowered module, with per-level totals."""
+
+    LEVELS = ("node", "lane", "global", "mixed")
+
+    def __init__(self, ops, *, n: int, num_devices: Optional[int] = None):
+        self.ops: tuple = tuple(ops)
+        self.n = int(n)
+        self.num_devices = num_devices
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def wire(self, level: Optional[str] = None) -> float:
+        """Total executed wire bytes, optionally restricted to a level."""
+        return sum(o.total_wire for o in self.ops
+                   if level is None or o.level == level)
+
+    def by_level(self) -> dict:
+        return {lv: self.wire(lv) for lv in self.LEVELS}
+
+    def kind_counts(self, level: Optional[str] = None) -> dict:
+        out: dict = {}
+        for o in self.ops:
+            if level is None or o.level == level:
+                out[o.kind] = out.get(o.kind, 0) + o.count
+        return out
+
+    def mixed(self) -> tuple:
+        """The R1-violating ops (straddle pods without covering all)."""
+        return tuple(o for o in self.ops if o.level == "mixed")
+
+    def levels(self) -> tuple:
+        return tuple(lv for lv in self.LEVELS if any(
+            o.level == lv for o in self.ops))
+
+
+def _coll_level(inst: Instr, *, n: int,
+                num_devices: Optional[int]) -> tuple:
+    """(level, group_size) of one collective instruction."""
+    pairs = permute_edges(inst.line)
+    if inst.op.replace("-start", "") == "collective-permute" and pairs:
+        return _classify_edges(pairs, n=n), 2
+    groups = replica_groups(inst.line, num_devices)
+    if not groups:
+        return "global", (num_devices or 2)
+    levels = {classify_group(g, n=n, num_devices=num_devices)
+              for g in groups}
+    sizes = {len(g) for g in groups if g}
+    gsize = max(sizes) if sizes else (num_devices or 2)
+    # groups of one op are symmetric shards of the same partition; if ANY
+    # of them straddles (or they disagree on level) the op is mixed
+    if len(levels - {"node"}) > 1 or "mixed" in levels:
+        return "mixed", gsize
+    for lv in ("global", "lane", "node"):
+        if lv in levels:
+            return lv, gsize
+    return "node", gsize
+
+
+def comm_footprint(text: str, *, n: int,
+                   num_devices: Optional[int] = None) -> CommFootprint:
+    """Walk a lowered/optimized module and return its
+    :class:`CommFootprint`: every collective op, trip-corrected, with its
+    communication level under pod size ``n``.
+
+    ``num_devices`` (p = n·N) lets degenerate ``replica_groups={}`` and
+    whole-machine groups be recognized as "global"; when omitted it is
+    inferred as 1 + the largest device id any group mentions.
+    """
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    if num_devices is None:
+        seen = 0
+        for comp in comps.values():
+            for inst in comp.instrs:
+                for grp in (replica_groups(inst.line) or []):
+                    seen = max(seen, max(grp, default=0) + 1)
+                for a, b in (permute_edges(inst.line) or []):
+                    seen = max(seen, a + 1, b + 1)
+        num_devices = seen or None
+
+    memo: dict[str, list] = {}
+
+    def walk(comp: Computation) -> list:
+        if comp.name in memo:
+            return memo[comp.name]
+        memo[comp.name] = []                # cycle guard (HLO is acyclic)
+        out: list = []
+        for inst in comp.instrs:
+            kind = inst.op.replace("-start", "")
+            if kind in _COLL_KINDS:
+                level, gsize = _coll_level(inst, n=n,
+                                           num_devices=num_devices)
+                rb = float(_bytes_of(inst.type_str))
+                out.append((CollOp(kind=kind, level=level,
+                                   group_size=gsize, count=1,
+                                   result_bytes=rb,
+                                   wire_bytes=_footprint_wire(kind, gsize,
+                                                              rb),
+                                   computation=comp.name,
+                                   name=inst.name), 1))
+            mult = 1
+            children = []
+            if inst.op == "while":
+                mt = _TRIP_RE.search(inst.line)
+                mult = int(mt.group(1)) if mt else 1
+                mb = re.search(r"body=%?([\w.\-]+)", inst.line)
+                if mb:
+                    children = [mb.group(1)]
+            elif inst.op in ("fusion", "call", "map", "reduce",
+                             "reduce-window", "sort", "scatter",
+                             "select-and-scatter", "all-reduce"):
+                children = _CALLED_RE.findall(inst.line)
+            elif inst.op == "conditional":
+                mb = _BRANCHES_RE.search(inst.line)
+                if mb:
+                    children = [c.strip().lstrip("%")
+                                for c in mb.group(1).split(",")]
+            for ch in children:
+                if ch in comps:
+                    for op, cnt in walk(comps[ch]):
+                        out.append((op, cnt * mult))
+        memo[comp.name] = out
+        return out
+
+    ops = [dataclasses.replace(op, count=cnt) for op, cnt in walk(entry)]
+    return CommFootprint(ops, n=n, num_devices=num_devices)
+
+
+# ---------------------------------------------------------------------------
+# structural concurrency: can the lane (DCN) hop and a node (ICI)
+# collective of one pipeline step run at the same time?
+# ---------------------------------------------------------------------------
+
+def _instr_operands(inst: Instr, table: dict[str, str]) -> list[str]:
+    """Operand instruction names resolvable in the same computation."""
+    return [nm for nm in _operand_names(inst) if nm in table]
+
+
+def _ancestor_fn(comp: Computation):
+    """Memoized transitive-ancestor query over one computation's def-use
+    graph.  Edges follow every operand reference, so dependence chains
+    routed through tuple / get-tuple-element / bitcast plumbing are
+    ancestors too (they are ordinary instructions with operands)."""
+    ops_of = {i.name: _instr_operands(i, comp.table) for i in comp.instrs}
+    anc_memo: dict[str, frozenset] = {}
+
+    def ancestors(name: str) -> frozenset:
+        if name in anc_memo:
+            return anc_memo[name]
+        out: set[str] = set()
+        stack = list(ops_of.get(name, ()))
+        while stack:                           # iterative: HLO chains
+            cur = stack.pop()                  # can exceed Py recursion
+            if cur in out:
+                continue
+            out.add(cur)
+            if cur in anc_memo:
+                out |= anc_memo[cur]
+            else:
+                stack.extend(ops_of.get(cur, ()))
+        anc_memo[name] = frozenset(out)
+        return anc_memo[name]
+
+    return ancestors
+
+
+def _independent(ancestors, a: str, b: str) -> bool:
+    """True iff neither instruction is a def-use ancestor of the other."""
+    return a not in ancestors(b) and b not in ancestors(a)
+
+
+def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
+    """Verify, per computation, that a cross-pod (DCN) collective and an
+    intra-pod (ICI) collective exist with NO data dependence in either
+    direction — the structural precondition for the §5 pipeline's overlap
+    (XLA's scheduler cannot be forced, but absent a dependence edge it is
+    free to run both at once; present one, it never can).
+
+    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
+    where each pair is (computation, dcn_instr, dcn_kind, ici_instr,
+    ici_kind).  A scan-based pipeline puts both ops in the while-body
+    computation; an unrolled bucket schedule puts them straight in the
+    entry — both are covered because every computation is examined.
+    """
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+    pairs = []
+    per_comp: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        if comp is None:
+            continue
+        colls = []
+        for inst in comp.instrs:
+            c = _collective(inst, pod_size)
+            if c:
+                colls.append((inst, c))
+        if not colls:
+            continue
+        dcn = [(i, c) for i, c in colls if c["dcn"]]
+        ici = [(i, c) for i, c in colls if not c["dcn"]]
+        per_comp[cname] = {"dcn": len(dcn), "ici": len(ici), "pairs": 0}
+        if not dcn or not ici:
+            continue
+        ancestors = _ancestor_fn(comp)
+        for di, dc in dcn:
+            for ni, nc in ici:
+                if _independent(ancestors, di.name, ni.name):
+                    pairs.append((cname, di.name, dc["kind"],
+                                  ni.name, nc["kind"]))
+                    per_comp[cname]["pairs"] += 1
+    return {"concurrent": bool(pairs), "pairs": pairs,
+            "per_computation": per_comp}
+
+
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_GTE_INDEX_RE = re.compile(r"index=(\d+)")
+
+
+def scan_carried_concurrency(text: str, *, pod_size: int = 256) -> dict:
+    """Cross-ITERATION overlap inside while-loop (scan) bodies.
+
+    ``collective_concurrency`` demands a dependence-free DCN×ICI pair
+    within one computation — the right test when both phases of one
+    block are meant to run at once.  A software pipeline can instead
+    overlap ACROSS iterations: block b's DCN hop is in flight while
+    block b+1's ICI phase runs.  Textually that shape is serial inside
+    the body (the DCN op consumes the ICI result), but legitimate
+    iff the ICI op never reads the carry element the DCN op produces —
+    then iteration t+1's ICI phase needs nothing from iteration t's DCN
+    hop and the scheduler may run them concurrently.
+
+    For every while body: for each DCN collective D and ICI collective I
+    (direct body instructions), compute the root-tuple positions D
+    transitively feeds and the parameter get-tuple-element indices in
+    I's ancestry.  Disjoint sets → a scan-carried concurrent pair.  A
+    non-tuple carry is treated as a single position 0 (conservative).
+
+    Returns {"concurrent": bool, "pairs": [(body, dcn, dcn_kind, ici,
+    ici_kind)]}.
+    """
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+    bodies = set()
+    for comp in comps.values():
+        if comp is None:
+            continue
+        for inst in comp.instrs:
+            if inst.op == "while":
+                m = _BODY_RE.search(inst.line)
+                if m:
+                    bodies.add(m.group(1))
+    pairs = []
+    for bname in sorted(bodies):
+        comp = comps.get(bname)
+        if comp is None:
+            continue
+        colls = [(i, _collective(i, pod_size)) for i in comp.instrs]
+        colls = [(i, c) for i, c in colls if c]
+        dcn = [(i, c) for i, c in colls if c["dcn"]]
+        ici = [(i, c) for i, c in colls if not c["dcn"]]
+        if not dcn or not ici:
+            continue
+        root = next((i for i in comp.instrs if "ROOT" in i.line), None)
+        if root is None:
+            continue
+        params = {i.name for i in comp.instrs if i.op == "parameter"}
+        ancestors = _ancestor_fn(comp)
+
+        def carry_positions(name: str) -> set:
+            if root.op != "tuple":
+                return {0}
+            out = set()
+            for pos, op_name in enumerate(_operand_names(root)):
+                if op_name == name or name in ancestors(op_name):
+                    out.add(pos)
+            return out
+
+        def gte_indices(name: str) -> set:
+            out: set = set()
+            for anc in ancestors(name) | {name}:
+                inst = next((i for i in comp.instrs if i.name == anc),
+                            None)
+                if inst is None:
+                    continue
+                if inst.op == "get-tuple-element" \
+                        and set(_operand_names(inst)) & params:
+                    m = _GTE_INDEX_RE.search(inst.line)
+                    out.add(int(m.group(1)) if m else 0)
+                elif inst.op != "get-tuple-element" \
+                        and set(_instr_operands(inst, comp.table)) \
+                        & params:
+                    return set(range(10 ** 6))   # raw param read: all
+            return out
+
+        for di, dc in dcn:
+            d_pos = carry_positions(di.name)
+            for ni, nc in ici:
+                if not (gte_indices(ni.name) & d_pos):
+                    pairs.append((bname, di.name, dc["kind"],
+                                  ni.name, nc["kind"]))
+    return {"concurrent": bool(pairs), "pairs": pairs}
+
+
+# ---------------------------------------------------------------------------
+# structural concurrency, collective vs COMPUTE: can the ZeRO-3 prefetch
+# all-gather of layer i+1 run under layer i's dot FLOPs?
+# ---------------------------------------------------------------------------
+
+def _called_comps(line: str) -> list[str]:
+    """Every computation a line references: calls=/condition=/body=/
+    to_apply= AND conditional branch_computations={...}."""
+    out = _CALLED_RE.findall(line)
+    mb = _BRANCHES_RE.search(line)
+    if mb:
+        out += [c.strip().lstrip("%") for c in mb.group(1).split(",")]
+    return out
+
+
+def _carrier_comps(comps: dict, direct) -> set:
+    """Names of computations that transitively contain an instruction for
+    which ``direct(inst)`` is true — through while bodies, fusions, calls
+    and conditional branches alike."""
+    memo: dict[str, bool] = {}
+
+    def has(name: str) -> bool:
+        if name in memo:
+            return memo[name]
+        memo[name] = False                     # cycle guard (HLO is acyclic)
+        comp = comps.get(name)
+        if comp is None:
+            return False
+        for inst in comp.instrs:
+            if direct(inst) or any(has(ch)
+                                   for ch in _called_comps(inst.line)):
+                memo[name] = True
+                break
+        return memo[name]
+
+    return {n for n in comps if n != "__entry__" and has(n)}
+
+
+_CALLER_OPS = ("while", "fusion", "call", "conditional", "map")
+
+
+def collective_compute_concurrency(text: str, *, pod_size: int = 256,
+                                   coll_kinds=None) -> dict:
+    """Verify, per computation, that a collective and a FLOP-carrying
+    instruction coexist with NO data dependence in either direction — the
+    structural precondition for hiding a ZeRO-3 weight-prefetch
+    all-gather under a layer's matmuls (multi-core cluster model: overlap
+    must be provable on the graph, not inferred from CPU wall-clock,
+    which cannot show the win on shared-memory host devices).
+
+    An instruction "carries" a collective/FLOPs either directly (an
+    all-gather / a dot) or by calling into a computation that transitively
+    contains one (a fusion of dots; the inner while loop of the pipelined
+    per-layer gather).  That nesting matters: the layer scan's body holds
+    the prefetch gather as a ``while`` instruction (the AG pipeline) next
+    to the current layer's dot fusions — def-use-independent, so XLA may
+    overlap them.  A BLOCKING gather chains every dot behind its own
+    all-gather, so no independent pair survives — the negative control.
+
+    ``coll_kinds`` restricts which collective kinds count (default: the
+    gather-shaped kind the prefetch path is built from).
+
+    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
+    with pairs (computation, coll_instr, coll_kind_or_op, compute_instr,
+    compute_op).
+    """
+    if coll_kinds is None:
+        coll_kinds = ("all-gather",)
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+
+    def direct_coll(inst):
+        c = _collective(inst, pod_size)
+        return bool(c and c["kind"] in coll_kinds)
+
+    def direct_flops(inst):
+        return inst.op in ("dot", "convolution")
+
+    coll_comps = _carrier_comps(comps, direct_coll)
+    flop_comps = _carrier_comps(comps, direct_flops)
+
+    def carriers(comp, direct, carrier_set):
+        out = []
+        for inst in comp.instrs:
+            if direct(inst):
+                out.append(inst)
+            elif inst.op in _CALLER_OPS and any(
+                    ch in carrier_set
+                    for ch in _called_comps(inst.line)):
+                out.append(inst)
+        return out
+
+    pairs = []
+    per_comp: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        if comp is None:
+            continue
+        colls = carriers(comp, direct_coll, coll_comps)
+        if not colls:
+            continue
+        compute = carriers(comp, direct_flops, flop_comps)
+        per_comp[cname] = {"colls": len(colls), "compute": len(compute),
+                           "pairs": 0}
+        if not compute:
+            continue
+        ancestors = _ancestor_fn(comp)
+        for ci in colls:
+            ckind = (_collective(ci, pod_size) or {}).get("kind", ci.op)
+            for fi in compute:
+                if fi.name == ci.name:
+                    continue                   # one instr carrying both
+                if _independent(ancestors, ci.name, fi.name):
+                    pairs.append((cname, ci.name, ckind, fi.name, fi.op))
+                    per_comp[cname]["pairs"] += 1
+    return {"concurrent": bool(pairs), "pairs": pairs,
+            "per_computation": per_comp}

@@ -1,0 +1,379 @@
+"""lanelint layer 1 — the R1–R4 footprint rules over the registry.
+
+Every registered communication cell (``(collective, strategy)`` pair) is
+lowered through ``jax.shard_map`` on a small host-device topology grid,
+its compiled HLO walked into a :class:`~repro.analysis.footprint.
+CommFootprint`, and four static invariants checked (DESIGN.md §12):
+
+  R1  level-disjointness — node-level and lane-level replica groups never
+      share an edge: no group may straddle pods without covering the
+      whole machine, and a decomposed (lane*) strategy may not fall back
+      to whole-machine collectives at all (scalar-sized ops exempt).
+  R2  payload conservation — executed wire bytes per level equal the
+      closed-form algebra of the registered lowering
+      (``comm/costs.py:lowered_wire_volumes``), trip counts included.
+  R3  guideline consistency — the volumes the matching cost function
+      charges (``comm/costs.py:assumed_volumes``) agree with the lowered
+      volumes within the cell's documented consistency bound.  A cost
+      model that under- or over-counts its own HLO would rank dispatch
+      with fiction.
+  R4  overlap shape — pipelined cells must show the §5 scan-carried
+      DCN×ICI concurrency structure; the blocking negative control must
+      NOT (if it did, the rule would be vacuous — so that is a finding
+      against the RULE, reported as ``R4`` on the control cell).
+
+The sweep additionally lowers the train/serve step builders and runs R1
+over them (steps compose many cells; their per-level volumes are owned
+by the per-cell checks).
+
+Everything jax-touching imports lazily: importing this module must stay
+cheap and device-free (the CLI sets up the 8-host-device backend before
+any jax import — see ``repro.analysis.lint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+from . import footprint as fp
+from .diagnostics import ERROR, WARNING, Finding
+
+__all__ = [
+    "CellCase", "GRID", "iter_cell_cases", "lower_cell", "check_cell",
+    "run_hlo_rules", "check_step_footprint", "run_step_rules",
+    "R2_REL_TOL", "R2_ABS_TOL", "SMALL_GLOBAL_BYTES",
+]
+
+#: (n, N) topologies every cell is swept over — both factorizations of
+#: the 8 host devices with n ≥ 2 AND N ≥ 2 so node and lane levels are
+#: both non-degenerate
+GRID = ((4, 2), (2, 4))
+
+#: per-chip payload: 1024 f32 elements = 4 KiB — divides every K·n·N
+#: split on the grid, so no cell pads and R2 algebra is exact
+LOCAL_ELEMS = 1024
+
+#: bucket/block count for cells that take one (explicit, so R2's closed
+#: forms see the same K/B the lowering uses)
+SWEEP_BLOCKS = 4
+
+R2_REL_TOL = 0.02          # XLA may CSE/fold a few percent of traffic
+R2_ABS_TOL = 512.0         # scalar side-channels (quorum denominator)
+SMALL_GLOBAL_BYTES = 1024  # R1 scalar exemption (loss pmean, gnorm psum)
+
+#: the communication collectives the cell sweep drives (the registry also
+#: carries step/model builders — block_stack, train_step, serve_step —
+#: which are swept as STEPS, not cells)
+COMM_COLLECTIVES = ("allreduce", "reduce_scatter", "allgather", "alltoall",
+                    "scan", "bcast", "reduce", "gather", "scatter",
+                    "grad_sync", "prefetch_allgather", "kv_splice")
+
+#: cells that must prove the §5 overlap structure (R4 positive)
+PIPELINED_CELLS = frozenset({
+    ("allreduce", "lane_pipelined"), ("grad_sync", "lane_pipelined"),
+    ("bcast", "lane_pipelined"), ("reduce", "lane_pipelined"),
+    ("prefetch_allgather", "lane_pipelined"),
+})
+
+#: negative controls that must FAIL the overlap check (pins R4 itself)
+R4_CONTROL_CELLS = frozenset({("prefetch_allgather", "blocking")})
+
+
+@dataclasses.dataclass(frozen=True)
+class CellCase:
+    """One (collective, strategy) cell at one grid topology."""
+    collective: str
+    strategy: str
+    n: int
+    N: int
+    payload_bytes: int
+    kw: tuple = ()           # sorted kwargs items (hashable)
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.kw)
+
+    @property
+    def target(self) -> str:
+        return f"{self.collective}/{self.strategy}@n{self.n}xN{self.N}"
+
+
+def _cell_kwargs(collective: str, strategy: str) -> dict:
+    if collective == "grad_sync":
+        return {"num_buckets": SWEEP_BLOCKS}
+    if collective == "prefetch_allgather" or strategy == "lane_pipelined":
+        return {"num_blocks": SWEEP_BLOCKS}
+    return {}
+
+
+def iter_cell_cases(grid: tuple = GRID) -> Iterable[CellCase]:
+    """Every registered communication cell × every grid topology."""
+    from repro.comm.registry import iter_impls, registered_collectives
+    for n, N in grid:
+        for coll in registered_collectives():
+            if coll not in COMM_COLLECTIVES:
+                continue
+            for e in iter_impls(coll):
+                kw = _cell_kwargs(coll, e.strategy)
+                payload = LOCAL_ELEMS * 4
+                if coll == "kv_splice":
+                    payload = _KV_SMALL_ELEMS * 4
+                yield CellCase(coll, e.strategy, n, N, payload,
+                               tuple(sorted(kw.items())))
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell to compiled HLO
+# ---------------------------------------------------------------------------
+
+_KV_SHAPE = (2, "batch", 128)    # (leaf, slot-sharded batch, feature)
+_KV_SMALL_ELEMS = 2 * 1 * 128
+
+
+def _mesh_topo(n: int, N: int):
+    import jax
+    from repro.core.lane import LaneTopology
+    mesh = jax.make_mesh((N, n), ("pod", "data"))
+    return mesh, LaneTopology(node_axes=("data",), lane_axis="pod")
+
+
+def _sum_leaves(out):
+    """One local scalar keeping every array leaf live (no collective is
+    dead-code-eliminated; adds zero communication)."""
+    import jax
+    import jax.numpy as jnp
+    acc = jnp.float32(0)
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "dtype"):
+            acc = acc + jnp.sum(leaf.astype(jnp.float32))
+    return acc
+
+
+def lower_cell(mesh, topo, case: CellCase) -> str:
+    """Compiled (optimized) HLO text of one cell under shard_map."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm import CommConfig, LaneComm
+    comm = LaneComm(topo, CommConfig(record_selections=False), mesh=mesh)
+    p = case.n * case.N
+    spec = P((topo.lane_axis, *topo.node_axes))
+
+    if case.collective == "kv_splice":
+        L, d = _KV_SHAPE[0], _KV_SHAPE[2]
+        big = jax.ShapeDtypeStruct((L, p, d), jnp.float32)
+        small = jax.ShapeDtypeStruct((L, 1, d), jnp.float32)
+
+        def f(b, s):
+            out = comm.kv_splice(b, small=s, slot=min(3, p - 1),
+                                 strategy=case.strategy, **case.kwargs)
+            return _sum_leaves(out)
+
+        sm = jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(None, (topo.lane_axis, *topo.node_axes), None),
+                      P(None, None, None)),
+            out_specs=P(), check_vma=False)
+        return jax.jit(sm).lower(big, small).compile().as_text()
+
+    x = jax.ShapeDtypeStruct((LOCAL_ELEMS * p,), jnp.float32)
+
+    def f(v):
+        out = getattr(comm, case.collective)(v, strategy=case.strategy,
+                                             **case.kwargs)
+        return _sum_leaves(out)
+
+    sm = jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=P(),
+                       check_vma=False)
+    return jax.jit(sm).lower(x).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# the rules
+# ---------------------------------------------------------------------------
+
+def _is_decomposed(strategy: str) -> bool:
+    return strategy != "native"
+
+
+def check_r1(case_target: str, foot: fp.CommFootprint, *,
+             decomposed: bool,
+             small_global_bytes: float = SMALL_GLOBAL_BYTES) -> list:
+    """Level-disjointness findings for one footprint."""
+    out = []
+    for op in foot.mixed():
+        if op.result_bytes <= small_global_bytes:
+            # scalar control traffic (loss pmean / global-norm psum over
+            # the batch product, quorum denominator): latency-only, the
+            # bandwidth decomposition R1 protects is not at stake
+            continue
+        out.append(Finding(
+            "R1", case_target,
+            f"{op.kind} (comp {op.computation}, {op.name}) straddles pods "
+            f"without covering the machine: group_size={op.group_size}, "
+            f"{op.result_bytes:.0f}B — node and lane communicators share "
+            f"an edge"))
+    if decomposed:
+        for op in foot.ops:
+            if op.level == "global" \
+                    and op.result_bytes > small_global_bytes:
+                out.append(Finding(
+                    "R1", case_target,
+                    f"decomposed strategy lowers a whole-machine {op.kind} "
+                    f"({op.result_bytes:.0f}B, comp {op.computation}) — "
+                    f"the decomposition fell back to a global collective"))
+    return out
+
+
+def _vol_mismatch(got: float, want: float, *, rel: float,
+                  abs_tol: float) -> bool:
+    return abs(got - want) > max(rel * max(got, want), abs_tol)
+
+
+def check_r2(case: CellCase, foot: fp.CommFootprint) -> list:
+    """Payload conservation: lowered per-level wire == closed-form."""
+    from repro.comm.costs import lowered_wire_volumes
+    want = lowered_wire_volumes(
+        case.collective, case.strategy, n=case.n, N=case.N,
+        payload_bytes=case.payload_bytes, **case.kwargs)
+    if want is None:
+        return []
+    got = foot.by_level()
+    out = []
+    for level in ("node", "lane", "global"):
+        w = float(want.get(level, 0.0))
+        g = float(got.get(level, 0.0))
+        if _vol_mismatch(g, w, rel=R2_REL_TOL, abs_tol=R2_ABS_TOL):
+            out.append(Finding(
+                "R2", case.target,
+                f"{level}-level wire bytes: lowered {g:.0f}, closed-form "
+                f"{w:.0f} (payload {case.payload_bytes}B, "
+                f"kw {dict(case.kw)}) — the lowering does not move what "
+                f"the §3/§5 algebra says it moves"))
+    return out
+
+
+def check_r3(case: CellCase, foot: fp.CommFootprint) -> list:
+    """Guideline consistency: cost-model volumes vs lowered volumes."""
+    from repro.comm.costs import assumed_volumes
+    assumed = assumed_volumes(
+        case.collective, case.strategy, n=case.n, N=case.N,
+        payload_bytes=case.payload_bytes, **case.kwargs)
+    if assumed is None:
+        return []                       # cell has no cost model — nothing
+    vols, bound = assumed
+    got = foot.by_level()
+    out = []
+    for level, w in vols.items():
+        g = (foot.wire() if level == "total"
+             else float(got.get(level, 0.0)))
+        if w <= 0:
+            continue
+        if g <= 0:
+            out.append(Finding(
+                "R3", case.target,
+                f"cost model charges {w:.0f}B at the {level} level but "
+                f"the lowering moves nothing there — the model prices a "
+                f"phase that does not exist"))
+            continue
+        ratio = max(g / w, w / g)
+        if ratio > bound:
+            out.append(Finding(
+                "R3", case.target,
+                f"{level}-level: cost model assumes {w:.0f}B, lowering "
+                f"moves {g:.0f}B (ratio {ratio:.2f} > bound {bound:.2f}) "
+                f"— dispatch would rank this cell with fiction"))
+    return out
+
+
+def check_r4(case: CellCase, hlo: str, *, expect_overlap: bool) -> list:
+    """Overlap shape: §5 pipelined cells must show a DCN×ICI pair that
+    can run concurrently — either def-use-independent within one
+    computation (both phases of one block at once) or scan-carried (the
+    next block's ICI phase is independent of the in-flight DCN hop);
+    blocking controls must show neither."""
+    within = fp.collective_concurrency(hlo, pod_size=case.n)
+    carried = fp.scan_carried_concurrency(hlo, pod_size=case.n)
+    concurrent = within["concurrent"] or carried["concurrent"]
+    if expect_overlap and not concurrent:
+        return [Finding(
+            "R4", case.target,
+            "pipelined cell shows NO concurrent DCN×ICI collective pair "
+            "(neither within-body independence nor scan-carried) — the "
+            "§5 overlap structure is gone; every lane hop serializes "
+            "behind a node phase")]
+    if not expect_overlap and concurrent:
+        n_pairs = len(within["pairs"]) + len(carried["pairs"])
+        return [Finding(
+            "R4", case.target,
+            f"blocking negative control shows {n_pairs} concurrent "
+            f"DCN×ICI pair(s) — the R4 rule would be vacuous; the "
+            f"control must stay strictly serial")]
+    return []
+
+
+def check_cell(case: CellCase, hlo: str) -> list:
+    """All applicable rules for one lowered cell."""
+    foot = fp.comm_footprint(hlo, n=case.n, num_devices=case.n * case.N)
+    findings = []
+    findings += check_r1(case.target, foot,
+                         decomposed=_is_decomposed(case.strategy))
+    findings += check_r2(case, foot)
+    findings += check_r3(case, foot)
+    key = (case.collective, case.strategy)
+    if key in PIPELINED_CELLS:
+        findings += check_r4(case, hlo, expect_overlap=True)
+    elif key in R4_CONTROL_CELLS:
+        findings += check_r4(case, hlo, expect_overlap=False)
+    return findings
+
+
+def run_hlo_rules(grid: tuple = GRID, *, verbose: bool = False) -> list:
+    """Lower and check every registered cell over the grid."""
+    import repro.comm.impls  # noqa: F401  — populate the registry
+    findings = []
+    for n, N in grid:
+        mesh, topo = _mesh_topo(n, N)
+        for case in iter_cell_cases(((n, N),)):
+            hlo = lower_cell(mesh, topo, case)
+            cf = check_cell(case, hlo)
+            findings += cf
+            if verbose:
+                foot = fp.comm_footprint(hlo, n=n, num_devices=n * N)
+                lv = {k: round(v, 1)
+                      for k, v in foot.by_level().items() if v}
+                print(f"  {case.target:42s} {lv} "
+                      f"{'FAIL ' + str(len(cf)) if cf else 'ok'}",
+                      flush=True)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# step builders: R1 over the composed train/serve lowerings
+# ---------------------------------------------------------------------------
+
+def check_step_footprint(name: str, hlo: str, *, n: int,
+                         num_devices: int) -> list:
+    """R1 over a full step lowering.  Steps compose many cells, so only
+    disjointness is checked here (volumes are owned by the cell sweep);
+    scalar whole-machine ops (loss pmean, global-norm psum, quorum
+    denominator) ride the small-payload exemption."""
+    foot = fp.comm_footprint(hlo, n=n, num_devices=num_devices)
+    return check_r1(name, foot, decomposed=True)
+
+
+def run_step_rules(*, verbose: bool = False) -> list:
+    """Lower the lane train step and the serve prefill/decode steps on
+    the host mesh and run R1 over each."""
+    from .steps import iter_step_hlo
+    findings = []
+    for name, n, p, hlo in iter_step_hlo():
+        sf = check_step_footprint(name, hlo, n=n, num_devices=p)
+        findings += sf
+        if verbose:
+            foot = fp.comm_footprint(hlo, n=n, num_devices=p)
+            lv = {k: round(v, 1) for k, v in foot.by_level().items() if v}
+            print(f"  {name:42s} {lv} "
+                  f"{'FAIL ' + str(len(sf)) if sf else 'ok'}", flush=True)
+    return findings

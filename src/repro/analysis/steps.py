@@ -1,0 +1,95 @@
+"""Step-builder lowerings for the lanelint step sweep.
+
+The per-cell sweep (``rules.iter_cell_cases``) proves each registered
+collective in isolation; this module lowers the COMPOSED surfaces — the
+lane train step and the zero3 serving decode/splice — and hands their
+compiled HLO to the R1 level-disjointness check.  Volumes are owned by
+the cell sweep (a step is a sum of cells), so only disjointness is
+checked here; the scalar control traffic a step adds on top of its
+cells (loss pmean over the batch product, global-norm psum, the quorum
+denominator) rides the small-payload exemption.
+
+Everything is lowered AOT (``.lower(...).compile()``) — nothing runs.
+The mesh is the conformance grid's (pod=2, data=2, model=2) host
+topology: lane axis "pod", node axes ("data", "model"-adjacent), so the
+footprint classifier sees n = 4 chips per pod on 8 devices.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+__all__ = ["iter_step_hlo", "train_step_hlo", "serve_step_hlo"]
+
+_ARCH = "llama3.2-3b"
+_MESH_SHAPE = (2, 2, 2)
+_MESH_AXES = ("pod", "data", "model")
+
+
+def _mesh():
+    import jax
+    return jax.make_mesh(_MESH_SHAPE, _MESH_AXES)
+
+
+def train_step_hlo(gradsync: str) -> Tuple[str, int, int]:
+    """(compiled HLO, n, p) of one lane train-step flavor on the host
+    grid — built exactly the way launch/train.py builds it, lowered from
+    the lane state's own specs."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import resolve
+    from repro.configs.base import SHAPES, RunConfig
+    from repro.launch.steps import build_train_step_lane, \
+        init_lane_train_state
+    from repro.models import init_model
+    from repro.optim import AdamWConfig
+
+    cfg = resolve(_ARCH, smoke=True)
+    mesh = _mesh()
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], gradsync=gradsync)
+    opt = AdamWConfig()
+    step, comm = build_train_step_lane(cfg, run, opt, mesh, None)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    st = init_lane_train_state(cfg, run, mesh, params, comm=comm)
+    dspec = P(("pod", "data"))
+    sm = jax.shard_map(step, mesh=mesh,
+                      in_specs=(st.pspecs, st.ospecs, dspec, dspec, None),
+                      out_specs=(P(), st.pspecs, st.ospecs),
+                      check_vma=False)
+    shape = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    toks = jax.ShapeDtypeStruct((8, 8), jnp.int32)
+    hlo = jax.jit(sm).lower(shape(st.params), shape(st.opt_state),
+                            toks, toks, None).compile().as_text()
+    p = _MESH_SHAPE[0] * _MESH_SHAPE[1] * _MESH_SHAPE[2]
+    return hlo, p // _MESH_SHAPE[0], p
+
+
+def serve_step_hlo() -> Iterable[Tuple[str, str, int, int]]:
+    """(name, compiled HLO, n, p) of the zero3 serving surfaces via the
+    hosting's own ``debug_lower`` AOT hook."""
+    import jax
+
+    from repro.configs import resolve
+    from repro.models import init_model
+    from repro.serve.steps import build_serve_step
+
+    cfg = resolve(_ARCH, smoke=True)
+    mesh = _mesh()
+    step = build_serve_step(cfg, max_seq=64, slots=8,
+                            hosting="lane_zero3", mesh=mesh)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    p = _MESH_SHAPE[0] * _MESH_SHAPE[1] * _MESH_SHAPE[2]
+    n = p // _MESH_SHAPE[0]
+    for name, hlo in sorted(step.debug_lower(params).items()):
+        yield f"serve_step/lane_zero3:{name}", hlo, n, p
+
+
+def iter_step_hlo() -> Iterable[Tuple[str, int, int, str]]:
+    """Every swept step lowering as (target, n, num_devices, hlo)."""
+    for gradsync in ("lane_pipelined", "lane_zero3"):
+        hlo, n, p = train_step_hlo(gradsync)
+        yield f"train_step/{gradsync}", n, p, hlo
+    for name, hlo, n, p in serve_step_hlo():
+        yield name, n, p, hlo

@@ -244,7 +244,7 @@ def _scatter_native(comm, x, *, root_lane=0, root_node=0,
     return lax.dynamic_slice_in_dim(full, topo.global_rank() * m, m, axis=0)
 
 
-@register_impl("scatter", "lane", cost=costs.lane_cost("scatter"),
+@register_impl("scatter", "lane", cost=costs.cost_lane_scatter,
                feasible=_div_p)
 def _scatter_lane(comm, x, *, root_lane=0, root_node=0,
                   root_replicated=True):
@@ -393,10 +393,13 @@ def _prefetch_pipelined(comm, shard, *, num_blocks=None):
     return pipelined_allgather_lane(shard, comm.topo, num_blocks=B)
 
 
-@register_impl("prefetch_allgather", "blocking", auto_ok=False)
+@register_impl("prefetch_allgather", "blocking", auto_ok=False,
+               probe_ok=True)
 def _prefetch_blocking(comm, shard, *, num_blocks=None):
     """Monolithic AG(lane)→AG(node) of the whole shard — the comparator
-    and the negative control of the prefetch-overlap HLO proof."""
+    and the negative control of the prefetch-overlap HLO proof.
+    ``probe_ok=True``: never auto-selected, but the probe sweep times it
+    so the measured pipelined-vs-blocking gap lands in the cache."""
     B = _resolve_blocks(comm, shard.shape[0], num_blocks)
     return zero3_unshard(shard, comm.topo, B)
 

@@ -47,6 +47,12 @@ class ImplEntry:
     feasible: ``(n, N, lead) -> bool`` — divisibility precondition on the
         leading payload dimension; auto skips infeasible entries instead
         of tracing into their ValueError.
+    probe_ok: eligibility for the measured-cost probe sweep,
+        INDEPENDENT of auto-eligibility.  None (default) falls back to
+        the auto rule (auto_ok and priced); True forces probing of cells
+        that can never win auto dispatch but whose measured time is
+        still wanted (the blocking prefetch negative control); False
+        excludes a priced cell from the sweep.
     """
     collective: str
     strategy: str
@@ -54,6 +60,14 @@ class ImplEntry:
     cost: Optional[Callable] = None
     auto_ok: bool = True
     feasible: Optional[Callable] = None
+    probe_ok: Optional[bool] = None
+
+    @property
+    def probe_eligible(self) -> bool:
+        """Should the timing probe measure this cell?"""
+        if self.probe_ok is not None:
+            return self.probe_ok
+        return self.auto_ok and self.cost is not None
 
 
 _REGISTRY: dict[str, dict[str, ImplEntry]] = {}
@@ -62,6 +76,7 @@ _REGISTRY: dict[str, dict[str, ImplEntry]] = {}
 def register_impl(collective: str, strategy: str, *,
                   cost: Optional[Callable] = None, auto_ok: bool = True,
                   feasible: Optional[Callable] = None,
+                  probe_ok: Optional[bool] = None,
                   override: bool = False) -> Callable:
     """Decorator: register ``fn(comm, payload, **kw)`` for a collective.
 
@@ -75,8 +90,9 @@ def register_impl(collective: str, strategy: str, *,
                 f"{collective!r} strategy {strategy!r} already registered "
                 f"(by {table[strategy].fn.__module__}); pass override=True "
                 f"to replace it")
-        table[strategy] = ImplEntry(collective, strategy, fn, cost,
-                                    auto_ok, feasible)
+        table[strategy] = ImplEntry(collective, strategy, fn, cost=cost,
+                                    auto_ok=auto_ok, feasible=feasible,
+                                    probe_ok=probe_ok)
         return fn
     return deco
 

@@ -125,7 +125,9 @@ def allreduce_lane(x, topo: LaneTopology):
     r = _rs_seq(x, topo.node_axes)
     r = lax.psum(r, topo.lane_axis)
     out = _ag_seq(r, topo.node_axes)
-    assert out.shape[0] == lead
+    if out.shape[0] != lead:
+        raise RuntimeError(
+            f"gather reassembled {out.shape[0]} rows, expected {lead}")
     return out
 
 

@@ -70,7 +70,10 @@ class ShardedLoader:
     seed: int = 0
 
     def host_rows(self) -> int:
-        assert self.global_batch % self.num_hosts == 0
+        if self.global_batch % self.num_hosts:
+            raise ValueError(
+                f"global_batch={self.global_batch} must divide evenly "
+                f"across num_hosts={self.num_hosts}")
         return self.global_batch // self.num_hosts
 
     def batch_slice(self, step: int, row0: int, rows: int):

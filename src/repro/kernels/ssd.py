@@ -75,7 +75,10 @@ def ssd_tpu(x, dt, A, B, C, *, chunk: int = 64, heads_blk: int = 8,
     """
     b, H, T, P = x.shape
     S = B.shape[-1]
-    assert T % chunk == 0 and H % heads_blk == 0, (T, chunk, H, heads_blk)
+    if T % chunk or H % heads_blk:
+        raise ValueError(
+            f"seq len {T} must divide by chunk={chunk} and heads {H} by "
+            f"heads_blk={heads_blk}")
     nc = T // chunk
     nhb = H // heads_blk
 

@@ -1,571 +1,42 @@
-"""Exact-ish HLO accounting: dot FLOPs, HBM-traffic bytes, collective bytes,
-with while-loop bodies multiplied by their known trip counts.
+"""Back-compat shim: the HLO parse/accounting core moved to
+``repro.analysis.footprint`` (the lanelint static-analysis subsystem
+generalized it into the shared footprint layer, DESIGN.md §12).
 
-Why: `compiled.cost_analysis()` counts every while body exactly once (we
-verified empirically — a 10-iteration scan reports 1 iteration of FLOPs),
-which would understate a scanned-80-layer model by ~80×.  XLA:CPU annotates
-optimized while ops with ``backend_config={"known_trip_count":{"n":...}}``,
-so we reconstruct the executed totals by walking the call graph:
-
-  flops(comp)  = Σ own dot/conv flops + Σ_child mult(child) · flops(child)
-  mult = trip count for while bodies, 1 for fusions/calls/branches
-
-Bytes model (HBM traffic): every *top-level* instruction in a computation
-reads its operands and writes its result once (fusion internals are NOT
-descended for bytes — a fusion is one read-operands/write-result op, which
-is exactly what makes it a fusion); loop bodies multiply.  This is a
-first-order traffic model: it ignores cache reuse inside a fused region
-(none to ignore) and register/VMEM blocking of single dots.
-
-Collectives: each op's wire bytes under ring algorithms, split ICI vs DCN
-by replica-group membership (groups spanning multiple 256-chip pods are
-DCN).  Collective ops also multiply through loop trip counts.
+Every name that ever lived here keeps working — benchmarks, the dryrun
+reporter, the conformance grid and the structural-overlap tests all
+import through this module; new code should import
+``repro.analysis.footprint`` directly.
 """
-from __future__ import annotations
-
-import json
-import math
-import re
-from typing import Optional
-
-_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
-                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
-                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-                "f8e4m3fn": 1, "f8e5m2": 1}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
-# type may be a tuple containing /*index=N*/ comments (hence '=') — match
-# lazily up to the first ')' that is followed by the op name.
-_DEF_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w\-]+)\(")
-_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLED_RE = re.compile(
-    r"(?:calls=|condition=|body=|to_apply=)%?([\w.\-]+)")
-_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_GROUPS_IOTA_RE = re.compile(
-    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
-
-_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-
-def _dims(type_str: str) -> list[tuple[str, list[int]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt in _DTYPE_BYTES:
-            out.append((dt, [int(x) for x in dims.split(",") if x]))
-    return out
-
-
-def _bytes_of(type_str: str) -> int:
-    return sum(_DTYPE_BYTES[dt] * math.prod(d) if d else _DTYPE_BYTES[dt]
-               for dt, d in _dims(type_str))
-
-
-def _elems_of(type_str: str) -> int:
-    return sum(math.prod(d) if d else 1 for dt, d in _dims(type_str))
-
-
-class Instr:
-    __slots__ = ("name", "type_str", "op", "line")
-
-    def __init__(self, name, type_str, op, line):
-        self.name, self.type_str, self.op, self.line = name, type_str, op, line
-
-
-class Computation:
-    def __init__(self, name):
-        self.name = name
-        self.instrs: list[Instr] = []
-        self.table: dict[str, str] = {}     # instr name -> type str
-
-
-def parse_hlo(text: str) -> dict[str, Computation]:
-    comps: dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    entry = None
-    for line in text.splitlines():
-        if not line.strip():
-            continue
-        if not line.startswith(" ") and "{" in line and "->" in line:
-            m = _COMP_START_RE.match(line.strip())
-            if m:
-                cur = Computation(m.group(1))
-                comps[cur.name] = cur
-                if line.lstrip().startswith("ENTRY"):
-                    entry = cur.name
-                continue
-        if line.strip() == "}":
-            continue
-        if cur is None:
-            continue
-        m = _DEF_RE.match(line)
-        if m:
-            name, type_str, op = m.group(1), m.group(2), m.group(3)
-            cur.instrs.append(Instr(name, type_str, op, line))
-            cur.table[name] = type_str
-    comps["__entry__"] = comps.get(entry) if entry else None
-    return comps
-
-
-def _operand_names(inst: Instr) -> list[str]:
-    """Raw operand names of one HLO instruction, in order.
-
-    Handles both operand dialects: bare ``op(%a, %b)`` and the typed
-    ``op(f32[8]{0} %a, f32[8]{0} %b)`` form compiled dumps use.  Only the
-    operand parenthesis group is scanned (balanced — tuple types nest), so
-    attribute refs like ``to_apply=%add`` are never picked up.
-    """
-    line = inst.line
-    try:
-        start = line.index(inst.op + "(") + len(inst.op)
-    except ValueError:
-        return []
-    seg = line[start:]
-    depth = 0
-    for k, ch in enumerate(line[start:], start):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                seg = line[start:k + 1]
-                break
-    names = re.findall(r"%([\w.\-]+)", seg)
-    if not names:
-        # bare dialect: comma-split, strip types, keep name-ish tokens
-        names = [t.split()[-1] for t in seg.strip("()").split(",")
-                 if t.strip()]
-    return names
-
-
-def _dot_flops(inst: Instr, table: dict[str, str]) -> float:
-    out_elems = _elems_of(inst.type_str)
-    mc = _CONTRACT_RE.search(inst.line)
-    k = 1
-    if mc:
-        cdims = [int(x) for x in mc.group(1).split(",") if x]
-        names = _operand_names(inst)
-        lhs_t = table.get(names[0]) if names else None
-        if lhs_t:
-            d = _dims(lhs_t)
-            if d:
-                shape = d[0][1]
-                for c in cdims:
-                    if c < len(shape):
-                        k *= shape[c]
-    return 2.0 * out_elems * k
-
-
-def _conv_flops(inst: Instr, table: dict[str, str]) -> float:
-    # flops ≈ 2 · out_elems · (kernel spatial · in_channels); approximate
-    # via rhs (kernel) element count / out_channels
-    out_elems = _elems_of(inst.type_str)
-    names = _operand_names(inst)
-    k = 1
-    if len(names) >= 2 and names[1] in table:
-        d = _dims(table[names[1]])
-        if d:
-            k = max(1, math.prod(d[0][1]))
-    return 2.0 * out_elems * k
-
-
-def _operand_bytes(inst: Instr, table: dict[str, str]) -> int:
-    return sum(_bytes_of(table[nm]) for nm in _operand_names(inst)
-               if nm in table)
-
-
-def group_info(line: str, pod_size: int):
-    """(group_size, crosses_pod) from replica_groups, exact for both the
-    explicit {{...}} and the iota [G,S]<=[dims]T(perm) forms."""
-    m = _GROUPS_RE.search(line)
-    if m:
-        ids = [int(x) for x in m.group(1).split(",")]
-        return len(ids), len({i // pod_size for i in ids}) > 1
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        import numpy as _np
-        g, s = int(m.group(1)), int(m.group(2))
-        dims = [int(x) for x in m.group(3).split(",")]
-        ids = _np.arange(math.prod(dims)).reshape(dims)
-        if m.group(4):
-            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
-        rows = ids.reshape(g, s) // pod_size
-        return s, bool((rows.max(axis=1) != rows.min(axis=1)).any())
-    return 2, False
-
-
-def _collective(inst: Instr, pod_size: int):
-    kind = inst.op.replace("-start", "")
-    if kind not in _COLL_KINDS:
-        return None
-    b = _bytes_of(inst.type_str)
-    g, dcn = group_info(inst.line, pod_size)
-    if kind == "collective-permute":
-        # source-target pairs, not groups: DCN iff ANY pair crosses pods
-        # (the braces nest — match the whole {{a,b},{c,d},...} list, not
-        # just up to the first '}')
-        mp = re.search(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}",
-                       inst.line)
-        if mp:
-            pairs = re.findall(r"\{(\d+),(\d+)\}", mp.group(1))
-            dcn = any(int(a) // pod_size != int(b2) // pod_size
-                      for a, b2 in pairs)
-    if kind == "all-reduce":
-        wire = 2 * (g - 1) / g * b
-    elif kind in ("all-gather", "all-to-all", "reduce-scatter"):
-        wire = (g - 1) / g * b
-    else:
-        wire = float(b)
-    return {"kind": kind, "bytes": float(b), "wire": wire, "group": g,
-            "dcn": dcn}
-
-
-_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
-                   "bitcast", "while", "conditional", "call",
-                   "after-all", "add-dependency"}
-
-# ops whose HBM traffic is a function of the RESULT (or update) size, not
-# the full operand buffers: a dynamic-slice of an (L, d, f) stacked weight
-# reads one layer's slice, not the whole stack — counting operands would
-# overcount loop-heavy models by ~L×.
-_RESULT_BYTES_OPS = {
-    "dynamic-slice": 2,      # read slice + write result
-    "slice": 2,
-    "gather": 2,
-    "reshape": 2,
-    "copy": 2,
-    "transpose": 2,
-    "convert": 2,
-    "broadcast": 1,          # reads a much smaller operand
-    "iota": 1,
-    "reverse": 2,
-    "pad": 2,
-    "concatenate": 2,
-}
-
-
-def _instr_bytes(inst: "Instr", table: dict[str, str]) -> float:
-    if inst.op in _RESULT_BYTES_OPS:
-        return _RESULT_BYTES_OPS[inst.op] * _bytes_of(inst.type_str)
-    if inst.op == "dynamic-update-slice":
-        # aliased in place: read+write the update operand only
-        names = _operand_names(inst)
-        if len(names) >= 2 and names[1] in table:
-            return 2.0 * _bytes_of(table[names[1]])
-        return 2.0 * _bytes_of(inst.type_str)
-    return _bytes_of(inst.type_str) + _operand_bytes(inst, table)
-
-
-def analyze(text: str, *, pod_size: int = 256) -> dict:
-    """Trip-corrected totals + per-loop-depth byte attribution.
-
-    ``bytes_depth`` maps while-nesting depth → HBM bytes.  Depth ≥ 3 in a
-    train step (µbatch × layer × attention-block scans) is the traffic a
-    fused Pallas kernel keeps in VMEM — the §Perf memory-term lever.
-    """
-    comps = parse_hlo(text)
-    entry = comps.pop("__entry__")
-    memo: dict[str, dict] = {}
-
-    def walk(comp: Computation, depth: int = 0) -> dict:
-        if (comp.name, depth) in memo:
-            return memo[(comp.name, depth)]
-        res = {"flops": 0.0, "bytes": 0.0, "bytes_depth": {},
-               "coll": {}, "coll_wire": 0.0, "dcn_wire": 0.0,
-               "ici_wire": 0.0, "coll_count": 0}
-        memo[(comp.name, depth)] = res  # cycle guard (HLO is acyclic)
-        def add_depth(d, b):
-            res["bytes_depth"][d] = res["bytes_depth"].get(d, 0.0) + b
-
-        for inst in comp.instrs:
-            if inst.op == "dot":
-                res["flops"] += _dot_flops(inst, comp.table)
-            elif inst.op == "convolution":
-                res["flops"] += _conv_flops(inst, comp.table)
-            c = _collective(inst, pod_size)
-            if c:
-                k = c["kind"]
-                rec = res["coll"].setdefault(k, {"count": 0, "bytes": 0.0,
-                                                 "wire_bytes": 0.0})
-                rec["count"] += 1
-                rec["bytes"] += c["bytes"]
-                rec["wire_bytes"] += c["wire"]
-                res["coll_wire"] += c["wire"]
-                res["coll_count"] += 1
-                if c["dcn"]:
-                    res["dcn_wire"] += c["wire"]
-                else:
-                    res["ici_wire"] += c["wire"]
-            if inst.op not in _SKIP_BYTES_OPS:
-                b = _instr_bytes(inst, comp.table)
-                res["bytes"] += b
-                add_depth(depth, b)
-            # recurse
-            mult = 1
-            depth_child = depth
-            children = []
-            if inst.op == "while":
-                mt = _TRIP_RE.search(inst.line)
-                mult = int(mt.group(1)) if mt else 1
-                depth_child = depth + 1
-                mb = re.search(r"body=%?([\w.\-]+)", inst.line)
-                if mb:
-                    children = [mb.group(1)]
-            elif inst.op in ("fusion", "call", "map", "reduce",
-                             "reduce-window", "sort", "scatter",
-                             "select-and-scatter", "all-reduce"):
-                children = _CALLED_RE.findall(inst.line)
-            elif inst.op == "conditional":
-                mb = _BRANCHES_RE.search(inst.line)
-                if mb:
-                    children = [c.strip().lstrip("%")
-                                for c in mb.group(1).split(",")]
-            for ch in children:
-                if ch in comps:
-                    sub = walk(comps[ch], depth_child)
-                    if inst.op == "fusion":
-                        # fusion: count internal dot flops (they execute)
-                        res["flops"] += mult * sub["flops"]
-                        # bytes already counted at the call site
-                    else:
-                        res["flops"] += mult * sub["flops"]
-                        res["bytes"] += mult * sub["bytes"]
-                        for d, b in sub["bytes_depth"].items():
-                            add_depth(d, mult * b)
-                    for k, rec in sub["coll"].items():
-                        dst = res["coll"].setdefault(
-                            k, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
-                        dst["count"] += mult * rec["count"]
-                        dst["bytes"] += mult * rec["bytes"]
-                        dst["wire_bytes"] += mult * rec["wire_bytes"]
-                    res["coll_wire"] += mult * sub["coll_wire"]
-                    res["dcn_wire"] += mult * sub["dcn_wire"]
-                    res["ici_wire"] += mult * sub["ici_wire"]
-                    res["coll_count"] += mult * sub["coll_count"]
-        return res
-
-    if entry is None:
-        raise ValueError("no ENTRY computation found")
-    out = dict(walk(entry))
-    out["computations"] = len(comps)
-    return out
-
-
-def collective_kind_counts(text: str, *, pod_size: int = 256) -> dict:
-    """Trip-corrected executed-op counts per collective kind for the
-    whole module (``{"all-gather": 12, ...}``; absent kinds are 0 via
-    ``.get``).  The backward re-gather and hybrid single-gather-per-layer
-    pins compare these counts across lowerings: a remat cell that
-    accidentally recomputes a weight gather, or a backward that is
-    SUPPOSED to re-gather, both show up as an all-gather count delta."""
-    res = analyze(text, pod_size=pod_size)
-    return {k: int(v["count"]) for k, v in res["coll"].items()}
-
-
-# ---------------------------------------------------------------------------
-# structural concurrency: can the lane (DCN) hop and a node (ICI)
-# collective of one pipeline step run at the same time?
-# ---------------------------------------------------------------------------
-
-def _instr_operands(inst: Instr, table: dict[str, str]) -> list[str]:
-    """Operand instruction names resolvable in the same computation."""
-    return [nm for nm in _operand_names(inst) if nm in table]
-
-
-def _ancestor_fn(comp: Computation):
-    """Memoized transitive-ancestor query over one computation's def-use
-    graph.  Edges follow every operand reference, so dependence chains
-    routed through tuple / get-tuple-element / bitcast plumbing are
-    ancestors too (they are ordinary instructions with operands)."""
-    ops_of = {i.name: _instr_operands(i, comp.table) for i in comp.instrs}
-    anc_memo: dict[str, frozenset] = {}
-
-    def ancestors(name: str) -> frozenset:
-        if name in anc_memo:
-            return anc_memo[name]
-        out: set[str] = set()
-        stack = list(ops_of.get(name, ()))
-        while stack:                           # iterative: HLO chains
-            cur = stack.pop()                  # can exceed Py recursion
-            if cur in out:
-                continue
-            out.add(cur)
-            if cur in anc_memo:
-                out |= anc_memo[cur]
-            else:
-                stack.extend(ops_of.get(cur, ()))
-        anc_memo[name] = frozenset(out)
-        return anc_memo[name]
-
-    return ancestors
-
-
-def _independent(ancestors, a: str, b: str) -> bool:
-    """True iff neither instruction is a def-use ancestor of the other."""
-    return a not in ancestors(b) and b not in ancestors(a)
-
-
-def collective_concurrency(text: str, *, pod_size: int = 256) -> dict:
-    """Verify, per computation, that a cross-pod (DCN) collective and an
-    intra-pod (ICI) collective exist with NO data dependence in either
-    direction — the structural precondition for the §5 pipeline's overlap
-    (XLA's scheduler cannot be forced, but absent a dependence edge it is
-    free to run both at once; present one, it never can).
-
-    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
-    where each pair is (computation, dcn_instr, dcn_kind, ici_instr,
-    ici_kind).  A scan-based pipeline puts both ops in the while-body
-    computation; an unrolled bucket schedule puts them straight in the
-    entry — both are covered because every computation is examined.
-    """
-    comps = parse_hlo(text)
-    comps.pop("__entry__", None)
-    pairs = []
-    per_comp: dict[str, dict] = {}
-    for cname, comp in comps.items():
-        if comp is None:
-            continue
-        colls = []
-        for inst in comp.instrs:
-            c = _collective(inst, pod_size)
-            if c:
-                colls.append((inst, c))
-        if not colls:
-            continue
-        dcn = [(i, c) for i, c in colls if c["dcn"]]
-        ici = [(i, c) for i, c in colls if not c["dcn"]]
-        per_comp[cname] = {"dcn": len(dcn), "ici": len(ici), "pairs": 0}
-        if not dcn or not ici:
-            continue
-        ancestors = _ancestor_fn(comp)
-        for di, dc in dcn:
-            for ni, nc in ici:
-                if _independent(ancestors, di.name, ni.name):
-                    pairs.append((cname, di.name, dc["kind"],
-                                  ni.name, nc["kind"]))
-                    per_comp[cname]["pairs"] += 1
-    return {"concurrent": bool(pairs), "pairs": pairs,
-            "per_computation": per_comp}
-
-
-# ---------------------------------------------------------------------------
-# structural concurrency, collective vs COMPUTE: can the ZeRO-3 prefetch
-# all-gather of layer i+1 run under layer i's dot FLOPs?
-# ---------------------------------------------------------------------------
-
-def _called_comps(line: str) -> list[str]:
-    """Every computation a line references: calls=/condition=/body=/
-    to_apply= AND conditional branch_computations={...}."""
-    out = _CALLED_RE.findall(line)
-    mb = _BRANCHES_RE.search(line)
-    if mb:
-        out += [c.strip().lstrip("%") for c in mb.group(1).split(",")]
-    return out
-
-
-def _carrier_comps(comps: dict, direct) -> set:
-    """Names of computations that transitively contain an instruction for
-    which ``direct(inst)`` is true — through while bodies, fusions, calls
-    and conditional branches alike."""
-    memo: dict[str, bool] = {}
-
-    def has(name: str) -> bool:
-        if name in memo:
-            return memo[name]
-        memo[name] = False                     # cycle guard (HLO is acyclic)
-        comp = comps.get(name)
-        if comp is None:
-            return False
-        for inst in comp.instrs:
-            if direct(inst) or any(has(ch)
-                                   for ch in _called_comps(inst.line)):
-                memo[name] = True
-                break
-        return memo[name]
-
-    return {n for n in comps if n != "__entry__" and has(n)}
-
-
-_CALLER_OPS = ("while", "fusion", "call", "conditional", "map")
-
-
-def collective_compute_concurrency(text: str, *, pod_size: int = 256,
-                                   coll_kinds=None) -> dict:
-    """Verify, per computation, that a collective and a FLOP-carrying
-    instruction coexist with NO data dependence in either direction — the
-    structural precondition for hiding a ZeRO-3 weight-prefetch
-    all-gather under a layer's matmuls (multi-core cluster model: overlap
-    must be provable on the graph, not inferred from CPU wall-clock,
-    which cannot show the win on shared-memory host devices).
-
-    An instruction "carries" a collective/FLOPs either directly (an
-    all-gather / a dot) or by calling into a computation that transitively
-    contains one (a fusion of dots; the inner while loop of the pipelined
-    per-layer gather).  That nesting matters: the layer scan's body holds
-    the prefetch gather as a ``while`` instruction (the AG pipeline) next
-    to the current layer's dot fusions — def-use-independent, so XLA may
-    overlap them.  A BLOCKING gather chains every dot behind its own
-    all-gather, so no independent pair survives — the negative control.
-
-    ``coll_kinds`` restricts which collective kinds count (default: the
-    gather-shaped kind the prefetch path is built from).
-
-    Returns {"concurrent": bool, "pairs": [...], "per_computation": {...}}
-    with pairs (computation, coll_instr, coll_kind_or_op, compute_instr,
-    compute_op).
-    """
-    if coll_kinds is None:
-        coll_kinds = ("all-gather",)
-    comps = parse_hlo(text)
-    comps.pop("__entry__", None)
-
-    def direct_coll(inst):
-        c = _collective(inst, pod_size)
-        return bool(c and c["kind"] in coll_kinds)
-
-    def direct_flops(inst):
-        return inst.op in ("dot", "convolution")
-
-    coll_comps = _carrier_comps(comps, direct_coll)
-    flop_comps = _carrier_comps(comps, direct_flops)
-
-    def carriers(comp, direct, carrier_set):
-        out = []
-        for inst in comp.instrs:
-            if direct(inst):
-                out.append(inst)
-            elif inst.op in _CALLER_OPS and any(
-                    ch in carrier_set
-                    for ch in _called_comps(inst.line)):
-                out.append(inst)
-        return out
-
-    pairs = []
-    per_comp: dict[str, dict] = {}
-    for cname, comp in comps.items():
-        if comp is None:
-            continue
-        colls = carriers(comp, direct_coll, coll_comps)
-        if not colls:
-            continue
-        compute = carriers(comp, direct_flops, flop_comps)
-        per_comp[cname] = {"colls": len(colls), "compute": len(compute),
-                           "pairs": 0}
-        if not compute:
-            continue
-        ancestors = _ancestor_fn(comp)
-        for ci in colls:
-            ckind = (_collective(ci, pod_size) or {}).get("kind", ci.op)
-            for fi in compute:
-                if fi.name == ci.name:
-                    continue                   # one instr carrying both
-                if _independent(ancestors, ci.name, fi.name):
-                    pairs.append((cname, ci.name, ckind, fi.name, fi.op))
-                    per_comp[cname]["pairs"] += 1
-    return {"concurrent": bool(pairs), "pairs": pairs,
-            "per_computation": per_comp}
+from repro.analysis.footprint import (  # noqa: F401
+    _COLL_KINDS,
+    _DTYPE_BYTES,
+    _RESULT_BYTES_OPS,
+    _SKIP_BYTES_OPS,
+    Computation,
+    Instr,
+    _ancestor_fn,
+    _bytes_of,
+    _called_comps,
+    _carrier_comps,
+    _collective,
+    _dims,
+    _elems_of,
+    _independent,
+    _instr_bytes,
+    _operand_names,
+    analyze,
+    collective_compute_concurrency,
+    collective_concurrency,
+    collective_kind_counts,
+    comm_footprint,
+    group_info,
+    parse_hlo,
+    permute_edges,
+    replica_groups,
+)
+
+__all__ = [
+    "analyze", "collective_kind_counts", "collective_concurrency",
+    "collective_compute_concurrency", "comm_footprint", "group_info",
+    "parse_hlo", "replica_groups", "permute_edges",
+]

@@ -108,7 +108,10 @@ def param_pspecs(params_shapes: Any, cfg: ModelConfig, mesh, *,
             return P()
         base = [sub(e) for e in base]
         lead = nd - len(base)
-        assert lead >= 0, (ps, leaf.shape, base)
+        if lead < 0:
+            raise RuntimeError(
+                f"spec {ps} has more sharded dims than leaf shape "
+                f"{leaf.shape} (base {base})")
         return P(*([None] * lead + list(base)))
 
     specs = jax.tree_util.tree_map_with_path(rule, params_shapes)

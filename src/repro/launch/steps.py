@@ -71,7 +71,9 @@ def build_train_step(cfg: ModelConfig, run: RunConfig,
             loss, grads = jax.value_and_grad(lf)(params, tokens, labels, extra)
         else:
             B = tokens.shape[0]
-            assert B % mb == 0, (B, mb)
+            if B % mb:
+                raise ValueError(
+                    f"per-chip batch {B} must divide by microbatch {mb}")
 
             def sh(a):
                 if a is None:
@@ -714,7 +716,8 @@ def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
         ospecs = {"m": P(topo.node_axes), "v": P(topo.node_axes),
                   "count": P()}
         return LaneTrainState(params, opt, pspecs, ospecs, layout)
-    assert kind == "zero3", kind
+    if kind != "zero3":
+        raise ValueError(f"unknown lane state layout kind {kind!r}")
     fspec = block_stack_spec(cfg)
     stack, extras, repl = split_params(fspec, params)
     shards_b, Bb = shard_stack(stack, n, N, run.fsdp_prefetch)
@@ -827,7 +830,8 @@ def state_to_replicated(cfg: ModelConfig, entry: dict, state):
             treedef, split_flat_order(flat, [l.shape for l in leaves_t]))
         return params, {"m": mk(opt["m"]), "v": mk(opt["v"]),
                         "count": opt["count"]}
-    assert kind == "zero3", kind
+    if kind != "zero3":
+        raise ValueError(f"unknown lane state layout kind {kind!r}")
     fspec = block_stack_spec(cfg)
     stack_t, extras_t, _ = split_params(fspec, params_t)
     lay_b = stack_layout(stack_t, stacked=True)
@@ -872,7 +876,8 @@ def replicated_to_state(cfg: ModelConfig, run: RunConfig, n: int, N: int,
         return params, {"m": lay1(opt_state["m"]),
                         "v": lay1(opt_state["v"]),
                         "count": opt_state["count"]}
-    assert kind == "zero3", kind
+    if kind != "zero3":
+        raise ValueError(f"unknown lane state layout kind {kind!r}")
     fspec = block_stack_spec(cfg)
     stack, extras, repl = split_params(fspec, params)
     shards_b, _ = shard_stack(stack, n, N, run.fsdp_prefetch)

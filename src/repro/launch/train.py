@@ -265,6 +265,15 @@ def main(argv=None):
     return 1
 
 
+def _tuning_cache_path(args) -> str:
+    """Where the timing cache lives: ``--tuning-cache`` if given, else
+    beside the checkpoints, else nowhere ("")."""
+    import os
+    from repro.tuning import DEFAULT_CACHE_NAME
+    return args.tuning_cache or (
+        os.path.join(args.ckpt, DEFAULT_CACHE_NAME) if args.ckpt else "")
+
+
 def _setup_tuner(args, mesh, ba):
     """Restore/probe the timing cache and return a Tuner (or None).
 
@@ -272,17 +281,19 @@ def _setup_tuner(args, mesh, ba):
     (``--tuning-cache`` overrides), so a resumed run re-ranks with the
     same measured costs it committed to — measure once, then commit.
     A missing or corrupt cache degrades to the closed-form model; with
-    ``--tune`` the probe fills (only) unmeasured cells and the merged
-    table is saved back atomically.
+    ``--tune`` the probe fills (only) unmeasured cells — the ladder
+    sweep PLUS the persisted cache-miss worklist (payload sizes a
+    previous run's dispatch asked for but the cache could not answer) —
+    and the merged table is saved back atomically, consuming the
+    worklist.
     """
-    import os
     from repro.core.lane import LaneTopology
-    from repro.tuning import (DEFAULT_CACHE_NAME, DEFAULT_LADDER,
-                              SMOKE_LADDER, TimingTable, Tuner,
-                              load_timing_table_or_none, probe_cells,
-                              save_timing_table)
-    cache_path = args.tuning_cache or (
-        os.path.join(args.ckpt, DEFAULT_CACHE_NAME) if args.ckpt else "")
+    from repro.tuning import (DEFAULT_LADDER, SMOKE_LADDER, TimingTable,
+                              Tuner, load_timing_table_or_none,
+                              probe_cells, save_timing_table)
+    from repro.tuning.probe import probe_worklist
+    from repro.tuning.store import load_misses
+    cache_path = _tuning_cache_path(args)
     if not cache_path and not args.tune:
         return None
     table = (load_timing_table_or_none(cache_path)
@@ -291,11 +302,35 @@ def _setup_tuner(args, mesh, ba):
         topo = LaneTopology(node_axes=ba[1:], lane_axis=ba[0])
         ladder = SMOKE_LADDER if args.smoke else DEFAULT_LADDER
         probe_cells(mesh, topo, ladder=ladder, table=table)
+        worklist = load_misses(cache_path) if cache_path else []
+        if worklist:
+            probed = probe_worklist(mesh, topo, worklist, table=table)
+            print(f"tuning worklist: {probed}/{len(worklist)} recorded "
+                  f"misses probed", flush=True)
         if cache_path:
             save_timing_table(cache_path, table)
             print(f"tuning cache committed: {cache_path} "
                   f"({len(table)} cells)", flush=True)
     return Tuner(table) if len(table) else None
+
+
+def _commit_tuner_misses(args, tuner) -> None:
+    """Persist the misses dispatch accumulated this run so the next
+    ``--tune`` launch probes exactly those cells (the "commit" half of
+    measure-once-then-commit for payloads the ladder never covered).
+    Best-effort: a failed write must not fail a finished run."""
+    from repro.tuning import save_timing_table
+    cache_path = _tuning_cache_path(args)
+    if not (cache_path and tuner is not None and tuner.misses):
+        return
+    try:
+        save_timing_table(cache_path, tuner.table, misses=tuner.misses)
+        uniq = len(dict.fromkeys(tuple(m) for m in tuner.misses))
+        print(f"tuning misses committed: {uniq} cells queued for the "
+              f"next --tune pass ({cache_path})", flush=True)
+    except OSError as e:
+        print(f"WARNING: tuning miss commit failed: {e}",
+              file=sys.stderr, flush=True)
 
 
 def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
@@ -472,6 +507,7 @@ def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
                       f"{e!r}", file=sys.stderr, flush=True)
                 if not unwinding:
                     raise
+    _commit_tuner_misses(args, tuner)
     if restart_lost is not None:
         print(f"RESTART at step {done}: emergency checkpoint committed, "
               f"shrinking around pods {health.restart_pods()}", flush=True)

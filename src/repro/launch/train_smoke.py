@@ -59,11 +59,15 @@ def main(argv=None) -> int:
                         "--seq", "32", "--ckpt", ck, "--ckpt-every", "2",
                         "--log-every", "1", "--gradsync", s, "--pods", "2"]
                 rc = train_main([*base, "--steps", "2"])
-                assert rc == 0 and latest_step(ck) == 2, \
-                    (rc, latest_step(ck))
+                if rc != 0 or latest_step(ck) != 2:
+                    raise RuntimeError(
+                        f"fresh run failed: rc={rc}, "
+                        f"step={latest_step(ck)}")
                 rc = train_main([*base, "--steps", "3"])    # restore path
-                assert rc == 0 and latest_step(ck) == 3, \
-                    (rc, latest_step(ck))
+                if rc != 0 or latest_step(ck) != 3:
+                    raise RuntimeError(
+                        f"restore run failed: rc={rc}, "
+                        f"step={latest_step(ck)}")
         except Exception as e:  # noqa: BLE001
             fails.append(name)
             print(f"FAIL {name}: {e!r}", flush=True)

@@ -225,7 +225,8 @@ def _embed_inputs(params, cfg: ModelConfig, tokens, extra_embeds):
     """Token embeds, with VLM patch prefix when provided."""
     h = L.embed(params["embed"], tokens)
     if cfg.family == "vlm":
-        assert extra_embeds is not None, "vlm needs patch embeddings"
+        if extra_embeds is None:
+            raise ValueError("vlm needs patch embeddings")
         vis = extra_embeds @ params["vis_proj"]
         h = jnp.concatenate([vis.astype(h.dtype), h], axis=1)
     return h
@@ -239,7 +240,8 @@ def model_forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     """
     enc_out = None
     if cfg.family == "audio":
-        assert extra_embeds is not None, "audio needs frame embeddings"
+        if extra_embeds is None:
+            raise ValueError("audio needs frame embeddings")
         enc_out = _encoder_forward(params, cfg, extra_embeds, remat)
         h = L.embed(params["embed"], tokens)
     else:

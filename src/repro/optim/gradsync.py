@@ -191,7 +191,10 @@ def bucket_schedule(flat, num_buckets: int,
             if 0 <= s < S and done[b] == s:
                 vals[b] = stages[s](vals[b])
                 done[b] += 1
-    assert all(d == S for d in done)
+    if not all(d == S for d in done):
+        raise RuntimeError(
+            f"bucket schedule incomplete: stage counts {done}, "
+            f"expected {S} each")
     return vals
 
 

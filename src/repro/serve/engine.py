@@ -172,7 +172,10 @@ class ContinuousBatcher:
             max_new_tokens=req.max_new_tokens, max_seq=self.max_seq)
         if reason is None:
             return False
-        assert req.finish_reason is None, (req.rid, req.finish_reason)
+        if req.finish_reason is not None:
+            raise RuntimeError(
+                f"request {req.rid} finished twice "
+                f"({req.finish_reason!r} then {reason!r})")
         req.finish_reason = reason
         req.done = True
         req.t_done = time.perf_counter()
@@ -227,7 +230,9 @@ class ContinuousBatcher:
                 f"exceeds max_seq={self.max_seq}; shorten the prompt or "
                 f"lower max_new_tokens")
         b = self._bucket_for(L)
-        assert b >= L, (b, L)
+        if b < L:
+            raise RuntimeError(
+                f"prefill bucket {b} shorter than prompt length {L}")
         toks = np.zeros((1, b), np.int32)
         toks[0, :L] = prompt          # whole prompt, never sliced
         logits, st1 = self.step.prefill(self.hosted, jnp.asarray(toks), L,

@@ -37,11 +37,16 @@ def _run_scenarios(cfg, params, kinds, *, slots):
         reqs = make_scenario(cfg, kind=kind, n=5, seed=3, max_seq=96)
         eng = ContinuousBatcher(params, cfg, slots=slots, max_seq=96)
         done, stats = eng.run(reqs)
-        assert len(done) == len(reqs), (kind, len(done))
-        assert stats["decode_tokens"] > 0, kind
+        if len(done) != len(reqs):
+            raise RuntimeError(f"{kind}: {len(done)}/{len(reqs)} done")
+        if stats["decode_tokens"] <= 0:
+            raise RuntimeError(f"{kind}: no decode tokens")
         for r in done:
-            assert r.done and r.finish_reason is not None, (kind, r.rid)
-            assert r.t_first is not None, (kind, r.rid)
+            if not r.done or r.finish_reason is None:
+                raise RuntimeError(f"{kind}: request {r.rid} unfinished")
+            if r.t_first is None:
+                raise RuntimeError(f"{kind}: request {r.rid} missing "
+                                   f"first-token time")
         print(f"  {cfg.family:6s} {kind:13s} "
               f"{stats['decode_tokens']:4d} tok  "
               f"{stats['tok_per_s']:.1f} tok/s", flush=True)
@@ -84,24 +89,32 @@ def main(argv=None) -> int:
                              "--batch", "8", "--seq", "32", "--ckpt", ck,
                              "--steps", "2", "--ckpt-every", "2",
                              "--gradsync", "native", "--pods", "2"])
-            assert rc == 0, rc
+            if rc != 0:
+                raise RuntimeError(f"training run failed: rc={rc}")
             params, step = load_serve_params(ck, cfg)
-            assert step == 2, step
+            if step != 2:
+                raise RuntimeError(f"loaded step {step}, expected 2")
         reqs = lambda: make_scenario(cfg, kind="short_chat", n=6,  # noqa: E731
                                      seed=7, max_seq=96)
         rep = ContinuousBatcher(params, cfg, slots=2, max_seq=96)
         rep_done, _ = rep.run(reqs())
-        assert all(r.done for r in rep_done)
+        if not all(r.done for r in rep_done):
+            raise RuntimeError("replicated engine left requests undone")
         mesh = jax.sharding.Mesh(
             np.array(jax.devices()).reshape(2, 2, 2),
             ("pod", "data", "model"))
         z3 = ContinuousBatcher(params, cfg, slots=8, max_seq=96,
                                hosting="lane_zero3", mesh=mesh)
         z3_done, z3_stats = z3.run(reqs())
-        assert z3_stats["hosting"] == "lane_zero3"
+        if z3_stats["hosting"] != "lane_zero3":
+            raise RuntimeError(f"hosting {z3_stats['hosting']!r}, "
+                               f"expected lane_zero3")
         a = {r.rid: r.out for r in rep_done}
         b = {r.rid: r.out for r in z3_done}
-        assert a == b, {k: (a[k], b[k]) for k in a if a[k] != b[k]}
+        if a != b:
+            raise RuntimeError(
+                f"zero3 ≠ replicated: "
+                f"{ {k: (a[k], b[k]) for k in a if a[k] != b[k]} }")
         print(f"  ckpt step {step} → replicated == lane_zero3 over "
               f"{len(a)} requests", flush=True)
 

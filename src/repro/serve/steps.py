@@ -86,6 +86,10 @@ class ServeStep:
         every slot)
     collectives: {"weights": (collective, strategy), "kv": ...} — the
         registry cells this step resolves (empty for replicated).
+    debug_lower: optional ``(params) -> {name: compiled-HLO text}`` AOT
+        hook — lowers the step's jitted surfaces WITHOUT executing them,
+        for the lanelint step sweep (``repro.analysis``).  None when the
+        hosting has no distributed lowering worth walking (replicated).
     """
     hosting: str
     cfg: ModelConfig
@@ -96,6 +100,7 @@ class ServeStep:
     decode: Callable
     splice: Callable
     collectives: dict
+    debug_lower: Any = None
 
 
 def serve_hostings() -> tuple:
@@ -255,7 +260,10 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
         shards_b, got_b = shard_stack(stack, n, N, ctx.prefetch_blocks)
         shards_e, got_e = shard_stack(extras, n, N, ctx.prefetch_blocks,
                                       stacked=False)
-        assert (got_b, got_e) == (Bb, Be), ((got_b, got_e), (Bb, Be))
+        if (got_b, got_e) != (Bb, Be):
+            raise RuntimeError(
+                f"prepare resolved prefetch blocks {(got_b, got_e)} but "
+                f"the step was built for {(Bb, Be)}")
         hosted = {k: jax.device_put(v, NamedSharding(mesh, P()))
                   for k, v in repl.items()}
         hosted["blocks"] = jax.device_put(shards_b,
@@ -330,11 +338,13 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
         params = _assemble(hosted, comm)
         return decode_step(params, cfg, tok, state)
 
-    def decode(hosted, tok, state):
-        fn = _get("decode", hosted, lambda hs: _wrap(
+    def _decode_fn(hosted):
+        return _get("decode", hosted, lambda hs: _wrap(
             _decode_local, (hs, P(bpart, None), sspec),
             (P(bpart, None, None), sspec), donate=(2,)))
-        return fn(hosted, tok, state)
+
+    def decode(hosted, tok, state):
+        return _decode_fn(hosted)(hosted, tok, state)
 
     def _splice_local(state, st1, slot):
         comm = _comm()
@@ -356,12 +366,31 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
     def splice(state, st1, slot):
         return splice_fn(state, st1, jnp.asarray(slot, jnp.int32))
 
+    def debug_lower(params):
+        """AOT compiled HLO of the distributed serving surfaces (decode
+        with its prefetch weight gathers, and the kv_splice) — nothing
+        executes; the lanelint step sweep walks the text for R1."""
+        hosted = prepare(params)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), hosted)
+        tok = jax.ShapeDtypeStruct((ctx.slots, 1), jnp.int32)
+        st_t = jax.eval_shape(
+            lambda: _init_serve_state(cfg, ctx.slots, ctx.max_seq))
+        st1_t = jax.eval_shape(
+            lambda: _init_serve_state(cfg, 1, ctx.max_seq))
+        slot = jax.ShapeDtypeStruct((), jnp.int32)
+        dec = _decode_fn(hosted).lower(shapes, tok,
+                                       st_t).compile().as_text()
+        spl = splice_fn.lower(st_t, st1_t, slot).compile().as_text()
+        return {"decode": dec, "splice": spl}
+
     return ServeStep(
         hosting="lane_zero3", cfg=cfg, ctx=ctx, prepare=prepare,
         init_state=init_state, prefill=prefill_step, decode=decode,
         splice=splice,
         collectives={"weights": weights_cell,
-                     "kv": ("kv_splice", ctx.kv_strategy)})
+                     "kv": ("kv_splice", ctx.kv_strategy)},
+        debug_lower=debug_lower)
 
 
 # ---------------------------------------------------------------------------

@@ -30,10 +30,11 @@ from .backend import (
 from .fit import FitResult, design_row, fit_hw, predicted_us
 from .guideline_report import DEFAULT_TOLERANCE, build_report
 from .probe import (
-    DEFAULT_LADDER, SMOKE_LADDER, probe_cells, probeable_collectives,
+    DEFAULT_LADDER, SMOKE_LADDER, probe_cells, probe_worklist,
+    probeable_collectives,
 )
 from .store import (
-    DEFAULT_CACHE_NAME, TuningCacheError, load_timing_table,
+    DEFAULT_CACHE_NAME, TuningCacheError, load_misses, load_timing_table,
     load_timing_table_or_none, save_timing_table,
 )
 from .table import (
@@ -47,10 +48,10 @@ __all__ = [
     "topology_signature", "parse_topology_signature",
     # store
     "TuningCacheError", "save_timing_table", "load_timing_table",
-    "load_timing_table_or_none", "DEFAULT_CACHE_NAME",
+    "load_timing_table_or_none", "load_misses", "DEFAULT_CACHE_NAME",
     # probe
-    "probe_cells", "probeable_collectives", "DEFAULT_LADDER",
-    "SMOKE_LADDER",
+    "probe_cells", "probe_worklist", "probeable_collectives",
+    "DEFAULT_LADDER", "SMOKE_LADDER",
     # fit
     "FitResult", "fit_hw", "design_row", "predicted_us",
     # report

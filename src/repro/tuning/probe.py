@@ -1,11 +1,13 @@
 """Probe harness: time registered (collective, strategy) cells in place.
 
 Walks the :mod:`repro.comm` registry — the probe grid IS the dispatch
-grid: exactly the auto-eligible, costed cells ``LaneComm.select`` ranks
-— and times each one under ``jax.shard_map`` on the live mesh at a
-ladder of payload sizes, producing :class:`~repro.tuning.table.
-TimingTable` entries keyed the way dispatch will look them up (LOCAL
-per-chip payload bytes, the trace-time ``_payload_bytes`` quantity).
+grid: exactly the probe-eligible cells (``ImplEntry.probe_eligible``:
+the auto-ranked costed set, plus cells that opt in with
+``probe_ok=True`` such as the blocking prefetch negative control) — and
+times each one under ``jax.shard_map`` on the live mesh at a ladder of
+payload sizes, producing :class:`~repro.tuning.table.TimingTable`
+entries keyed the way dispatch will look them up (LOCAL per-chip
+payload bytes, the trace-time ``_payload_bytes`` quantity).
 
 Measurement reuses the guideline discipline of
 :mod:`repro.core.guidelines`: seeded payloads, warmup discarded,
@@ -16,7 +18,9 @@ Cells already present in the table are skipped — the "once" half of
 measure-once-then-commit: a fleet restoring its cache from the
 checkpoint directory re-probes only what it has never measured (e.g.
 after an elastic restart changed (n, N) and the old signatures went
-stale).
+stale).  ``probe_worklist`` drives the same machinery from a
+``Tuner.misses`` list: payloads dispatch actually asked for but the
+cache could not answer.
 """
 from __future__ import annotations
 
@@ -32,8 +36,8 @@ from repro.core.guidelines import median_us, time_fn_samples
 from .table import TimingEntry, TimingTable, payload_bucket, \
     topology_signature
 
-__all__ = ["probe_cells", "probeable_collectives", "DEFAULT_LADDER",
-           "SMOKE_LADDER"]
+__all__ = ["probe_cells", "probe_worklist", "probeable_collectives",
+           "DEFAULT_LADDER", "SMOKE_LADDER"]
 
 # local per-chip payload bytes; the non-smoke top rung (2 MiB) is the
 # full gradsync bench's per-chip stripe, the 32 KiB rung its smoke one
@@ -48,6 +52,7 @@ _PROBE_OUT = {
     "allreduce": "repl",
     "allgather": "repl",
     "reduce_scatter": "local",
+    "prefetch_allgather": "repl",
 }
 
 
@@ -77,23 +82,56 @@ def _build_cell(mesh, topo, collective: str, strategy: str,
     return fn, arr
 
 
+def _round_local_elems(local_bytes: int, p: int) -> int:
+    """Round the per-chip payload up to a p² multiple of elements so
+    every lane/node split divides evenly (the same divisibility
+    dispatch's feasible() gates on)."""
+    unit = p * p
+    return max(unit, (local_bytes // 4 + unit - 1) // unit * unit)
+
+
+def _probe_one(mesh, topo, e, local_bytes: int, *, table: TimingTable,
+               sig: str, cfg: CommConfig, reps: int, warmup: int,
+               verbose: bool) -> None:
+    """Measure one cell at one ladder rung into ``table`` (idempotent:
+    measured and infeasible cells are skipped)."""
+    n, N = topo.sizes(mesh)
+    p = max(n * N, 1)
+    local_elems = _round_local_elems(local_bytes, p)
+    payload = local_elems * 4
+    if e.feasible is not None and not e.feasible(n, N, local_elems):
+        return
+    if table.get(e.collective, e.strategy, sig,
+                 payload_bucket(payload)) is not None:
+        return                  # measured once already — committed
+    fn, arr = _build_cell(mesh, topo, e.collective, e.strategy,
+                          local_elems, cfg)
+    samples = time_fn_samples(fn, arr, reps=reps, warmup=warmup)
+    entry = TimingEntry(e.collective, e.strategy, sig, payload,
+                        median_us(samples), min(samples), reps)
+    table.put(entry)
+    if verbose:
+        print(f"probe {e.collective:14s} {e.strategy:15s} "
+              f"{payload:>9d}B  median={entry.median_us:9.1f}us"
+              f"  min={entry.min_us:9.1f}us", flush=True)
+
+
 def probe_cells(mesh, topo, *, collectives: Optional[tuple] = None,
                 ladder: Optional[tuple] = None, reps: int = 5,
                 warmup: int = 2, table: Optional[TimingTable] = None,
                 verbose: bool = True) -> TimingTable:
-    """Time every auto-eligible registered cell of ``collectives`` at
+    """Time every probe-eligible registered cell of ``collectives`` at
     each ``ladder`` payload (local per-chip bytes) on ``(mesh, topo)``,
     into ``table`` (fresh one by default).  Already-measured cells are
     skipped (measure-once); infeasible cells (divisibility) are skipped
     exactly as dispatch would skip them.  Returns the table."""
     if collectives is None:
-        collectives = ("grad_sync", "allreduce")
+        collectives = ("grad_sync", "allreduce", "prefetch_allgather")
     if ladder is None:
         ladder = DEFAULT_LADDER
     if table is None:
         table = TimingTable()
     n, N = topo.sizes(mesh)
-    p = max(n * N, 1)
     sig = topology_signature(n, N)
     cfg = CommConfig(record_selections=False)
     for coll in collectives:
@@ -102,33 +140,38 @@ def probe_cells(mesh, topo, *, collectives: Optional[tuple] = None,
                 f"don't know how to probe {coll!r}; probeable: "
                 f"{probeable_collectives()}")
         for e in iter_impls(coll):
-            if not e.auto_ok or e.cost is None:
-                continue        # exactly the set select() ranks
+            if not e.probe_eligible:
+                continue
             for local_bytes in ladder:
-                # round the per-chip payload up to a p² multiple of
-                # elements so every lane/node split divides evenly
-                # (the same divisibility dispatch's feasible() gates on)
-                unit = p * p
-                local_elems = max(unit,
-                                  (local_bytes // 4 + unit - 1)
-                                  // unit * unit)
-                payload = local_elems * 4
-                if e.feasible is not None \
-                        and not e.feasible(n, N, local_elems):
-                    continue
-                if table.get(coll, e.strategy, sig,
-                             payload_bucket(payload)) is not None:
-                    continue    # measured once already — committed
-                fn, arr = _build_cell(mesh, topo, coll, e.strategy,
-                                      local_elems, cfg)
-                samples = time_fn_samples(fn, arr, reps=reps,
-                                          warmup=warmup)
-                entry = TimingEntry(coll, e.strategy, sig, payload,
-                                    median_us(samples), min(samples),
-                                    reps)
-                table.put(entry)
-                if verbose:
-                    print(f"probe {coll:14s} {e.strategy:15s} "
-                          f"{payload:>9d}B  median={entry.median_us:9.1f}us"
-                          f"  min={entry.min_us:9.1f}us", flush=True)
+                _probe_one(mesh, topo, e, local_bytes, table=table,
+                           sig=sig, cfg=cfg, reps=reps, warmup=warmup,
+                           verbose=verbose)
     return table
+
+
+def probe_worklist(mesh, topo, misses, *, table: TimingTable,
+                   reps: int = 5, warmup: int = 2,
+                   verbose: bool = True) -> int:
+    """Probe exactly the cells a :class:`~repro.tuning.table.Tuner`
+    recorded as cache misses — ``(collective, strategy, n, N,
+    payload_bytes)`` tuples, the payloads dispatch actually asked for.
+
+    Misses recorded at a different topology than ``(mesh, topo)``'s are
+    skipped (they cannot be measured here), as are collectives the
+    harness cannot drive.  Returns the number of cells probed."""
+    from repro.comm import has_impl
+    from repro.comm.registry import get_impl
+    n, N = topo.sizes(mesh)
+    sig = topology_signature(n, N)
+    cfg = CommConfig(record_selections=False)
+    before = len(table)
+    for coll, strategy, mn, mN, payload_bytes in dict.fromkeys(
+            tuple(m) for m in misses):
+        if (int(mn), int(mN)) != (n, N):
+            continue            # stale topology — not measurable here
+        if coll not in _PROBE_OUT or not has_impl(coll, strategy):
+            continue
+        _probe_one(mesh, topo, get_impl(coll, strategy),
+                   int(payload_bytes), table=table, sig=sig, cfg=cfg,
+                   reps=reps, warmup=warmup, verbose=verbose)
+    return len(table) - before

@@ -28,7 +28,7 @@ from .table import TimingTable
 
 __all__ = [
     "TuningCacheError", "save_timing_table", "load_timing_table",
-    "load_timing_table_or_none", "DEFAULT_CACHE_NAME",
+    "load_timing_table_or_none", "load_misses", "DEFAULT_CACHE_NAME",
 ]
 
 FORMAT_VERSION = 1
@@ -46,9 +46,22 @@ def _canon(payload) -> str:
 
 
 def save_timing_table(path: Union[str, pathlib.Path],
-                      table: TimingTable) -> pathlib.Path:
-    """Atomically write ``table`` to ``path`` (parents created)."""
+                      table: TimingTable,
+                      misses=None) -> pathlib.Path:
+    """Atomically write ``table`` to ``path`` (parents created).
+
+    ``misses`` — optional iterable of ``(collective, strategy, n, N,
+    payload_bytes)`` cache-miss tuples accumulated by a
+    :class:`~repro.tuning.table.Tuner`; persisted (deduplicated, sorted)
+    so the next ``--tune`` launch can re-probe exactly the payloads
+    dispatch asked for.  The key is serialized ONLY when non-empty, so a
+    miss-free save of a loaded table reproduces the original bytes
+    (the byte-identity property above).
+    """
     payload = {"version": FORMAT_VERSION, "entries": table.to_doc()}
+    rows = sorted(dict.fromkeys(tuple(m) for m in (misses or ())))
+    if rows:
+        payload["misses"] = [list(r) for r in rows]
     body = _canon(payload)
     doc = {"crc32": zlib.crc32(body.encode("utf-8")), "payload": payload}
     p = pathlib.Path(path)
@@ -89,6 +102,27 @@ def load_timing_table(path: Union[str, pathlib.Path]) -> TimingTable:
         return TimingTable.from_doc(payload.get("entries", []))
     except ValueError as e:
         raise TuningCacheError(f"tuning cache {p}: {e}")
+
+
+def load_misses(path: Union[str, pathlib.Path]) -> list:
+    """The persisted cache-miss worklist, as ``(collective, strategy,
+    n, N, payload_bytes)`` tuples.  Empty list when the cache is
+    missing, corrupt, or carries no ``misses`` key — misses are
+    advisory (a re-probe hint), so unlike the entries themselves a
+    rotten worklist never blocks a launch."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    try:
+        doc = json.loads(p.read_text())
+        payload = doc["payload"]
+        if int(doc["crc32"]) != zlib.crc32(_canon(payload).encode("utf-8")):
+            return []
+        rows = payload.get("misses", [])
+        return [(str(c), str(s), int(n), int(N), int(b))
+                for c, s, n, N, b in rows]
+    except (OSError, ValueError, KeyError, TypeError):
+        return []
 
 
 def load_timing_table_or_none(

@@ -30,11 +30,13 @@ EXPECTED_EXPORTS = {
     "ImplEntry":
         "(collective: 'str', strategy: 'str', fn: 'Callable', cost: "
         "'Optional[Callable]' = None, auto_ok: 'bool' = True, feasible: "
-        "'Optional[Callable]' = None) -> None",
+        "'Optional[Callable]' = None, probe_ok: 'Optional[bool]' = None) "
+        "-> None",
     "register_impl":
         "(collective: 'str', strategy: 'str', *, cost: 'Optional[Callable]'"
         " = None, auto_ok: 'bool' = True, feasible: 'Optional[Callable]' = "
-        "None, override: 'bool' = False) -> 'Callable'",
+        "None, probe_ok: 'Optional[bool]' = None, override: 'bool' = False)"
+        " -> 'Callable'",
     "get_impl": "(collective: 'str', strategy: 'str') -> 'ImplEntry'",
     "has_impl": "(collective: 'str', strategy: 'str') -> 'bool'",
     "iter_impls": "(collective: 'str') -> 'tuple[ImplEntry, ...]'",
@@ -158,10 +160,10 @@ EXPECTED_TUNING_EXPORTS = {
     "topology_signature", "parse_topology_signature",
     # store
     "TuningCacheError", "save_timing_table", "load_timing_table",
-    "load_timing_table_or_none", "DEFAULT_CACHE_NAME",
+    "load_timing_table_or_none", "load_misses", "DEFAULT_CACHE_NAME",
     # probe
-    "probe_cells", "probeable_collectives", "DEFAULT_LADDER",
-    "SMOKE_LADDER",
+    "probe_cells", "probe_worklist", "probeable_collectives",
+    "DEFAULT_LADDER", "SMOKE_LADDER",
     # fit
     "FitResult", "fit_hw", "design_row", "predicted_us",
     # report
@@ -176,8 +178,13 @@ EXPECTED_TUNING_SIGNATURES = {
         "(table: 'TimingTable', *, platform: 'Optional[str]' = None, "
         "device_kind: 'Optional[str]' = None)",
     "save_timing_table":
-        "(path: 'Union[str, pathlib.Path]', table: 'TimingTable') -> "
-        "'pathlib.Path'",
+        "(path: 'Union[str, pathlib.Path]', table: 'TimingTable', "
+        "misses=None) -> 'pathlib.Path'",
+    "load_misses":
+        "(path: 'Union[str, pathlib.Path]') -> 'list'",
+    "probe_worklist":
+        "(mesh, topo, misses, *, table: 'TimingTable', reps: 'int' = 5, "
+        "warmup: 'int' = 2, verbose: 'bool' = True) -> 'int'",
     "load_timing_table":
         "(path: 'Union[str, pathlib.Path]') -> 'TimingTable'",
     "load_timing_table_or_none":
@@ -219,3 +226,45 @@ def test_auto_eligibility_locked():
     assert not entries["lane_int8"].auto_ok
     assert not entries["lane_zero1"].auto_ok
     assert not entries["lane_zero3"].auto_ok
+    # probe eligibility is a distinct axis: the blocking prefetch control
+    # is probed (probe_ok=True) while staying auto-ineligible
+    pf = {e.strategy: e for e in comm.iter_impls("prefetch_allgather")}
+    assert pf["blocking"].probe_ok is True and not pf["blocking"].auto_ok
+    assert pf["lane_pipelined"].probe_eligible
+
+
+EXPECTED_ANALYSIS_EXPORTS = {
+    # diagnostics / baseline spine
+    "Finding", "ERROR", "WARNING", "format_findings",
+    "load_baseline", "save_baseline", "apply_baseline",
+    "default_baseline_path",
+    # footprint layer
+    "CollOp", "CommFootprint", "comm_footprint", "analyze",
+    "collective_kind_counts", "collective_concurrency",
+    "collective_compute_concurrency", "scan_carried_concurrency",
+    "group_info", "parse_hlo", "replica_groups", "permute_edges",
+}
+
+
+def test_analysis_surface_locked():
+    """lanelint is public surface: the CLI, `make lint`, the hlo_stats
+    back-compat shim and the benches all name these.  The package root
+    must stay importable WITHOUT jax (the AST leg runs anywhere)."""
+    import repro.analysis as analysis
+    assert set(analysis.__all__) == EXPECTED_ANALYSIS_EXPORTS
+    for name in EXPECTED_ANALYSIS_EXPORTS:
+        assert hasattr(analysis, name), name
+    assert str(inspect.signature(analysis.comm_footprint)) == \
+        "(text: 'str', *, n: 'int', num_devices: 'Optional[int]' = None)" \
+        " -> 'CommFootprint'"
+    assert str(inspect.signature(analysis.scan_carried_concurrency)) == \
+        "(text: 'str', *, pod_size: 'int' = 256) -> 'dict'"
+    assert str(inspect.signature(analysis.Finding)) == \
+        "(rule: 'str', target: 'str', message: 'str', severity: 'str' = " \
+        "'error') -> None"
+    # the launch/hlo_stats shim keeps re-exporting the moved core
+    import repro.launch.hlo_stats as shim
+    for name in ("parse_hlo", "analyze", "collective_concurrency",
+                 "collective_compute_concurrency",
+                 "collective_kind_counts"):
+        assert getattr(shim, name) is getattr(analysis, name), name

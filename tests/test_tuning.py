@@ -150,6 +150,75 @@ def test_corrupt_cache_never_crashes_dispatch(tmp_path):
     assert tn.measured_cost("grad_sync", "lane", 1, 1, 4096) is None
 
 
+def test_misses_persist_without_breaking_byte_identity(tmp_path):
+    """The persisted miss worklist (PR-8 follow-up): misses ride the
+    cache payload, deduplicated and sorted, and the key is absent on a
+    miss-free save — so the original byte-identity property holds."""
+    from repro.tuning import load_misses
+    sig = topology_signature(2, 2, platform="cpu", device_kind="cpu")
+    t = TimingTable([_entry("grad_sync", "lane", sig, 4096, 10.0)])
+    p0 = save_timing_table(tmp_path / "c.json", t)
+    clean = p0.read_bytes()
+    m = ("grad_sync", "native", 2, 2, 12345)
+    save_timing_table(p0, t, misses=[m, list(m), ("allreduce", "lane",
+                                                  2, 2, 64)])
+    assert load_misses(p0) == [("allreduce", "lane", 2, 2, 64), m]
+    assert load_timing_table(p0).to_doc() == t.to_doc()  # entries intact
+    # a miss-free re-save drops the key and restores the exact bytes
+    assert save_timing_table(p0, t).read_bytes() == clean
+    assert load_misses(p0) == []
+    # misses are advisory: corrupt/missing files yield [], never raise
+    assert load_misses(tmp_path / "absent.json") == []
+    p0.write_text("{not json")
+    assert load_misses(p0) == []
+
+
+def test_probe_eligibility_flag():
+    """probe_ok decouples probing from auto-eligibility: the blocking
+    prefetch control is probed (never auto-selected); an explicit
+    probe_ok=False excludes a priced cell."""
+    from repro.comm.registry import ImplEntry, get_impl
+    import repro.comm.impls  # noqa: F401 — populate the registry
+    def fn(comm, x):
+        return x
+    cost = lambda n, N, c, cfg: 1.0      # noqa: E731
+    assert not ImplEntry("c", "s", fn).probe_eligible          # unpriced
+    assert ImplEntry("c", "s", fn, cost=cost).probe_eligible
+    assert not ImplEntry("c", "s", fn, cost=cost,
+                         auto_ok=False).probe_eligible
+    assert ImplEntry("c", "s", fn, auto_ok=False,
+                     probe_ok=True).probe_eligible
+    assert not ImplEntry("c", "s", fn, cost=cost,
+                         probe_ok=False).probe_eligible
+    e = get_impl("prefetch_allgather", "blocking")
+    assert not e.auto_ok and e.probe_eligible
+
+
+def test_probe_worklist_replays_misses():
+    """probe_worklist measures exactly the recorded misses at the
+    payloads dispatch asked for, skipping stale topologies and
+    collectives the harness cannot drive."""
+    from repro.tuning import probe_worklist
+    mesh = _mesh11()
+    topo = LaneTopology(node_axes=("data",), lane_axis="pod")
+    table = TimingTable()
+    misses = [
+        ("grad_sync", "lane", 1, 1, 4096),
+        ("grad_sync", "lane", 1, 1, 4096),        # dup: probed once
+        ("grad_sync", "native", 1, 1, 4096),
+        ("grad_sync", "lane", 4, 2, 4096),        # stale topology
+        ("kv_splice", "native", 1, 1, 4096),      # not probeable
+    ]
+    probed = probe_worklist(mesh, topo, misses, table=table, reps=2,
+                            warmup=1, verbose=False)
+    assert probed == 2
+    assert {(e.collective, e.strategy) for e in table.entries()} == \
+        {("grad_sync", "lane"), ("grad_sync", "native")}
+    # idempotent: replaying the same worklist measures nothing new
+    assert probe_worklist(mesh, topo, misses, table=table, reps=2,
+                          warmup=1, verbose=False) == 0
+
+
 # ---------------------------------------------------------------------------
 # dispatch: measured costs outrank the model; stale signatures fall back
 # ---------------------------------------------------------------------------
