@@ -44,6 +44,13 @@
 #                   so a strategy the driver can't actually serve fails
 #                   the build (the strategy list derives from the
 #                   registry; incl. auto and the ZeRO layouts)
+#   tp-smoke      — the THIRD parallelism axis through the driver:
+#                   sweeps --model-parallel 2 (tensor parallelism over
+#                   the mesh's 'model' axis) and --expert-parallel (MoE
+#                   routing as the decomposed moe_route alltoall, incl.
+#                   --ep-blocks 2 pipelined routing) over dense + MoE
+#                   archs × lane/lane_zero3, each with a checkpoint
+#                   save→restore round trip
 #   lint          — lanelint (repro.analysis): lowers EVERY registered
 #                   (collective, strategy) cell plus the train/serve
 #                   step builders on the 8-host-device grid and checks
@@ -67,7 +74,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci tier1 props-det api-surface tune-smoke bench-smoke bench \
-	bench-schema train-smoke fault-smoke serve-smoke lint test
+	bench-schema train-smoke tp-smoke fault-smoke serve-smoke lint test
 
 tier1:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
@@ -115,6 +122,10 @@ train-smoke:
 	$(PY) -m repro.launch.train_smoke
 
 # sets its own 8-device flag internally (before jax import)
+tp-smoke:
+	$(PY) -m repro.launch.tp_smoke
+
+# sets its own 8-device flag internally (before jax import)
 fault-smoke:
 	$(PY) -m repro.testing.run_driver_cases --match fault_
 
@@ -127,4 +138,4 @@ lint:
 	$(PY) -m repro.analysis.lint
 
 ci: tier1 props-det api-surface lint tune-smoke bench-smoke bench-schema \
-	train-smoke fault-smoke serve-smoke
+	train-smoke tp-smoke fault-smoke serve-smoke

@@ -24,11 +24,20 @@ import sys
 TOP_KEYS = {"mesh", "payload_elems", "payload_bytes", "auto_num_buckets",
             "strategies_registered", "tuning_cache", "cost_model",
             "smoke", "reps", "results", "family_results",
-            "families_registered", "hlo_per_computation", "structure_ok"}
+            "families_registered", "third_axis_results", "ep_wire",
+            "hlo_per_computation", "structure_ok"}
 
 ROW_KEYS = {"strategy", "selected", "num_buckets", "avg_us", "min_us",
             "max_abs_err_vs_native", "model_pred_us", "predicted_us",
             "hlo_concurrent", "hlo_concurrent_pairs"}
+
+THIRD_AXIS_ROW_KEYS = {"cell", "strategy", "selected", "payload_bytes",
+                       "avg_us", "min_us", "predicted_us",
+                       "max_abs_err_vs_native"}
+
+EP_WIRE_KEYS = {"arch", "num_experts", "capacity",
+                "alltoall_bytes_per_layer",
+                "expert_gather_bytes_per_layer", "ratio", "bound", "ok"}
 
 TUNING_TOP_KEYS = {"topology", "tolerance", "measured_cells", "cells",
                    "violations", "fit", "ok"}
@@ -80,6 +89,18 @@ def auto_eligible_strategies() -> set:
             if e.auto_ok and e.cost is not None}
 
 
+def required_third_axis() -> set:
+    """(cell, strategy) rows the third-parallelism-axis section must
+    emit, derived from the registry: every registered moe_route strategy
+    (the EP token-routing alltoall) and every registered allgather
+    strategy (the TP activation collective), each plus the auto row."""
+    from repro.comm import strategies_for
+    return ({("moe_route", s)
+             for s in (*strategies_for("moe_route"), "auto")}
+            | {("tp_allgather", s)
+               for s in (*strategies_for("allgather"), "auto")})
+
+
 def required_families() -> set:
     """The block-stack registry IS the family requirement: a model family
     that silently loses its lane_zero3 registration (or its benchmark
@@ -98,6 +119,7 @@ def required_serve_families() -> set:
 
 
 REQUIRED_STRATEGIES = required_strategies()
+REQUIRED_THIRD_AXIS = required_third_axis()
 AUTO_ELIGIBLE = auto_eligible_strategies()
 REQUIRED_FAMILIES = required_families()
 REQUIRED_SERVE_FAMILIES = required_serve_families()
@@ -145,6 +167,30 @@ def check(doc: dict) -> list[str]:
         errs.append(f"bench ran against a block-stack registry that no "
                     f"longer matches: {sorted(fstale)} (re-run "
                     f"benchmarks.run --smoke)")
+    trows = doc.get("third_axis_results", [])
+    if not isinstance(trows, list):
+        trows = []
+    for i, row in enumerate(trows):
+        mk = THIRD_AXIS_ROW_KEYS - set(row)
+        if mk:
+            errs.append(f"third_axis_results[{i}] missing {sorted(mk)}")
+    thave = {(r.get("cell"), r.get("strategy")) for r in trows}
+    tgone = REQUIRED_THIRD_AXIS - thave
+    if tgone:
+        errs.append(f"benchmark stopped emitting third-axis cells: "
+                    f"{sorted(tgone)} (moe_route/allgather registries + "
+                    f"auto require {sorted(REQUIRED_THIRD_AXIS)})")
+    wire = doc.get("ep_wire", {})
+    wk = EP_WIRE_KEYS - set(wire)
+    if wk:
+        errs.append(f"ep_wire missing {sorted(wk)}")
+    elif not wire.get("ok", False):
+        errs.append(f"ep_wire ok is false: per-layer routing-alltoall "
+                    f"bytes ({wire.get('alltoall_bytes_per_layer')}) "
+                    f"exceed 2/E of the replaced expert-gather bytes "
+                    f"({wire.get('expert_gather_bytes_per_layer')}) — "
+                    f"ratio {wire.get('ratio')} > bound "
+                    f"{wire.get('bound')}")
     if not doc.get("structure_ok", False):
         errs.append("structure_ok is false: the §5 overlap (or a negative "
                     "control) regressed — see the benchmark output")

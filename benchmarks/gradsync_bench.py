@@ -8,7 +8,12 @@ sweeping the bucket count, and writes ``BENCH_gradsync.json`` — the perf
 trajectory future PRs regress against (schema pinned by
 ``benchmarks/check_bench_schema.py``, whose required-strategy list is
 derived from the same registry: a silently-unregistered impl fails the
-build).  Also verifies STRUCTURALLY on the optimized HLO that each
+build).  The third-parallelism-axis section (PR 10) times the EP
+token-routing alltoall (``moe_route``) and the TP activation allgather
+on the (2,2,2) pods×data×model mesh and pins the tentpole wire-volume
+acceptance: the two 1/E-expert routing alltoalls move ≤ 2/E of the
+bytes the replaced full expert-weight gather moved per layer.
+Also verifies STRUCTURALLY on the optimized HLO that each
 bucketed/pipelined program contains a cross-pod (DCN) collective with no
 data dependence on an intra-pod (ICI) collective — the §5 overlap
 precondition — and that the monolithic K=1 chain does NOT (negative
@@ -105,6 +110,129 @@ def bench_families(mesh, topo, reps, warmup):
               f"{'YES' if conc['concurrent'] else 'no'} exact={exact}",
               flush=True)
     return rows
+
+
+def _cell_predicted_us(collective, strategy, local_bytes, n, N, tuner):
+    """predicted_us for a non-grad_sync cell: timing-cache median when
+    measured, else the registered impl's closed form."""
+    if tuner is not None:
+        m = tuner.measured_cost(collective, strategy, n, N, local_bytes)
+        if m is not None:
+            return round(m * 1e6, 2)
+    e = next((e for e in iter_impls(collective)
+              if e.strategy == strategy), None)
+    if e is None or e.cost is None:
+        return None
+    return round(e.cost(n, N, local_bytes, CommConfig()) * 1e6, 2)
+
+
+def _bench_cell(mesh, topo, collective, strategy, xs, reps, warmup, tuner):
+    """One (collective, strategy) row: shard xs over the topo's joint
+    axis, dispatch through the LaneComm registry cell, time it, and
+    record what auto selected plus the cost model's predicted_us."""
+    comm = LaneComm(topo, CommConfig(tuner=tuner), mesh=mesh)
+    strat = None if strategy == "auto" else strategy
+
+    def f(x):
+        return getattr(comm, collective)(x, strategy=strat)
+    spec = P((topo.lane_axis, *topo.node_axes))
+    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=spec,
+                               out_specs=spec, check_vma=False))
+    arr = jax.device_put(xs, NamedSharding(mesh, spec))
+    out = np.asarray(fn(arr))
+    avg, best = time_fn(fn, arr, reps=reps, warmup=warmup)
+    n_, N_ = topo.sizes(mesh)
+    local_bytes = xs.nbytes // (n_ * N_)
+    if strategy == "auto":
+        sel = comm.last_selection
+        selected = sel.strategy
+        pred = round(sel.ranking[0][0] * 1e6, 2)
+    else:
+        selected = strategy
+        pred = _cell_predicted_us(collective, strategy, local_bytes,
+                                  n_, N_, tuner)
+    row = {"cell": collective, "strategy": strategy, "selected": selected,
+           "payload_bytes": local_bytes, "avg_us": round(avg, 2),
+           "min_us": round(best, 2), "predicted_us": pred}
+    return row, out
+
+
+def bench_third_axis(reps, warmup, tuner):
+    """Third-parallelism-axis rows (PR 10) on the (2,2,2) pods×data×model
+    mesh: the EP token-routing alltoall (``moe_route`` cells, at the MoE
+    smoke arch's real (B, E, C, d) dispatch-buffer payload, over the
+    batch-axes communicator) and the TP activation allgather (the
+    degenerate node_axes=() model-axis communicator mlp_tp rides) — every
+    registered strategy plus the auto-dispatch row, each with
+    predicted_us.  Returns (rows, ep_wire): ``ep_wire`` is the tentpole
+    wire-volume acceptance — the two 1/E-expert routing alltoalls move
+    ≤ 2/E of the bytes the old full expert-weight gather moved per layer
+    (ratio = 2·B·C / (W·f) with W FFN mats of f columns)."""
+    from repro.configs import resolve
+    from repro.models.moe import _capacity
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rows = []
+    rng = np.random.default_rng(7)
+
+    # --- EP routing: moe_route over the batch axes -----------------------
+    cfg = resolve("dbrx-132b", smoke=True)
+    topo_ep = LaneTopology(node_axes=("data",), lane_axis="pod")
+    n_, N_ = topo_ep.sizes(mesh3)
+    p = n_ * N_
+    E, d = cfg.num_experts, cfg.d_model
+    B, T = 2, 16                       # per-chip rows at the smoke shape
+    C = _capacity(cfg, T)
+    xs = rng.normal(size=(p * B * E * C, d)).astype(np.float32)
+    oracle = None
+    for s in (*strategies_for("moe_route"), "auto"):
+        row, out = _bench_cell(mesh3, topo_ep, "moe_route", s, xs,
+                               reps, warmup, tuner)
+        if oracle is None and s == "native":
+            oracle = out
+        row["max_abs_err_vs_native"] = \
+            float(np.max(np.abs(out - oracle))) if oracle is not None \
+            else 0.0
+        rows.append(row)
+        print(f"moe_route[{s:6s}] -> {row['selected']:6s} "
+              f"min={row['min_us']:9.1f}us pred={row['predicted_us']}us",
+              flush=True)
+
+    # routing alltoall per layer: dispatch + combine, each the full
+    # (B, E, C, d) buffer; the replaced gather: W expert FFN mats of
+    # (E, d, f) — the ≤ 2/E acceptance, asserted by check_bench_schema
+    W = 3 if cfg.gated_mlp else 2
+    a2a = 2 * B * E * C * d * 4
+    gather = W * E * d * cfg.d_ff * 4
+    ep_wire = {"arch": cfg.name, "num_experts": E, "capacity": C,
+               "alltoall_bytes_per_layer": a2a,
+               "expert_gather_bytes_per_layer": gather,
+               "ratio": round(a2a / gather, 4),
+               "bound": round(2 / E, 4),
+               "ok": bool(a2a / gather <= 2 / E)}
+    print(f"ep_wire: alltoall/gather = {ep_wire['ratio']} "
+          f"(bound 2/E = {ep_wire['bound']}) "
+          f"{'OK' if ep_wire['ok'] else 'FAIL'}", flush=True)
+
+    # --- TP activations: allgather over the degenerate model-axis comm ---
+    dcfg = resolve("llama3.2-3b", smoke=True)
+    topo_tp = LaneTopology(node_axes=(), lane_axis="model")
+    tp = 2
+    xs = rng.normal(size=(tp * B * T, dcfg.d_model)).astype(np.float32)
+    oracle = None
+    for s in (*strategies_for("allgather"), "auto"):
+        row, out = _bench_cell(mesh3, topo_tp, "allgather", s, xs,
+                               reps, warmup, tuner)
+        row["cell"] = "tp_allgather"
+        if oracle is None and s == "native":
+            oracle = out
+        row["max_abs_err_vs_native"] = \
+            float(np.max(np.abs(out - oracle))) if oracle is not None \
+            else 0.0
+        rows.append(row)
+        print(f"tp_allgather[{s:6s}] -> {row['selected']:6s} "
+              f"min={row['min_us']:9.1f}us pred={row['predicted_us']}us",
+              flush=True)
+    return rows, ep_wire
 
 
 def predicted_us(strategy, K, local_bytes, n, N, tuner):
@@ -251,6 +379,7 @@ def main(argv=None) -> int:
               f"pairs={len(conc['pairs'])}", flush=True)
 
     family_rows = bench_families(mesh, topo, reps, warmup)
+    third_axis_rows, ep_wire = bench_third_axis(reps, warmup, tuner)
 
     # structural acceptance: pipelined/bucketed overlap possible, serial not
     ok = True
@@ -258,6 +387,16 @@ def main(argv=None) -> int:
         if not (frow["gather_exact"] and frow["hlo_concurrent"]):
             print(f"FAMILY FAIL: {frow}")
             ok = False
+    # third-axis acceptance: the decomposed routing/TP cells are exact
+    # permutations of the native collectives, and the two 1/E-expert
+    # routing alltoalls must undercut the old expert gather by >= E/2
+    for trow in third_axis_rows:
+        if trow["max_abs_err_vs_native"] != 0.0:
+            print(f"THIRD-AXIS NUMERICS FAIL: {trow}")
+            ok = False
+    if not ep_wire["ok"]:
+        print(f"EP WIRE-VOLUME FAIL: {ep_wire}")
+        ok = False
     for row in results:
         eff = row["selected"]
         if eff == "native":
@@ -290,6 +429,8 @@ def main(argv=None) -> int:
         "results": results,
         "family_results": family_rows,
         "families_registered": [r["family"] for r in family_rows],
+        "third_axis_results": third_axis_rows,
+        "ep_wire": ep_wire,
         "hlo_per_computation": hlo_checks,
         "structure_ok": ok,
     }

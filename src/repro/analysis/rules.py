@@ -65,8 +65,9 @@ SMALL_GLOBAL_BYTES = 1024  # R1 scalar exemption (loss pmean, gnorm psum)
 #: carries step/model builders — block_stack, train_step, serve_step —
 #: which are swept as STEPS, not cells)
 COMM_COLLECTIVES = ("allreduce", "reduce_scatter", "allgather", "alltoall",
-                    "scan", "bcast", "reduce", "gather", "scatter",
-                    "grad_sync", "prefetch_allgather", "kv_splice")
+                    "moe_route", "scan", "bcast", "reduce", "gather",
+                    "scatter", "grad_sync", "prefetch_allgather",
+                    "kv_splice")
 
 #: cells that must prove the §5 overlap structure (R4 positive)
 PIPELINED_CELLS = frozenset({

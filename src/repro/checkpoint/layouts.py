@@ -159,10 +159,17 @@ class Zero3CheckpointLayout(CheckpointLayout):
 
     def __init__(self, num_layers: int, layer_elems: int, num_blocks: int,
                  num_shards: int, extra_elems: int = 0,
-                 extra_blocks: int = 0):
+                 extra_blocks: int = 0, ep: bool = False):
         if min(num_layers, layer_elems, num_blocks, num_shards) < 1:
             raise ValueError((num_layers, layer_elems, num_blocks,
                               num_shards))
+        # expert-parallel flavor: the MoE expert FFN leaves live OUTSIDE
+        # the flat stack, under an "experts" params/moments subtree whose
+        # natural (L, E, ...) shapes ARE canonical (identity passthrough
+        # below — neither _in_blocks nor _in_extras matches them).  The
+        # flag changes layer_elems, so it is manifest-recorded and
+        # restore-checked like the rest of the canonical geometry.
+        self.ep = bool(ep)
         if (extra_elems > 0) != (extra_blocks > 0):
             raise ValueError((extra_elems, extra_blocks))
         self.num_layers = int(num_layers)                  # L
@@ -195,10 +202,19 @@ class Zero3CheckpointLayout(CheckpointLayout):
         if self.extra_elems:
             entry["extra_elems"] = self.extra_elems
             entry["extra_blocks"] = self.extra_blocks
+        if self.ep:
+            entry["ep"] = True
         return entry
 
     def check_manifest(self, entry: dict) -> None:
         super().check_manifest(entry)
+        if bool(entry.get("ep", False)) != self.ep:
+            raise ValueError(
+                f"zero3 checkpoint ep={bool(entry.get('ep', False))} but "
+                f"the restoring layout has ep={self.ep}; an expert-"
+                f"parallel flavor change restores through the canonical "
+                f"form (launch.steps.restore_lane_train_state), not the "
+                f"same-layout fast path")
         for field in ("num_layers", "layer_elems", "extra_elems"):
             want = entry.get(field, 0 if field == "extra_elems"
                              else getattr(self, field))

@@ -170,6 +170,11 @@ def lowered_wire_volumes(collective: str, strategy: str, *, n: int,
     p = max(n * N, 1)
     B = num_blocks or 1
     K = num_buckets or 1
+    if collective == "moe_route":
+        # moe_route's registered impls ARE the §3.5 alltoall lowerings
+        # (C.native_alltoall / C.alltoall_lane) — identical HLO, so the
+        # token-routing cells share the dump-verified alltoall algebra
+        collective = "alltoall"
     key = (collective, strategy)
 
     if key == ("allreduce", "native") or key == ("grad_sync", "native"):
@@ -285,6 +290,10 @@ def assumed_volumes(collective: str, strategy: str, *, n: int, N: int,
     """
     c = float(payload_bytes)
     p = max(n * N, 1)
+    if collective == "moe_route":
+        # same delegation as lowered_wire_volumes: the cost functions
+        # registered on the moe_route cells are the alltoall ones
+        collective = "alltoall"
     key = (collective, strategy)
     no_cost = {
         ("bcast", "lane_pipelined"), ("reduce", "lane_pipelined"),

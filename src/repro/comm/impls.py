@@ -150,6 +150,26 @@ def _a2a_lane(comm, x):
     return C.alltoall_lane(x, comm.topo)
 
 
+@register_impl("moe_route", "native", cost=costs.native_cost("alltoall"),
+               feasible=_div_p)
+def _moe_route_native(comm, x):
+    """Token-routing alltoall (MoE dispatch/combine), one-shot baseline.
+
+    Its own collective name — not an alias of ``alltoall`` — so the tuner
+    measures it at MoE routing payloads and ``strategy="auto"`` commits a
+    routing-specific choice, but the wire algebra and cost model are the
+    §3.5 alltoall's (costs.py delegates the closed forms)."""
+    return C.native_alltoall(x, comm.topo)
+
+
+@register_impl("moe_route", "lane", cost=costs.lane_cost("alltoall"),
+               feasible=_div_p)
+def _moe_route_lane(comm, x):
+    """Decomposed node×lane token-routing alltoall (paper §3.5 applied to
+    the expert axis): a2a over nodes on 1/n stripes, then a2a over lanes."""
+    return C.alltoall_lane(x, comm.topo)
+
+
 @register_impl("scan", "native", cost=costs.cost_native_scan)
 def _scan_native(comm, x):
     return C.native_scan(x, comm.topo)

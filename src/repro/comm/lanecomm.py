@@ -210,6 +210,17 @@ class LaneComm:
         """Personalized exchange: destination-rank blocks → source-rank."""
         return self._dispatch("alltoall", x, strategy, **kw)
 
+    def moe_route(self, x, *, strategy: Optional[str] = None, **kw):
+        """Token-routing alltoall (MoE expert dispatch/combine).
+
+        Same exchange semantics as :meth:`alltoall` — destination-rank
+        blocks in, source-rank blocks out — but registered as its own
+        collective so the tuner prices it at routing payloads and the
+        benchmarks/selections can tell routing traffic from generic
+        alltoall use.  The hot caller is :func:`repro.models.moe.
+        moe_block_ep`."""
+        return self._dispatch("moe_route", x, strategy, **kw)
+
     def reduce(self, x, *, strategy: Optional[str] = None, **kw):
         """Sum valid on the root chip, zeros elsewhere."""
         return self._dispatch("reduce", x, strategy, **kw)

@@ -182,6 +182,20 @@ class RunConfig:
     # dryrun step AND the lane step builders): "float32" is parity-exact,
     # "bfloat16" halves the accumulator's HBM residency
     accum_dtype: str = "float32"
+    # tensor parallelism over the mesh's "model" axis: MLP activation
+    # collectives (allgather fwd+bwd) run through (collective, strategy)
+    # cells of a model-axis LaneComm (models/layers.mlp_tp); 1 = off.
+    # The mesh's "model" axis size must equal this degree.
+    model_parallel: int = 1
+    # expert parallelism for MoE families: token routing dispatch/combine
+    # as the paper's decomposed alltoall over the BATCH axes ("moe_route"
+    # cells) — every chip owns E/p experts; under lane_zero3 the expert
+    # weights live in a never-gathered (L, E/p, ...) local master
+    expert_parallel: bool = False
+    # capacity-dim software pipelining depth of the routing alltoall
+    # (moe_block_ep): >1 splits the C dim so block j+1's dispatch
+    # alltoall overlaps block j's expert FFN; 1 = sequential
+    ep_blocks: int = 1
     # serving
     decode_seq_shard: bool = True  # shard KV cache seq dim over model axis
 
@@ -203,6 +217,30 @@ class RunConfig:
                 f"unknown gradsync strategy {self.gradsync!r}; registered "
                 f"strategies: {tuple(valid)} (plan names belong in "
                 f"RunConfig.plan)")
+        if self.model_parallel < 1:
+            raise ValueError(
+                f"model_parallel must be >= 1, got {self.model_parallel}")
+        if self.ep_blocks < 1:
+            raise ValueError(
+                f"ep_blocks must be >= 1, got {self.ep_blocks}")
+        if self.model_parallel > 1 \
+                and self.gradsync in ("lane_zero1", "lane_quorum"):
+            # zero1's bucket-major flat shard has no model-axis assembly
+            # mask, and the quorum rescale math assumes batch-only axes
+            raise ValueError(
+                f"model_parallel > 1 is not supported with gradsync="
+                f"{self.gradsync!r} (use native/lane/lane_zero3)")
+        if self.expert_parallel:
+            if getattr(self.model, "num_experts", 0) < 1:
+                raise ValueError(
+                    f"expert_parallel needs a MoE model (family "
+                    f"{self.model.family!r} has no experts)")
+            if self.gradsync == "lane_quorum":
+                # a masked pod still sits on the routing alltoall's wire;
+                # degraded-quorum EP routing is future work
+                raise ValueError(
+                    "expert_parallel is not supported with "
+                    "gradsync='lane_quorum'")
 
 
 def _fill_rundoc() -> None:

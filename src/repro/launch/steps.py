@@ -34,6 +34,7 @@ from repro.models.blockstack import (
     resolve_extras_prefetch_blocks, resolve_prefetch_blocks,
     shard_stack, split_params, stack_layout,
 )
+from repro.models.parallel import parallel_context
 from repro.models.transformer import ShardedBlocks  # noqa: F401 (re-export)
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.adamw import global_norm
@@ -177,11 +178,140 @@ def build_train_step_lane(cfg: ModelConfig, run: RunConfig, opt: AdamWConfig,
     return builder.fn(comm, ctx), comm
 
 
-def _make_loss(ctx: StepContext):
+def _parallel_kwargs(ctx: StepContext, comm: LaneComm) -> dict:
+    """The static :func:`repro.models.parallel.parallel_context` kwargs of
+    this run's third-axis configuration (empty dict = no TP and no EP —
+    the zero-overhead default path).
+
+    TP rides a DEGENERATE n=1 decomposition over the mesh's "model" axis
+    (the lane axis IS the whole communicator) so the activation
+    allgathers resolve through the same (collective, strategy) cells —
+    and the same tuner — as every other lowering; EP routes through the
+    BATCH-axes communicator ``comm`` itself (every chip is an expert
+    owner), so the ``moe_route`` alltoalls share its auto/tuned config.
+    """
+    run = ctx.run
+    pc: dict = {}
+    tp = run.model_parallel
+    if tp > 1:
+        sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+        if sizes.get("model", 1) != tp:
+            raise ValueError(
+                f"model_parallel={tp} needs a mesh 'model' axis of that "
+                f"size (mesh axes: {sizes})")
+        tp_comm = LaneComm(LaneTopology(node_axes=(), lane_axis="model"),
+                           comm.cfg, mesh=ctx.mesh)
+        # expose the model-axis comm for selection introspection (the
+        # driver reports comm.selections; TP records on its own comm)
+        comm.tp_comm = tp_comm
+        pc.update(tp=tp, tp_comm=tp_comm)
+    if run.expert_parallel:
+        E = ctx.cfg.num_experts
+        psz = 1
+        for a in ctx.ba:
+            psz *= dict(zip(ctx.mesh.axis_names,
+                            ctx.mesh.devices.shape))[a]
+        if E % max(psz, 1):
+            raise ValueError(
+                f"expert_parallel needs num_experts={E} divisible by the "
+                f"batch-axes chip count p={psz}")
+        pc.update(ep=True, ep_comm=comm, ep_blocks=run.ep_blocks)
+    return pc
+
+
+def _make_loss(ctx: StepContext, comm: Optional[LaneComm] = None):
+    """The traced loss closure; with a comm and an active third axis it
+    enters the :func:`parallel_context` around the forward trace (the
+    backward operates on the traced jaxpr, so trace-time routing is all
+    the context must cover).  A ``p["ep_experts"]`` entry — the zero3
+    step's differentiated local expert tree — is popped off the params
+    and carried on the context for the scan body to slice per layer."""
+    pc = _parallel_kwargs(ctx, comm) if comm is not None else {}
+
     def lf(p, tok, lab, ex):
-        return loss_fn(p, ctx.cfg, tok, lab, extra_embeds=ex,
-                       remat=ctx.run.remat)
+        if not pc:
+            return loss_fn(p, ctx.cfg, tok, lab, extra_embeds=ex,
+                           remat=ctx.run.remat)
+        p = dict(p)
+        experts = p.pop("ep_experts", None)
+        with parallel_context(**pc, ep_experts=experts):
+            return loss_fn(p, ctx.cfg, tok, lab, extra_embeds=ex,
+                           remat=ctx.run.remat)
     return lf
+
+
+# which leaves the tensor-parallel MLP partitions: exactly the weights
+# models/layers.mlp_tp computes as zero-padded column blocks per model
+# rank (everything else stays bitwise replicated over "model" thanks to
+# its custom VJP gathering the input cotangent full)
+_TP_LEAF_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def _is_tp_leaf(keys) -> bool:
+    return "mlp" in keys and bool(keys) and keys[-1] in _TP_LEAF_KEYS
+
+
+def _tp_assemble_tree(grads):
+    """Assemble the TP MLP weight grads over the "model" axis.
+
+    Each model rank's grad is the zero-padded column block of exactly its
+    slice of the replicated gradient (mlp_tp's custom VJP), so ONE psum
+    concatenates disjoint blocks — adding zeros is exact, which is what
+    keeps the TP==replicated step pin bitwise.  Non-MLP leaves are
+    already bitwise replicated over "model" and pass through untouched.
+    """
+    import jax.tree_util as jtu
+
+    def fix(path, g):
+        keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+        return jax.lax.psum(g, "model") if _is_tp_leaf(keys) else g
+    return jtu.tree_map_with_path(fix, grads)
+
+
+def _tp_row_mask(stack_t, lay) -> jnp.ndarray:
+    """Per-element 0/1 fp32 mask over one UNPADDED flat stack row: 1
+    exactly on the TP-partitioned MLP weight elements.  Leaf order
+    matches :class:`StackLayout` (both use the default tree flatten)."""
+    import jax.tree_util as jtu
+    flat, _ = jtu.tree_flatten_with_path(stack_t)
+    if len(flat) != len(lay.metas):
+        raise ValueError(
+            f"stack template has {len(flat)} leaves but the layout "
+            f"records {len(lay.metas)} — layout drift")
+    parts = []
+    for (path, _), (shape, _) in zip(flat, lay.metas):
+        keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+        parts.append(jnp.full((math.prod(shape),),
+                              1.0 if _is_tp_leaf(keys) else 0.0,
+                              jnp.float32))
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+
+# the (L, E, ...) expert FFN weights the expert-parallel zero3 master
+# keeps OUT of the gathered flat stack; the router stays in the stack
+# (its grad is dense over tokens, and every chip routes locally)
+_EXPERT_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def split_expert_stack(stack: dict):
+    """Split a MoE layer stack into (stack_without_experts, experts).
+
+    ``experts`` holds the moe FFN weight leaves in their NATURAL
+    (L, E, ...) shapes — the expert-parallel master shards them over E
+    across the batch-axes chips (global-rank order) and never gathers
+    them; the returned stack keeps the router (and everything else) for
+    the ordinary flat 1/p layout.
+    """
+    if "moe" not in stack:
+        raise ValueError(
+            f"expert_parallel needs a 'moe' stack entry (stack keys: "
+            f"{sorted(stack)})")
+    moe = stack["moe"]
+    experts = {k: moe[k] for k in _EXPERT_KEYS if k in moe}
+    if not experts:
+        raise ValueError("'moe' stack entry has no expert FFN weights")
+    rest = {k: v for k, v in moe.items() if k not in experts}
+    return {**stack, "moe": rest}, experts
 
 
 def _register_replicated(strategy: str):
@@ -190,8 +320,9 @@ def _register_replicated(strategy: str):
     @register_impl("train_step", strategy, auto_ok=False)
     def _build(comm, ctx, _strategy=strategy):
         """Replicated-parameter step: full grad sync + tree AdamW."""
-        lf = _make_loss(ctx)
+        lf = _make_loss(ctx, comm)
         eff = "native" if ctx.single else _strategy
+        tp_on = ctx.run.model_parallel > 1
         vg = _microbatched(
             lambda p, t, l, e: jax.value_and_grad(lf)(p, t, l, e),
             ctx.run.microbatch, _accum_dtype(ctx.run))
@@ -199,6 +330,8 @@ def _register_replicated(strategy: str):
         def step(params, opt_state, tokens, labels, extra=None):
             loss, grads = vg(params, tokens, labels, extra)
             loss = jax.lax.pmean(loss, ctx.ba)
+            if tp_on:
+                grads = _tp_assemble_tree(grads)
             grads = comm.grad_sync(grads, strategy=eff)
             new_params, new_opt = adamw_update(ctx.opt, grads, opt_state,
                                                params)
@@ -273,7 +406,7 @@ def _build_zero1(comm, ctx: StepContext):
     and weight decay follows the per-element matrices-only mask."""
     if ctx.single:
         return get_impl("train_step", "native").fn(comm, ctx)
-    lf = _make_loss(ctx)
+    lf = _make_loss(ctx, comm)
     topo, opt, run = comm.topo, ctx.opt, ctx.run
     vg = _microbatched(
         lambda p, t, l, e: jax.value_and_grad(lf)(p, t, l, e),
@@ -341,11 +474,21 @@ def _build_zero3(comm, ctx: StepContext):
             "multi-pod mesh); use native or lane_zero1 on single-"
             f"batch-axis meshes (got batch axes {ba})")
     topo = comm.topo
-    lf = _make_loss(ctx)
+    lf = _make_loss(ctx, comm)
+    ep_on = run.expert_parallel
+    tp_on = run.model_parallel > 1
     n_, N_ = topo.sizes(ctx.mesh)
     p_ = max(n_ * N_, 1)
-    layouts = zero3_stack_layouts(cfg)
+    layouts = zero3_stack_layouts(cfg, ep=ep_on)
     lay_b, lay_e = layouts["blocks"], layouts["extras"]
+    # abstract stack template (same leaf order as lay_b): the TP row mask
+    # and the EP expert-dtype template both key off it
+    fspec3 = block_stack_spec(cfg)
+    stack_t, _, _ = split_params(fspec3, _abs_params(cfg))
+    exp_t = None
+    if ep_on:
+        stack_t, exp_t = split_expert_stack(stack_t)
+    mask_row = _tp_row_mask(stack_t, lay_b) if tp_on else None
     Bb = resolve_prefetch_blocks(lay_b.row_elems, n_, N_, run.fsdp_prefetch)
     # extras (vocab·d embed + head) resolves from its OWN row payload —
     # a positive override tuned for the layer stack is not inherited
@@ -383,8 +526,9 @@ def _build_zero3(comm, ctx: StepContext):
         eshape = params["extras"].shape
         shards_b = params["blocks"].reshape(lay_b.length, -1)
         shards_e = params["extras"].reshape(-1)
+        experts = params["experts"] if ep_on else {}
         repl = {k: v for k, v in params.items()
-                if k not in ("blocks", "extras")}
+                if k not in ("blocks", "extras", "experts")}
         have_repl = bool(jax.tree.leaves(repl))
 
         # the extras pseudo-layer gathers ONCE per step, OUTSIDE the
@@ -394,36 +538,66 @@ def _build_zero3(comm, ctx: StepContext):
         # cotangent below IS the extras reduce-scatter
         extras_tree, extras_vjp = jax.vjp(gather_extras, shards_e)
 
-        def vg(repl_p, sh_b, ext, tok, lab, ex):
-            def lf3(repl_p, sh_b, ext):
+        def vg(repl_p, sh_b, ext, exp, tok, lab, ex):
+            def lf3(repl_p, sh_b, ext, exp):
                 p = dict(repl_p)
                 p.update(ext)
                 p["blocks"] = ShardedStack(sh_b, gather_layer,
                                            prefetch=not blocking,
                                            regather=run.fsdp_regather)
+                if ep_on:
+                    # fp32 master -> model dtype inside the trace, the
+                    # same cast point as the gather path's unflatten_row
+                    p["ep_experts"] = jax.tree.map(
+                        lambda a, t: a.astype(t.dtype), exp, exp_t)
                 return lf(p, tok, lab, ex)
-            return jax.value_and_grad(lf3, argnums=(0, 1, 2))(
-                repl_p, sh_b, ext)
+            return jax.value_and_grad(lf3, argnums=(0, 1, 2, 3))(
+                repl_p, sh_b, ext, exp)
 
         vg = _microbatched(vg, run.microbatch, _accum_dtype(run))
-        loss, (g_repl, g_b, g_ext) = vg(repl, shards_b, extras_tree,
-                                        tokens, labels, extra)
+        loss, (g_repl, g_b, g_ext, g_exp) = vg(repl, shards_b, extras_tree,
+                                               experts, tokens, labels,
+                                               extra)
         (g_e,) = extras_vjp(jax.tree.map(
             lambda g, t: g.astype(t.dtype), g_ext, extras_tree))
         loss = jax.lax.pmean(loss, ba)
         # the gathers' transposes already reduce-scattered g_b/g_e over
-        # (lane × node) — sum over replicas; only the mean is left
+        # (lane × node) — sum over replicas; only the mean is left.  The
+        # EP expert grads arrive COMPLETE on the owner the same way (the
+        # routing alltoall's transpose returns every chip's cotangent to
+        # the expert's home), so they too only need the replica mean
         nrep = _axprod(ba)
         g_b, g_e = g_b / nrep, g_e / nrep
+        if ep_on:
+            g_exp = jax.tree.map(lambda g: g / nrep, g_exp)
+        if tp_on:
+            # each model rank's flat stripe holds the zero-padded column
+            # block of the TP-partitioned MLP leaves (mlp_tp's custom
+            # VJP); one masked psum over "model" assembles them exactly
+            # (adding zeros is bit-exact) and leaves every other element
+            # — already bitwise replicated over "model" — untouched
+            row = mask_row
+            pad = shards_b.shape[1] * p_ - row.shape[0]
+            if pad:
+                row = jnp.concatenate(
+                    [row, jnp.zeros((pad,), jnp.float32)])
+            m = jnp.tile(zero3_param_shard(row, topo, Bb), lay_b.length)
+            gb = g_b.reshape(-1)
+            g_b = (gb * (1 - m)
+                   + jax.lax.psum(gb * m, "model")).reshape(g_b.shape)
+            if have_repl:
+                g_repl = _tp_assemble_tree(g_repl)
         if have_repl:
             g_repl = comm.grad_sync(g_repl, strategy="lane")
-        # true global grad norm over stack + extras + leftovers: the 1/p
-        # stripes are disjoint, so one scalar psum over BOTH levels
-        # totals their square norms; g_repl is fully reduced
-        # (replicated), added once
-        gsq = jax.lax.psum(
-            jnp.sum(jnp.square(g_b)) + jnp.sum(jnp.square(g_e)),
-            (topo.lane_axis, *topo.node_axes))
+        # true global grad norm over stack + extras + experts +
+        # leftovers: the 1/p stripes (and the E/p expert slices) are
+        # disjoint, so one scalar psum over BOTH levels totals their
+        # square norms; g_repl is fully reduced (replicated), added once
+        loc_sq = jnp.sum(jnp.square(g_b)) + jnp.sum(jnp.square(g_e))
+        if ep_on:
+            loc_sq = loc_sq + sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_exp))
+        gsq = jax.lax.psum(loc_sq, (topo.lane_axis, *topo.node_axes))
         if have_repl:
             gsq = gsq + global_norm(g_repl) ** 2
         gnorm = jnp.sqrt(gsq)
@@ -457,6 +631,16 @@ def _build_zero3(comm, ctx: StepContext):
                    "extras": {"m": noe["m"].reshape(oe["m"].shape),
                               "v": noe["v"].reshape(oe["v"].shape),
                               "count": noe["count"]}}
+        if ep_on:
+            # the (L, E/p, ...) local expert master updates in place —
+            # same elementwise AdamW math as the flat shards, natural
+            # shapes (every FFN leaf decays: ndim >= 2, matching the
+            # gather layout's per-element decay mask)
+            new_exp, new_opt_exp = adamw_update(
+                opt, g_exp, opt_state["experts"], experts,
+                grad_norm=gnorm)
+            new_params["experts"] = new_exp
+            new_opt["experts"] = new_opt_exp
         return loss, new_params, new_opt
     return step
 
@@ -584,31 +768,41 @@ def zero1_opt_init(params, topo_n: int, num_buckets: int = 0):
 # the shard_map boundary must agree on derives deterministically from
 # the ModelConfig via zero3_stack_layouts.
 
-def zero3_stack_layouts(cfg: ModelConfig) -> dict:
+def zero3_stack_layouts(cfg: ModelConfig, ep: bool = False) -> dict:
     """``{"blocks": StackLayout, "extras": StackLayout}`` of the family's
     sharded stacks (derived via eval_shape — never materializes
     weights).  ``blocks`` is the (L, ...) scanned stack; ``extras`` is
     the single pseudo-layer of everything else except the family spec's
-    replicated keys."""
+    replicated keys.  ``ep=True`` (expert parallelism) keeps the MoE
+    expert FFN leaves OUT of the blocks layout — they live in the
+    never-gathered (L, E/p, ...) local expert master instead."""
     fspec = block_stack_spec(cfg)
     abs_params = jax.eval_shape(
         lambda: init_model(jax.random.PRNGKey(0), cfg))
     stack, extras, _ = split_params(fspec, abs_params)
+    if ep:
+        stack, _ = split_expert_stack(stack)
     return {"blocks": stack_layout(stack, stacked=True),
             "extras": stack_layout(extras, stacked=False)}
 
 
 def zero3_opt_init(cfg: ModelConfig, params, n: int, N: int,
-                   fsdp_prefetch: int = 0):
+                   fsdp_prefetch: int = 0, ep: bool = False):
     """Split optimizer state for the lane_zero3 step: flat sharded fp32
     moments in the (L, B, p, s) master layouts for the layer stack AND
     the extras pseudo-layer, ordinary AdamW tree state for the family's
     replicated keys (empty for most families; the hybrid weight-shared
     attention block).  The B resolution MUST match the step's
     (resolve_prefetch_blocks is deterministic, so the default 0 agrees;
-    pass the same run.fsdp_prefetch override on both sides)."""
+    pass the same run.fsdp_prefetch override on both sides).  ``ep=True``
+    adds the "experts" entry: natural-shape fp32 moments for the expert
+    master (host-side FULL (L, E, ...) — the driver's NamedSharding
+    places the E/p slice per chip exactly like the params master)."""
     fspec = block_stack_spec(cfg)
     stack, extras, repl = split_params(fspec, params)
+    experts = None
+    if ep:
+        stack, experts = split_expert_stack(stack)
     # derive the moment shapes FROM shard_stack (via eval_shape, no
     # weight materialization) so the layout invariant lives in one place
     sh_b = jax.eval_shape(
@@ -619,8 +813,11 @@ def zero3_opt_init(cfg: ModelConfig, params, n: int, N: int,
     flat_state = lambda s: {"m": jnp.zeros(s.shape, jnp.float32),
                             "v": jnp.zeros(s.shape, jnp.float32),
                             "count": jnp.zeros((), jnp.int32)}
-    return {"rest": adamw_init(repl), "blocks": flat_state(sh_b),
-            "extras": flat_state(sh_e)}
+    out = {"rest": adamw_init(repl), "blocks": flat_state(sh_b),
+           "extras": flat_state(sh_e)}
+    if ep:
+        out["experts"] = adamw_init(experts)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -668,12 +865,15 @@ def zero1_checkpoint_layout(params, n: int, num_buckets: int = 0):
 
 
 def zero3_checkpoint_layout(cfg: ModelConfig, n: int, N: int,
-                            fsdp_prefetch: int = 0):
+                            fsdp_prefetch: int = 0, ep: bool = False):
     """Checkpoint layout of the lane_zero3 (L, B, p, s) masters — the
     layer stack AND the extras pseudo-layer (the SAME B resolution as
-    shard_stack / zero3_opt_init / the step)."""
+    shard_stack / zero3_opt_init / the step).  ``ep=True`` records the
+    expert-parallel flavor: the blocks geometry excludes the expert FFN
+    leaves (they checkpoint in their natural (L, E, ...) shapes, which
+    ARE canonical — identity passthrough)."""
     from repro.checkpoint import Zero3CheckpointLayout
-    layouts = zero3_stack_layouts(cfg)
+    layouts = zero3_stack_layouts(cfg, ep=ep)
     lay_b, lay_e = layouts["blocks"], layouts["extras"]
     Bb = resolve_prefetch_blocks(lay_b.row_elems, n, N, fsdp_prefetch)
     Be = resolve_extras_prefetch_blocks(lay_e.row_elems, n, N,
@@ -681,7 +881,7 @@ def zero3_checkpoint_layout(cfg: ModelConfig, n: int, N: int,
     return Zero3CheckpointLayout(lay_b.length, lay_b.row_elems, Bb,
                                  max(n * N, 1),
                                  extra_elems=lay_e.row_elems,
-                                 extra_blocks=Be)
+                                 extra_blocks=Be, ep=ep)
 
 
 def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
@@ -718,12 +918,17 @@ def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
         return LaneTrainState(params, opt, pspecs, ospecs, layout)
     if kind != "zero3":
         raise ValueError(f"unknown lane state layout kind {kind!r}")
+    ep_on = run.expert_parallel
     fspec = block_stack_spec(cfg)
     stack, extras, repl = split_params(fspec, params)
+    experts = None
+    if ep_on:
+        stack, experts = split_expert_stack(stack)
     shards_b, Bb = shard_stack(stack, n, N, run.fsdp_prefetch)
     shards_e, Be = shard_stack(extras, n, N, run.fsdp_prefetch,
                                stacked=False)
-    layout = zero3_checkpoint_layout(cfg, n, N, run.fsdp_prefetch)
+    layout = zero3_checkpoint_layout(cfg, n, N, run.fsdp_prefetch,
+                                     ep=ep_on)
     if tuple(shards_b.shape) != layout.master_shape \
             or Bb != layout.num_blocks \
             or tuple(shards_e.shape) != layout.extra_master_shape \
@@ -740,13 +945,26 @@ def init_lane_train_state(cfg: ModelConfig, run: RunConfig, mesh,
     p3 = dict(repl)
     p3["blocks"] = shards_b
     p3["extras"] = shards_e
-    opt = zero3_opt_init(cfg, params, n, N, run.fsdp_prefetch)
+    if ep_on:
+        # fp32 expert master in NATURAL (L, E, ...) shapes; the E-dim
+        # sharding below places exactly experts [r·E/p, (r+1)·E/p) on
+        # global rank r = lane_rank·n + node_rank — the owner order
+        # moe_block_ep routes by
+        p3["experts"] = jax.tree.map(
+            lambda a: jnp.asarray(a, jnp.float32), experts)
+    opt = zero3_opt_init(cfg, params, n, N, run.fsdp_prefetch, ep=ep_on)
     master_spec = P(None, None, (*topo.node_axes, topo.lane_axis), None)
     pspecs = jax.tree.map(lambda _: P(), p3)
     pspecs["blocks"] = pspecs["extras"] = master_spec
     ospecs = jax.tree.map(lambda _: P(), opt)
     ospecs["blocks"]["m"] = ospecs["blocks"]["v"] = master_spec
     ospecs["extras"]["m"] = ospecs["extras"]["v"] = master_spec
+    if ep_on:
+        expert_spec = P(None, (topo.lane_axis, *topo.node_axes))
+        exp_specs = jax.tree.map(lambda _: expert_spec, experts)
+        pspecs["experts"] = exp_specs
+        ospecs["experts"]["m"] = exp_specs
+        ospecs["experts"]["v"] = exp_specs
     return LaneTrainState(p3, opt, pspecs, ospecs, layout)
 
 
@@ -799,6 +1017,10 @@ def _canonical_state_template(cfg: ModelConfig, entry: dict):
             "needs the current master format")
     fspec = block_stack_spec(cfg)
     stack_t, extras_t, repl_t = split_params(fspec, params_t)
+    ep = bool(entry.get("ep"))
+    exp_t = None
+    if ep:
+        stack_t, exp_t = split_expert_stack(stack_t)
     lay_b = stack_layout(stack_t, stacked=True)
     lay_e = stack_layout(extras_t, stacked=False)
     flat_t = lambda lay: {"m": f32((lay.length, lay.row_elems)),
@@ -809,6 +1031,12 @@ def _canonical_state_template(cfg: ModelConfig, entry: dict):
     p_t["extras"] = f32((1, lay_e.row_elems))
     o_t = {"rest": _abs_adamw(repl_t), "blocks": flat_t(lay_b),
            "extras": flat_t(lay_e)}
+    if ep:
+        # the expert master checkpoints in its natural (L, E, ...) fp32
+        # shapes — natural IS canonical for experts (identity layout)
+        exp_f32 = jax.tree.map(lambda l: f32(l.shape), exp_t)
+        p_t["experts"] = exp_f32
+        o_t["experts"] = {"m": exp_f32, "v": exp_f32, "count": count_t}
     return p_t, o_t
 
 
@@ -834,19 +1062,37 @@ def state_to_replicated(cfg: ModelConfig, entry: dict, state):
         raise ValueError(f"unknown lane state layout kind {kind!r}")
     fspec = block_stack_spec(cfg)
     stack_t, extras_t, _ = split_params(fspec, params_t)
+    ep = bool(entry.get("ep"))
+    exp_t = None
+    if ep:
+        stack_t, exp_t = split_expert_stack(stack_t)
     lay_b = stack_layout(stack_t, stacked=True)
     lay_e = stack_layout(extras_t, stacked=False)
     p_repl = {k: v for k, v in params.items()
-              if k not in ("blocks", "extras")}
+              if k not in ("blocks", "extras", "experts")}
     p_repl.update(lay_e.unflatten(np.asarray(params["extras"])))
-    p_repl["blocks"] = lay_b.unflatten(np.asarray(params["blocks"]))
+    blocks = lay_b.unflatten(np.asarray(params["blocks"]))
+    if ep:
+        # fold the natural-shape expert master back into the stack's moe
+        # subtree (cast to the model's parameter dtype, like unflatten)
+        moe = dict(blocks.get("moe", {}))
+        for k, v in params["experts"].items():
+            moe[k] = np.asarray(v).astype(exp_t[k].dtype)
+        blocks = {**blocks, "moe": moe}
+    p_repl["blocks"] = blocks
 
     def moments(name):
         tree = {k: v for k, v in opt["rest"][name].items()}
         tree.update(lay_e.unflatten(np.asarray(opt["extras"][name]),
                                     dtype=np.float32))
-        tree["blocks"] = lay_b.unflatten(np.asarray(opt["blocks"][name]),
-                                         dtype=np.float32)
+        blk = lay_b.unflatten(np.asarray(opt["blocks"][name]),
+                              dtype=np.float32)
+        if ep:
+            moe_m = dict(blk.get("moe", {}))
+            for k, v in opt["experts"][name].items():
+                moe_m[k] = np.asarray(v)
+            blk = {**blk, "moe": moe_m}
+        tree["blocks"] = blk
         return tree
 
     return p_repl, {"m": moments("m"), "v": moments("v"),
@@ -878,29 +1124,44 @@ def replicated_to_state(cfg: ModelConfig, run: RunConfig, n: int, N: int,
                         "count": opt_state["count"]}
     if kind != "zero3":
         raise ValueError(f"unknown lane state layout kind {kind!r}")
+    ep = run.expert_parallel
     fspec = block_stack_spec(cfg)
     stack, extras, repl = split_params(fspec, params)
+    experts = None
+    if ep:
+        stack, experts = split_expert_stack(stack)
     shards_b, _ = shard_stack(stack, n, N, run.fsdp_prefetch)
     shards_e, _ = shard_stack(extras, n, N, run.fsdp_prefetch,
                               stacked=False)
     p3 = dict(repl)
     p3["blocks"] = np.asarray(shards_b)
     p3["extras"] = np.asarray(shards_e)
+    if ep:
+        p3["experts"] = jax.tree.map(
+            lambda a: np.asarray(a, np.float32), experts)
 
     def flat_state(name):
         m_stack, m_extras, _ = split_params(fspec, opt_state[name])
+        m_exp = None
+        if ep:
+            m_stack, m_exp = split_expert_stack(m_stack)
         return (np.asarray(shard_stack(m_stack, n, N,
                                        run.fsdp_prefetch)[0]),
                 np.asarray(shard_stack(m_extras, n, N, run.fsdp_prefetch,
-                                       stacked=False)[0]))
-    mb, me = flat_state("m")
-    vb, ve = flat_state("v")
+                                       stacked=False)[0]),
+                m_exp)
+    mb, me, mx = flat_state("m")
+    vb, ve, vx = flat_state("v")
     count = opt_state["count"]
     _, _, m_repl = split_params(fspec, opt_state["m"])
     _, _, v_repl = split_params(fspec, opt_state["v"])
     o3 = {"rest": {"m": m_repl, "v": v_repl, "count": count},
           "blocks": {"m": mb, "v": vb, "count": count},
           "extras": {"m": me, "v": ve, "count": count}}
+    if ep:
+        asf32 = lambda t: jax.tree.map(
+            lambda a: np.asarray(a, np.float32), t)
+        o3["experts"] = {"m": asf32(mx), "v": asf32(vx), "count": count}
     return p3, o3
 
 
@@ -954,7 +1215,12 @@ def _restore_lane_state_at(ckpt_dir: str, cfg: ModelConfig,
     man, got = peek_manifest(ckpt_dir, step)
     entry = man.get("layout") or {}
     src_kind = entry.get("kind", "replicated")
-    if src_kind == st.ckpt_layout.kind:
+    # the ep flag changes the zero3 master GEOMETRY (expert leaves leave
+    # the flat stack): a same-kind/different-ep restore must go through
+    # the canonical form, not the layout-validated fast path
+    same_ep = bool(entry.get("ep", False)) == \
+        bool(getattr(st.ckpt_layout, "ep", False))
+    if src_kind == st.ckpt_layout.kind and same_ep:
         return restore_checkpoint(
             ckpt_dir, (st.params, st.opt_state), step=got,
             shardings=shardings, layout=st.ckpt_layout)

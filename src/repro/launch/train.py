@@ -78,12 +78,16 @@ from repro.runtime.health import DEGRADED, RESTART, HealthMonitor
 from repro.runtime.watchdog import Watchdog
 
 
-def make_mesh_auto(batch: int = 1 << 30, pods: int = 1):
+def make_mesh_auto(batch: int = 1 << 30, pods: int = 1, tp: int = 1):
     """Widest (data, model) factorization of the local devices that still
     divides ``batch``; ``pods > 1`` adds the cross-DCN "pod" axis (the
-    lane level) as the outermost batch axis."""
+    lane level) as the outermost batch axis.  ``tp > 1`` pins the
+    "model" axis to exactly that size (tensor parallelism): the mesh
+    becomes the full 3D ``pods × data × model`` grid with data taking
+    everything the pod and model axes leave."""
     n = len(jax.devices())
     pods = max(pods, 1)
+    tp = max(tp, 1)
     if n % pods:
         raise ValueError(f"{n} devices not divisible into {pods} pods")
     if pods > 1 and batch % pods:
@@ -93,6 +97,21 @@ def make_mesh_auto(batch: int = 1 << 30, pods: int = 1):
             f"global batch {batch} not divisible by the {pods}-pod lane "
             f"axis; pick a batch divisible by --pods")
     per = n // pods
+    if tp > 1:
+        if per % tp:
+            raise ValueError(
+                f"{per} devices per pod not divisible by "
+                f"--model-parallel {tp}")
+        d = per // tp
+        if batch % max(pods * d, 1):
+            raise ValueError(
+                f"global batch {batch} not divisible by the {pods}×{d} "
+                f"batch grid that --model-parallel {tp} leaves on "
+                f"{n} devices; pick a divisible batch (or change "
+                f"--pods/--model-parallel)")
+        if pods > 1:
+            return jax.make_mesh((pods, d, tp), ("pod", "data", "model"))
+        return jax.make_mesh((d, tp), ("data", "model"))
     d = 1
     while d * 2 <= per and per % (d * 2) == 0 \
             and batch % (pods * d * 2) == 0:
@@ -205,6 +224,20 @@ def main(argv=None):
     ap.add_argument("--accum-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="microbatch gradient accumulator precision")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel degree: pins the mesh 'model' "
+                         "axis to this size; MLP activation collectives "
+                         "route through model-axis (collective, "
+                         "strategy) cells (1 = off)")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="MoE expert parallelism: token routing as the "
+                         "decomposed moe_route alltoall over the batch "
+                         "axes; under lane_zero3 the expert weights "
+                         "live in a never-gathered E/p local master")
+    ap.add_argument("--ep-blocks", type=int, default=1,
+                    help="capacity-dim pipeline depth of the routing "
+                         "alltoall (block j+1's dispatch overlaps block "
+                         "j's expert FFN; 1 = sequential)")
     ap.add_argument("--pods", type=int, default=0,
                     help="pod (lane) axis size; 0 = auto (lane_zero3 "
                          "gets 2 when devices allow, else 1)")
@@ -237,7 +270,8 @@ def main(argv=None):
 
     cfg = resolve(args.arch, smoke=args.smoke)
     mesh0 = make_mesh_auto(args.batch,
-                           _resolve_pods(args.pods, args.gradsync))
+                           _resolve_pods(args.pods, args.gradsync),
+                           tp=args.model_parallel)
     if args.fault_plan.startswith("seed:"):
         num_pods0 = mesh0.devices.shape[_outer_axis(mesh0)]
         plan = FaultPlan.generate(int(args.fault_plan[len("seed:"):]),
@@ -314,6 +348,34 @@ def _setup_tuner(args, mesh, ba):
     return Tuner(table) if len(table) else None
 
 
+def _adopt_fitted_hw(tuner) -> None:
+    """Install the timing-cache-fitted HW constants BEFORE step building.
+
+    When a run has a measured timing table (a restored cache or a fresh
+    ``--tune`` probe), the closed-form cost model should price with
+    constants fitted to THAT topology (tuning.fit.fit_hw), not the
+    shipped defaults — and the install must happen before
+    build_train_step_lane / init_lane_train_state so the K/B layout
+    resolutions the run (and its checkpoint geometry) commit to are
+    priced against the same constants end to end.  Unfittable tables
+    (too few cells) degrade to the defaults, loudly."""
+    if tuner is None:
+        return
+    from repro.core.costmodel import set_hw
+    from repro.tuning.fit import fit_hw
+    try:
+        fit = fit_hw(tuner.table)
+    except ValueError as e:
+        print(f"fitted-HW adoption skipped ({e}); cost model keeps the "
+              f"shipped constants", flush=True)
+        return
+    set_hw(fit.hw)
+    print(f"cost-model HW adopted from measured timing cache: "
+          f"{fit.num_cells} cells, residual rms "
+          f"{fit.residual_rms_us:.1f}us / max {fit.residual_max_us:.1f}us",
+          flush=True)
+
+
 def _commit_tuner_misses(args, tuner) -> None:
     """Persist the misses dispatch accumulated this run so the next
     ``--tune`` launch probes exactly those cells (the "commit" half of
@@ -354,7 +416,10 @@ def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
                     fsdp_prefetch=args.fsdp_prefetch,
                     fsdp_regather=args.fsdp_regather,
                     microbatch=args.microbatch,
-                    accum_dtype=args.accum_dtype)
+                    accum_dtype=args.accum_dtype,
+                    model_parallel=args.model_parallel,
+                    expert_parallel=args.expert_parallel,
+                    ep_blocks=args.ep_blocks)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
 
@@ -362,10 +427,11 @@ def _run_attempt(args, cfg, plan: FaultPlan, mesh0, lost):
     # beside the checkpoints, optionally probe this topology (--tune;
     # measure-once — already-measured cells are skipped), and hand the
     # tuner to the step builder so auto dispatch ranks by measured cost.
-    # NOTE: the fitted-HW install (set_hw) is deliberately NOT done
-    # here — swapping constants mid-run would desync the K/B layout
-    # resolutions the checkpoint geometry already committed to.
+    # The fitted-HW install happens HERE, before any step/layout
+    # building: installing later would desync the K/B layout resolutions
+    # the checkpoint geometry commits to from the constants pricing them.
     tuner = _setup_tuner(args, mesh, ba)
+    _adopt_fitted_hw(tuner)
 
     # step first (it validates strategy × topology, e.g. lane_zero3 on a
     # single-batch-axis mesh), then the layout-matched master state

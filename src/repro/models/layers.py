@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -159,6 +160,158 @@ def mlp(p: dict, x, cfg: ModelConfig):
     else:
         h = _act(cfg.act)(h)
     return h @ p["w_down"]
+
+
+def _allgather_last(comm, x, strategy=None):
+    """All-gather the LAST axis over ``comm`` in global-rank order.
+
+    The §3 mock-ups concatenate along the leading dim, so the feature
+    axis is moved to the front for the wire and moved back after —
+    global rank == model rank on a model-only topology, so the
+    concatenation order matches the column-slice order exactly."""
+    t = jnp.moveaxis(x, -1, 0)
+    g = comm.allgather(t, strategy=strategy)
+    return jnp.moveaxis(g, 0, -1)
+
+
+def _tp_cols(comm, w, width: int, axis: int = 1):
+    """This model rank's ``width``-column block of ``w`` along ``axis``."""
+    r = comm.topo.global_rank()
+    return jax.lax.dynamic_slice_in_dim(w, r * width, width, axis=axis)
+
+
+def mlp_tp(p: dict, x, cfg: ModelConfig, *, comm, strategy=None):
+    """Tensor-parallel MLP, bit-identical to :func:`mlp` — forward AND
+    per-rank gradients.
+
+    ALL matmuls are column-parallel: each model rank computes its f/tp
+    (then d/tp) output columns and an allgather over the model axis
+    reassembles the full activation — pure concatenation, so every
+    element is produced by exactly the same dot products as the
+    replicated path (the bit-identity the TP==replicated pin asserts).
+
+    The backward is a custom VJP (see :func:`_mlp_tp_bwd`) rather than
+    plain AD: transposing the forward allgathers would hand each rank a
+    tp-scaled PARTIAL cotangent (every rank's replicated loss copy
+    contributes through the collective transpose), which poisons every
+    upstream gradient's bit-identity.  The custom rule instead computes
+    column blocks of exactly the replicated backward's einsums and
+    allgathers the input cotangent full, so non-MLP grads stay bitwise
+    replicated over the model axis and the zero-padded MLP weight-grad
+    blocks assemble EXACTLY under one model-axis psum (adding zeros is
+    exact).
+    """
+    tp = comm.topo.p()
+    f, d = cfg.d_ff, cfg.d_model
+    if f % tp or d % tp:
+        raise ValueError(
+            f"tensor-parallel degree {tp} must divide d_ff={f} and "
+            f"d_model={d}")
+    return _mlp_tp(cfg.act, comm, strategy, x, p["w_up"],
+                   p.get("w_gate"), p["w_down"])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _mlp_tp(act, comm, strategy, x, w_up, w_gate, w_down):
+    y, _ = _mlp_tp_parts(act, comm, strategy, x, w_up, w_gate, w_down)
+    return y
+
+
+def _mlp_tp_parts(act, comm, strategy, x, w_up, w_gate, w_down):
+    tp = comm.topo.p()
+    f, d = w_up.shape[1], w_down.shape[1]
+    h = x @ _tp_cols(comm, w_up, f // tp)
+    if w_gate is not None:
+        h = _act(act)(x @ _tp_cols(comm, w_gate, f // tp)) * h
+    else:
+        h = _act(act)(h)
+    a = _allgather_last(comm, h, strategy)               # (.., f) full
+    y = a @ _tp_cols(comm, w_down, d // tp)
+    return _allgather_last(comm, y, strategy), a         # (.., d) full
+
+
+def _mlp_tp_fwd(act, comm, strategy, x, w_up, w_gate, w_down):
+    y, a = _mlp_tp_parts(act, comm, strategy, x, w_up, w_gate, w_down)
+    return y, (x, a, w_up, w_gate, w_down)
+
+
+def _mlp_tp_bwd(act, comm, strategy, res, dy):
+    """Column blocks of the replicated backward, assembled by gathers.
+
+    Every einsum below is a contiguous output slice of the corresponding
+    replicated-AD einsum with identical contraction dims, so each block
+    is bitwise equal to its slice of the replicated gradient; the input
+    cotangent dx is allgathered back to full so everything upstream of
+    the MLP sees exactly the replicated cotangent.
+    """
+    x, a, w_up, w_gate, w_down = res
+    tp = comm.topo.p()
+    f, d = w_up.shape[1], w_down.shape[1]
+    fl, dl = f // tp, d // tp
+    r = comm.topo.global_rank()
+
+    # dh slice: replicated dh = dy @ w_down.T; rows fl of w_down give cols
+    dh_loc = dy @ jax.lax.dynamic_slice_in_dim(w_down, r * fl, fl, 0).T
+    h1_loc = x @ _tp_cols(comm, w_up, fl)
+    if w_gate is None:
+        _, evjp = jax.vjp(_act(act), h1_loc)
+        (dh1_loc,) = evjp(dh_loc)
+        dhg_loc = None
+    else:
+        hg_loc = x @ _tp_cols(comm, w_gate, fl)
+        _, evjp = jax.vjp(lambda u, g: _act(act)(g) * u, h1_loc, hg_loc)
+        dh1_loc, dhg_loc = evjp(dh_loc)
+
+    bt = x.reshape(-1, x.shape[-1])                      # (B·T, d)
+    def _wgrad(u, v, shape, col, width):
+        blk = u.T @ v.reshape(-1, v.shape[-1])           # (in, width)
+        return jax.lax.dynamic_update_slice(
+            jnp.zeros(shape, blk.dtype), blk, (0, col))
+
+    dw_up = _wgrad(bt, dh1_loc, (x.shape[-1], f), r * fl, fl)
+    dw_gate = None if w_gate is None else \
+        _wgrad(bt, dhg_loc, (x.shape[-1], f), r * fl, fl)
+    dy_loc = jax.lax.dynamic_slice_in_dim(dy, r * dl, dl, dy.ndim - 1)
+    dw_down = _wgrad(a.reshape(-1, f), dy_loc, (f, d), r * dl, dl)
+
+    # full f-cotangents (exact concatenation of exact slices), then the
+    # d-column block of dx and a final gather back to full
+    dh1 = _allgather_last(comm, dh1_loc, strategy)
+    up_rows = jax.lax.dynamic_slice_in_dim(w_up, r * dl, dl, 0)
+    dx_loc = dh1 @ up_rows.T
+    if w_gate is not None:
+        dhg = _allgather_last(comm, dhg_loc, strategy)
+        gate_rows = jax.lax.dynamic_slice_in_dim(w_gate, r * dl, dl, 0)
+        dx_loc = dx_loc + dhg @ gate_rows.T
+    dx = _allgather_last(comm, dx_loc, strategy)
+    return dx, dw_up, dw_gate, dw_down
+
+
+_mlp_tp.defvjp(_mlp_tp_fwd, _mlp_tp_bwd)
+
+
+def mlp_tp_reduce(p: dict, x, cfg: ModelConfig, *, comm, strategy=None):
+    """Megatron-style TP MLP: column-parallel up/gate, ROW-parallel down,
+    one allreduce over the model axis on the output.
+
+    Halves the activation traffic of :func:`mlp_tp` (no intermediate
+    f-gather) but sums partial products across ranks, so it is equal to
+    :func:`mlp` only to rounding — pinned allclose, never bit-identical.
+    """
+    tp = comm.topo.p()
+    f = cfg.d_ff
+    if f % tp:
+        raise ValueError(
+            f"tensor-parallel degree {tp} must divide d_ff={f}")
+    fl = f // tp
+    h = x @ _tp_cols(comm, p["w_up"], fl)
+    if "w_gate" in p:
+        h = _act(cfg.act)(x @ _tp_cols(comm, p["w_gate"], fl)) * h
+    else:
+        h = _act(cfg.act)(h)
+    r = comm.topo.global_rank()
+    down = jax.lax.dynamic_slice_in_dim(p["w_down"], r * fl, fl, axis=0)
+    return comm.allreduce(h @ down, strategy=strategy)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,8 @@ lives in `moe_block_ep` and is exercised by the dbrx hillclimb.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -58,8 +60,14 @@ def _capacity(cfg: ModelConfig, T: int) -> int:
     return max(8, -(-c // 8) * 8)                         # round up to 8
 
 
-def moe_block(p: dict, x, cfg: ModelConfig):
-    """Capacity-based dispatch; returns (out (B,T,d), aux_loss)."""
+def _dispatch_buffer(p: dict, x, cfg: ModelConfig):
+    """Route + slot-assign + scatter tokens into the (B, E, C, d) buffer.
+
+    Shared verbatim between :func:`moe_block` and :func:`moe_block_ep` so
+    the EP-vs-gather bit-identity pin compares only the expert-FFN data
+    path, never two divergent dispatch implementations.  Returns
+    ``(buf, slot, keep, top_p, aux, C)``.
+    """
     B, T, d = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
     C = _capacity(cfg, T)
@@ -90,6 +98,28 @@ def moe_block(p: dict, x, cfg: ModelConfig):
     buf = jnp.zeros((B, E * C + 1, d), x.dtype)
     buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, xe)
     buf = pin_act(buf[:, :-1].reshape(B, E, C, d))
+    return buf, slot, keep, top_p, aux, C
+
+
+def _combine(y, slot, keep, top_p, x, cfg: ModelConfig):
+    """Scatter the expert outputs ``y`` (B, E, C, d) back to token order,
+    weighted by router prob.  Shared between gather and EP paths (the slot
+    position round-trips the alltoall unchanged, so no index metadata ever
+    crosses the wire)."""
+    B, T, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = y.shape[2]
+    y = y.reshape(B, E * C, d)
+    y = jnp.concatenate([y, jnp.zeros((B, 1, d), y.dtype)], axis=1)
+    gathered = jax.vmap(lambda b, s: b[s])(y, slot)       # (B,TK,d)
+    gathered = pin_act(gathered)
+    w = (top_p.reshape(B, T * K) * keep).astype(x.dtype)
+    return (gathered * w[..., None]).reshape(B, T, K, d).sum(axis=2)
+
+
+def moe_block(p: dict, x, cfg: ModelConfig):
+    """Capacity-based dispatch; returns (out (B,T,d), aux_loss)."""
+    buf, slot, keep, top_p, aux, _ = _dispatch_buffer(p, x, cfg)
 
     # --- expert FFN (batched over E; d_ff sharded over "model") ---
     h = jnp.einsum("becd,edf->becf", buf, p["w_up"])
@@ -100,12 +130,181 @@ def moe_block(p: dict, x, cfg: ModelConfig):
     h = pin_act(h, shard_last=True)                       # f over "model"
     y = jnp.einsum("becf,efd->becd", h, p["w_down"])      # (B,E,C,d)
     y = pin_act(y)
+    return _combine(y, slot, keep, top_p, x, cfg), aux
 
-    # --- scatter back, weighted by router prob ---
-    y = y.reshape(B, E * C, d)
-    y = jnp.concatenate([y, jnp.zeros((B, 1, d), y.dtype)], axis=1)
-    gathered = jax.vmap(lambda b, s: b[s])(y, slot)       # (B,TK,d)
-    gathered = pin_act(gathered)
-    w = (top_p.reshape(B, T * K) * keep).astype(x.dtype)
-    out = (gathered * w[..., None]).reshape(B, T, K, d).sum(axis=2)
-    return out, aux
+
+def _nested_fold(parts, n: int, N: int):
+    """Sum per-source partials in the zero3 reduce-scatter's association.
+
+    The flat gather-path gradient sync is RS(node) then psum_scatter(lane)
+    — per element that is an ascending fold over node ranks inside each
+    lane, then an ascending fold over lanes (XLA CPU all-reduce is an
+    ascending left-fold; pinned empirically by the EP bit-identity test).
+    ``parts`` is indexed by global rank s = lane·n + node.
+    """
+    lanes = []
+    for l in range(N):
+        a = parts[l * n]
+        for j in range(1, n):
+            a = a + parts[l * n + j]
+        lanes.append(a)
+    tot = lanes[0]
+    for l in range(1, N):
+        tot = tot + lanes[l]
+    return tot
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ep_ffn(act: str, topo, z, w_up, w_gate, w_down):
+    """Local expert FFN over received tokens, z: (s, e, b, c, d).
+
+    Forward is the plain einsum path (contractions over d/f only — every
+    output element bitwise matches :func:`moe_block`'s FFN).  The custom
+    backward exists purely for BIT-identity of the weight grads with the
+    gather path under ``lane_zero3``: plain AD would contract (s, b, c)
+    in one dot, while the gather path computes a per-chip partial and
+    reduce-scatters — a different summation association.  The backward
+    therefore computes one partial einsum per source chip and folds them
+    with :func:`_nested_fold`.
+    """
+    h = jnp.einsum("sebcd,edf->sebcf", z, w_up)
+    if w_gate is not None:
+        a = _act(act)(jnp.einsum("sebcd,edf->sebcf", z, w_gate)) * h
+    else:
+        a = _act(act)(h)
+    return jnp.einsum("sebcf,efd->sebcd", a, w_down)
+
+
+def _ep_ffn_fwd(act, topo, z, w_up, w_gate, w_down):
+    return _ep_ffn(act, topo, z, w_up, w_gate, w_down), \
+        (z, w_up, w_gate, w_down)
+
+
+def _ep_ffn_bwd(act, topo, res, dy):
+    z, w_up, w_gate, w_down = res
+    n, N = topo.n(), topo.N()
+    S = n * N
+    fa = _act(act)
+    h1 = jnp.einsum("sebcd,edf->sebcf", z, w_up)
+    if w_gate is None:
+        a, elem_vjp = jax.vjp(fa, h1)
+    else:
+        hg = jnp.einsum("sebcd,edf->sebcf", z, w_gate)
+        # jax.vjp of the exact gating expression reproduces the same
+        # elementwise cotangent formulas the gather path's AD emits
+        a, elem_vjp = jax.vjp(lambda u, g: fa(g) * u, h1, hg)
+    da = jnp.einsum("sebcd,efd->sebcf", dy, w_down)
+    if w_gate is None:
+        (dh1,) = elem_vjp(da)
+        dhg = None
+    else:
+        dh1, dhg = elem_vjp(da)
+
+    def _acc(u, v, spec):
+        return _nested_fold(
+            [jnp.einsum(spec, u[s], v[s]) for s in range(S)], n, N)
+
+    dw_up = _acc(z, dh1, "ebcd,ebcf->edf")
+    dw_gate = None if w_gate is None else _acc(z, dhg, "ebcd,ebcf->edf")
+    dw_down = _acc(a, dy, "ebcf,ebcd->efd")
+    dz = jnp.einsum("sebcf,edf->sebcd", dh1, w_up)
+    if w_gate is not None:
+        dz = dz + jnp.einsum("sebcf,edf->sebcd", dhg, w_gate)
+    return dz, dw_up, dw_gate, dw_down
+
+
+_ep_ffn.defvjp(_ep_ffn_fwd, _ep_ffn_bwd)
+
+
+def moe_block_ep(p: dict, x, cfg: ModelConfig, *, comm, experts=None,
+                 ep_blocks: int = 1, strategy=None):
+    """Expert-parallel MoE block: the paper's decomposed alltoall applied
+    over the expert axis (§3.5 alltoall mock-up on the dispatch/combine
+    hops).
+
+    Chip with global rank r owns the contiguous expert block
+    ``[r·E/p, (r+1)·E/p)``; the (B, E, C, d) dispatch buffer is exchanged
+    dst-major through ``comm.moe_route`` (an alltoall resolved through the
+    ``("moe_route", strategy)`` registry cells), each chip runs the FFN
+    for its OWN experts over every source chip's tokens, and a second
+    moe_route returns the outputs — two alltoalls of 1/E-expert payload
+    replacing the full expert-weight gather.  The slot buffer layout is
+    byte-identical to :func:`moe_block`'s, so with ``ep_blocks=1`` the
+    forward is bit-identical to the gather path (the einsums contract
+    over d/f only; b, c, s are batch dims).
+
+    ``experts``: dict of expert weights (w_up/w_down[/w_gate]) whose
+    leading dim is either E (replicated masters — this chip's block is
+    dynamic-sliced out) or E/p (a never-gathered ZeRO-3-style expert
+    master, already local).  ``None`` reads them from ``p``.
+
+    ``ep_blocks > 1`` software-pipelines the capacity dimension: the
+    dispatch alltoall of block j+1 is issued before the expert FFN of
+    block j, so routing communication overlaps expert compute (pinned by
+    the ``collective_compute_concurrency`` HLO proof).  Requires
+    ``ep_blocks | C``.
+    """
+    B, T, d = x.shape
+    E = cfg.num_experts
+    topo = comm.topo
+    psz = topo.p()
+    if E % max(psz, 1):
+        raise ValueError(
+            f"expert-parallel requires num_experts % p == 0, got "
+            f"E={E}, p={psz}")
+    Eloc = E // max(psz, 1)
+
+    buf, slot, keep, top_p, aux, C = _dispatch_buffer(p, x, cfg)
+    if ep_blocks < 1 or C % ep_blocks:
+        raise ValueError(
+            f"ep_blocks={ep_blocks} must be >= 1 and divide capacity "
+            f"C={C}")
+
+    w = experts if experts is not None else p
+    r = topo.global_rank()
+
+    def _loc(a):
+        """This chip's expert block: identity for an already-local
+        (E/p, ...) master, dynamic slice for a replicated (E, ...) one."""
+        if a.shape[0] == Eloc:
+            return a
+        return lax.dynamic_slice_in_dim(a, r * Eloc, Eloc, axis=0)
+
+    w_up, w_down = _loc(w["w_up"]), _loc(w["w_down"])
+    w_gate = _loc(w["w_gate"]) if "w_gate" in w else None
+
+    Cb = C // ep_blocks
+
+    def dispatch(chunk):
+        # (B, E, Cb, d) dst-major (experts contiguous per owner) →
+        # (p, Eloc, B, Cb, d) src-major: my experts' tokens from chip s
+        t = chunk.transpose(1, 0, 2, 3).reshape(E * B * Cb, d)
+        o = comm.moe_route(t, strategy=strategy)
+        return o.reshape(psz, Eloc, B, Cb, d)
+
+    def ffn(z):
+        # z: (s, e, b, c, d) with e local; contraction over d/f only so
+        # every output element matches moe_block's "becd,edf" bitwise;
+        # custom backward keeps the WEIGHT grads bitwise too (see _ep_ffn)
+        return _ep_ffn(cfg.act, topo, z, w_up, w_gate, w_down)
+
+    def combine_route(y):
+        # y's s axis IS the destination chip → already dst-major; the
+        # reverse alltoall returns (r, Eloc) = global expert r·Eloc+e
+        t = y.reshape(psz * Eloc * B * Cb, d)
+        o = comm.moe_route(t, strategy=strategy)
+        o = o.reshape(psz, Eloc, B, Cb, d)
+        return o.transpose(2, 0, 1, 3, 4).reshape(B, E, Cb, d)
+
+    chunks = [lax.slice_in_dim(buf, j * Cb, (j + 1) * Cb, axis=2)
+              for j in range(ep_blocks)]
+    cur = dispatch(chunks[0])
+    outs = []
+    for j in range(ep_blocks):
+        # prefetch: next block's routing alltoall is independent of this
+        # block's expert FFN — issued before it so the two can overlap
+        nxt = dispatch(chunks[j + 1]) if j + 1 < ep_blocks else None
+        outs.append(combine_route(ffn(cur)))
+        cur = nxt
+    ybuf = outs[0] if ep_blocks == 1 else jnp.concatenate(outs, axis=2)
+    return _combine(ybuf, slot, keep, top_p, x, cfg), aux

@@ -1,0 +1,75 @@
+"""ParallelContext — trace-time routing for the third parallelism axis.
+
+The lane step builders (launch/steps.py, serve/steps.py) enter a
+:func:`parallel_context` INSIDE the step function, at trace time, so
+every layer body the step traces — including scan and remat bodies —
+sees the same tensor-parallel / expert-parallel configuration without
+threading extra arguments through every family's signature.  The model
+code (``transformer._ffn``, ``_scanned_stack_body``) consults
+:func:`parallel_ctx` and routes to :func:`repro.models.layers.mlp_tp`
+or :func:`repro.models.moe.moe_block_ep` when an axis is active.
+
+This mirrors the ``activation_batch_axes`` contextvar idiom in
+``models/layers.py``: the context is pure trace-time Python state, so it
+costs nothing in the lowered HLO and composes with ``jax.checkpoint``
+(remat replays happen inside the same trace, hence the same context).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional
+
+__all__ = ["ParallelContext", "parallel_ctx", "parallel_context"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """The active parallelism axes beyond data-parallel.
+
+    tp / tp_comm: tensor-parallel degree and the model-axis LaneComm the
+        TP activation collectives resolve through (``tp <= 1`` or
+        ``tp_comm is None`` disables TP routing).
+    tp_variant: ``"gather"`` (all-column-parallel + allgathers —
+        bit-identical to the replicated MLP) or ``"reduce"`` (Megatron
+        row-parallel down projection + allreduce).
+    tp_strategy / ep_strategy: explicit ``(collective, strategy)`` cell
+        override; None lets the communicator's config (``auto``) decide.
+    ep / ep_comm: expert-parallel token routing over ``ep_comm``'s
+        node×lane decomposition (the batch axes — every chip is an
+        expert owner).
+    ep_blocks: capacity-dim software pipelining depth of the routing
+        alltoall (1 = sequential, bit-identity mode).
+    ep_experts: ``lane_zero3`` only — the stacked (L, E/p, ...) local
+        expert tree injected per layer into the scan body (replicated
+        layouts slice their full expert masters by rank instead).
+    """
+    tp: int = 1
+    tp_comm: Optional[Any] = None
+    tp_variant: str = "gather"
+    tp_strategy: Optional[str] = None
+    ep: bool = False
+    ep_comm: Optional[Any] = None
+    ep_blocks: int = 1
+    ep_strategy: Optional[str] = None
+    ep_experts: Optional[Any] = None
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "parallel_ctx", default=ParallelContext())
+
+
+def parallel_ctx() -> ParallelContext:
+    """The active context (the all-defaults instance when none entered)."""
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def parallel_context(**kw):
+    """Enter a fresh :class:`ParallelContext` built from ``kw``."""
+    tok = _CTX.set(ParallelContext(**kw))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)

@@ -41,6 +41,7 @@ from .blockstack import (BlockSpec, ShardedBlocks, ShardedStack,
 # activation-sharding hints live in layers.py (shared with moe/ssm);
 # re-exported here for the launch layer.
 from .layers import activation_batch_axes, pin_act, pin_kv  # noqa: E402
+from .parallel import parallel_ctx  # noqa: E402
 
 
 def _pin(h):
@@ -148,9 +149,19 @@ def _attn_noncache(lp, h, cfg: ModelConfig, *, causal: bool, positions,
 
 def _ffn(lp, h, cfg: ModelConfig):
     hn = _norm(cfg, lp["ln2"], h)
+    ctx = parallel_ctx()
     if "moe" in lp:
-        out, aux = M.moe_block(lp["moe"], hn, cfg)
+        if ctx.ep and ctx.ep_comm is not None:
+            out, aux = M.moe_block_ep(lp["moe"], hn, cfg, comm=ctx.ep_comm,
+                                      ep_blocks=ctx.ep_blocks,
+                                      strategy=ctx.ep_strategy)
+        else:
+            out, aux = M.moe_block(lp["moe"], hn, cfg)
         return h + out, aux
+    if ctx.tp > 1 and ctx.tp_comm is not None:
+        tp_mlp = L.mlp_tp_reduce if ctx.tp_variant == "reduce" else L.mlp_tp
+        return h + tp_mlp(lp["mlp"], hn, cfg, comm=ctx.tp_comm,
+                          strategy=ctx.tp_strategy), 0.0
     return h + L.mlp(lp["mlp"], hn, cfg), 0.0
 
 
@@ -341,8 +352,20 @@ def _hybrid_forward(params, cfg: ModelConfig, h, positions, remat):
 
 def _scanned_stack_body(cfg, params, *, positions, enc_out, remat):
     """Per-layer body of the scanned attention families (dense/vlm/moe/
-    audio): identical math to the replicated layer scan."""
+    audio): identical math to the replicated layer scan.
+
+    Under expert-parallel ``lane_zero3`` the expert weights live OUTSIDE
+    the flat stack in a never-gathered (L, E/p, ...) local master
+    (``ParallelContext.ep_experts``); layer i's row is sliced out here
+    and merged into ``lp["moe"]`` so the block math below is untouched.
+    """
     def body(h, lp, i):
+        experts = parallel_ctx().ep_experts
+        if experts is not None and "moe" in lp:
+            row = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                experts)
+            lp = {**lp, "moe": {**lp["moe"], **row}}
         h, a = _dense_block(lp, h, cfg, positions=positions,
                             enc_out=enc_out)
         return _pin(h), a

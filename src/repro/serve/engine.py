@@ -122,7 +122,7 @@ class ContinuousBatcher:
                  hosting: str = "replicated", mesh=None,
                  step: Optional[ServeStep] = None,
                  buckets: tuple = DEFAULT_BUCKETS,
-                 prefetch_blocks: int = 0):
+                 prefetch_blocks: int = 0, model_parallel: int = 1):
         self.cfg = cfg
         self.slots = int(slots)
         self.max_seq = int(max_seq)
@@ -141,7 +141,8 @@ class ContinuousBatcher:
             self.step = build_serve_step(
                 cfg, max_seq=self.max_seq, slots=self.slots,
                 hosting=hosting, mesh=mesh,
-                prefetch_blocks=prefetch_blocks)
+                prefetch_blocks=prefetch_blocks,
+                model_parallel=model_parallel)
         self.hosted = self.step.prepare(params)
         self.state = self.step.init_state()
         self._active: dict[int, Request] = {}

@@ -70,6 +70,13 @@ class ServeContext:
     mesh: Any = None
     prefetch_blocks: int = 0
     kv_strategy: str = "lane"
+    # tensor-parallel degree for the hosted forwards: the mesh's "model"
+    # axis (must equal this size) runs the MLP activation allgathers
+    # through model-axis (collective, strategy) cells; 1 = off.  zero3
+    # hosting only — it composes the 1/p weight gather (batch axes) with
+    # the TP activation collectives (model axis), the serving face of
+    # the 3D pods × data × model mesh
+    model_parallel: int = 1
 
 
 @dataclasses.dataclass
@@ -112,15 +119,22 @@ def serve_hostings() -> tuple:
 def build_serve_step(cfg: ModelConfig, *, max_seq: int, slots: int,
                      hosting: str = "replicated", mesh=None,
                      prefetch_blocks: int = 0,
-                     kv_strategy: str = "lane") -> ServeStep:
+                     kv_strategy: str = "lane",
+                     model_parallel: int = 1) -> ServeStep:
     """Resolve ``hosting`` from the serve_step registry and build."""
     if not has_impl("serve_step", hosting):
         raise ValueError(
             f"unknown serving hosting {hosting!r}; registered: "
             f"{serve_hostings()}")
+    if model_parallel > 1 and hosting != "lane_zero3":
+        raise ValueError(
+            f"model_parallel > 1 needs hosting='lane_zero3' (got "
+            f"{hosting!r}); replicated hosting has no mesh to carry the "
+            f"'model' axis")
     ctx = ServeContext(cfg=cfg, max_seq=max_seq, slots=slots, mesh=mesh,
                        prefetch_blocks=prefetch_blocks,
-                       kv_strategy=kv_strategy)
+                       kv_strategy=kv_strategy,
+                       model_parallel=model_parallel)
     return get_impl("serve_step", hosting).fn(ctx)
 
 
@@ -226,6 +240,13 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
     ccfg = CommConfig(prefetch_blocks=ctx.prefetch_blocks)
     weights_cell = ("prefetch_allgather",
                     "blocking" if blocking else "lane_pipelined")
+    tp = max(ctx.model_parallel, 1)
+    if tp > 1:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if sizes.get("model", 1) != tp:
+            raise ValueError(
+                f"model_parallel={tp} needs a mesh 'model' axis of that "
+                f"size (mesh axes: {sizes})")
 
     # slot ownership follows the GLOBAL rank (lane-major, the scatter /
     # kv_splice block order); the weight masters keep the training
@@ -313,12 +334,25 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
             hspec_cache[key] = build(_hspec(hosted))
         return hspec_cache[key]
 
+    def _pctx():
+        """parallel_context of the hosted forwards: the TP activation
+        collectives trace inside it (no-op context when tp == 1).  The
+        TP forward is bitwise replicated over "model" (mlp_tp gathers
+        its outputs full), so the replicated out_specs stay sound."""
+        import contextlib
+        if tp == 1:
+            return contextlib.nullcontext()
+        from repro.models.parallel import parallel_context
+        return parallel_context(tp=tp, tp_comm=LaneComm(
+            LaneTopology(node_axes=(), lane_axis="model"), ccfg))
+
     def _prefill_local(hosted, toks, true_len, extra):
         comm = _comm()
         params = _assemble(hosted, comm)
         cache1 = init_cache(cfg, 1, ctx.max_seq, dtype=_dtype(cfg))
-        return prefill(params, cfg, toks, cache1, extra_embeds=extra,
-                       true_len=true_len)
+        with _pctx():
+            return prefill(params, cfg, toks, cache1, extra_embeds=extra,
+                           true_len=true_len)
 
     def prefill_step(hosted, toks, true_len, extra=None):
         # batch-1 prefill runs REPLICATED (every chip computes the same
@@ -336,7 +370,8 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
     def _decode_local(hosted, tok, state):
         comm = _comm()
         params = _assemble(hosted, comm)
-        return decode_step(params, cfg, tok, state)
+        with _pctx():
+            return decode_step(params, cfg, tok, state)
 
     def _decode_fn(hosted):
         return _get("decode", hosted, lambda hs: _wrap(
@@ -384,12 +419,14 @@ def _serve_zero3(ctx: ServeContext) -> ServeStep:
         spl = splice_fn.lower(st_t, st1_t, slot).compile().as_text()
         return {"decode": dec, "splice": spl}
 
+    cells = {"weights": weights_cell,
+             "kv": ("kv_splice", ctx.kv_strategy)}
+    if tp > 1:
+        cells["tp"] = ("allgather", "auto")
     return ServeStep(
         hosting="lane_zero3", cfg=cfg, ctx=ctx, prepare=prepare,
         init_state=init_state, prefill=prefill_step, decode=decode,
-        splice=splice,
-        collectives={"weights": weights_cell,
-                     "kv": ("kv_splice", ctx.kv_strategy)},
+        splice=splice, collectives=cells,
         debug_lower=debug_lower)
 
 

@@ -634,12 +634,14 @@ def _run_lane_state_step(cfg, run, opt, mesh, params, toks, labs, steps=1):
             jax.tree.map(np.asarray, p), jax.tree.map(np.asarray, o))
 
 
-def _unshard_zero3_params(cfg, p3):
+def _unshard_zero3_params(cfg, p3, ep=False):
     """Host (L, B, p, s) masters -> the replicated params tree (blocks
-    stacked tree + extras tree + replicated leftovers)."""
+    stacked tree + extras tree + replicated leftovers).  ``ep=True``
+    folds the natural-shape expert master back into the moe subtree."""
     from repro.launch.steps import zero3_stack_layouts
-    lays = zero3_stack_layouts(cfg)
-    out = {k: v for k, v in p3.items() if k not in ("blocks", "extras")}
+    lays = zero3_stack_layouts(cfg, ep=ep)
+    out = {k: v for k, v in p3.items()
+           if k not in ("blocks", "extras", "experts")}
     blocks = np.asarray(p3["blocks"])
     flat_b = blocks.reshape(lays["blocks"].length,
                             -1)[:, :lays["blocks"].row_elems]
@@ -647,6 +649,16 @@ def _unshard_zero3_params(cfg, p3):
     extras = np.asarray(p3["extras"])
     flat_e = extras.reshape(1, -1)[:, :lays["extras"].row_elems]
     out.update(lays["extras"].unflatten(flat_e))
+    if ep:
+        from repro.launch.steps import _abs_params, split_expert_stack
+        from repro.models.blockstack import block_stack_spec, split_params
+        stack_t, _, _ = split_params(block_stack_spec(cfg),
+                                     _abs_params(cfg))
+        _, exp_t = split_expert_stack(stack_t)
+        moe = dict(out["blocks"].get("moe", {}))
+        for k, v in p3["experts"].items():
+            moe[k] = np.asarray(v).astype(exp_t[k].dtype)
+        out["blocks"] = {**out["blocks"], "moe": moe}
     return out
 
 
@@ -1283,6 +1295,134 @@ def quorum_mean_drops_pod():
     for i in range(4):
         np.testing.assert_allclose(out[i], x[i], rtol=1e-6)
         np.testing.assert_allclose(out[i + 4], x[i], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# third parallelism axis: tensor-parallel / expert-parallel bit-identity
+# ---------------------------------------------------------------------------
+
+def _axis_run(cfg, **kw):
+    from repro.configs.base import RunConfig, SHAPES
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"], **kw)
+
+
+@case
+def ep_zero3_step_bitwise_matches_gather_moe():
+    """Tentpole acceptance: the expert-parallel lane_zero3 MoE step — two
+    ``moe_route`` alltoalls of 1/E-expert payload against a never-gathered
+    (L, E/p, ...) local expert master — is BIT-identical to the
+    gather-based lane_zero3 MoE step: the loss and EVERY updated
+    parameter (expert FFN weights included), over two chained steps so
+    the optimizer-moment path is covered too."""
+    from repro.optim import AdamWConfig
+    cfg, mesh, topo, n, N, params, toks, labs = _zero3_setup("dbrx-132b")
+    opt = AdamWConfig(weight_decay=0.0, clip_norm=1e9)
+    runG = _axis_run(cfg, gradsync="lane_zero3", fsdp_prefetch=2)
+    lossG, pG, _ = _run_lane_state_step(cfg, runG, opt, mesh, params,
+                                        toks, labs, steps=2)
+    runE = _axis_run(cfg, gradsync="lane_zero3", fsdp_prefetch=2,
+                     expert_parallel=True)
+    lossE, pE, _ = _run_lane_state_step(cfg, runE, opt, mesh, params,
+                                        toks, labs, steps=2)
+    assert float(lossE) == float(lossG), (float(lossE), float(lossG))
+    uG = _unshard_zero3_params(cfg, pG)
+    uE = _unshard_zero3_params(cfg, pE, ep=True)
+    err = _tree_max_err(uG, uE)
+    assert err == 0.0, f"EP zero3 params must be bit-identical: {err}"
+
+
+@case
+def ep_replicated_step_matches_gather_moe():
+    """EP through the replicated 'lane' step (every chip slices its own
+    expert block out of the replicated tree): matches the gather path to
+    tolerance.  The joint-axes grad-sync psum need not associate like the
+    gather path's dense expert-grad fold, so this pin is allclose — the
+    bitwise EP pin is the zero3 one above, where the fold is pinned."""
+    from repro.optim import AdamWConfig
+    cfg, mesh, topo, n, N, params, toks, labs = _zero3_setup("dbrx-132b")
+    opt = AdamWConfig(weight_decay=0.0, clip_norm=1e9)
+    lossG, pG, _ = _run_lane_state_step(
+        cfg, _axis_run(cfg, gradsync="lane"), opt, mesh, params, toks, labs)
+    lossE, pE, _ = _run_lane_state_step(
+        cfg, _axis_run(cfg, gradsync="lane", expert_parallel=True), opt,
+        mesh, params, toks, labs)
+    np.testing.assert_allclose(float(lossE), float(lossG), rtol=1e-6)
+    err = _tree_max_err(pG, pE)
+    assert err < 1e-5, err
+
+
+def _tp_step_matches(gradsync, bitwise, **kw):
+    """TP=2 over the mesh's 'model' axis against the TP=1 run of the same
+    step flavor.  mlp_tp's custom VJP hands each model rank the
+    zero-padded disjoint column block of the replicated gradient, so the
+    single assembly psum adds zeros — exact; the lane_zero3 flavor is
+    pinned BITWISE on loss and every master.  The replicated flavor pins
+    the loss exactly but the params only to tolerance: the TP=2 graph's
+    extra allgather/psum ops shift XLA's fusion boundaries in the
+    attention backward, reassociating its fp32 dot reductions (~1e-9 —
+    compiler scheduling, not TP math; the zero3 pin proves the math)."""
+    from repro.optim import AdamWConfig
+    cfg, mesh, topo, n, N, params, toks, labs = _zero3_setup()
+    opt = AdamWConfig(weight_decay=0.0, clip_norm=1e9)
+    loss1, p1, _ = _run_lane_state_step(
+        cfg, _axis_run(cfg, gradsync=gradsync, **kw), opt, mesh, params,
+        toks, labs, steps=2)
+    loss2, p2, _ = _run_lane_state_step(
+        cfg, _axis_run(cfg, gradsync=gradsync, model_parallel=2, **kw),
+        opt, mesh, params, toks, labs, steps=2)
+    assert float(loss2) == float(loss1), (float(loss2), float(loss1))
+    err = _tree_max_err(p1, p2)
+    if bitwise:
+        assert err == 0.0, f"TP zero3 step must be bit-identical: {err}"
+    else:
+        assert err < 1e-6, err
+
+
+@case
+def tp_step_matches_replicated():
+    _tp_step_matches("lane", bitwise=False)
+
+
+@case
+def tp_zero3_step_bitwise_matches_tp1():
+    _tp_step_matches("lane_zero3", bitwise=True, fsdp_prefetch=2)
+
+
+@case
+def ep_routing_alltoall_overlaps_expert_ffn():
+    """Structural §5 proof (collective_compute_concurrency over the layer
+    scan body): with ``ep_blocks=2`` the dispatch alltoall of capacity
+    block j+1 has NO ancestor relation to block j's expert-FFN dots —
+    routing communication can hide under expert compute — while the
+    sequential ``ep_blocks=1`` lowering chains every alltoall against
+    the FFN (negative control)."""
+    from repro.launch import hlo_stats
+    from repro.models import loss_fn
+    from repro.models.parallel import parallel_context
+    cfg, mesh, topo, n, N, params, toks, labs = _zero3_setup("dbrx-132b")
+    comm = LaneComm(topo, mesh=mesh)
+    rspec = jax.tree.map(lambda _: P(), params)
+
+    def lower(blocks):
+        def f(p, tok, lab):
+            with parallel_context(ep=True, ep_comm=comm,
+                                  ep_blocks=blocks):
+                return loss_fn(p, cfg, tok, lab)
+        sm = jax.shard_map(f, mesh=mesh,
+                           in_specs=(rspec, P(("pod", "data")),
+                                     P(("pod", "data"))),
+                           out_specs=P(), check_vma=False)
+        return jax.jit(sm).lower(params, toks,
+                                 labs).compile().as_text()
+
+    conc = lambda b: hlo_stats.collective_compute_concurrency(
+        lower(b), pod_size=4, coll_kinds=("all-to-all",))
+    pos = conc(2)
+    assert pos["concurrent"], \
+        "pipelined routing alltoall must be independent of expert FFN dots"
+    neg = conc(1)
+    assert not neg["concurrent"], \
+        f"sequential routing must chain alltoall and FFN: {neg['pairs'][:3]}"
 
 
 def main(argv):

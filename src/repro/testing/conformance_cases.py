@@ -354,6 +354,71 @@ _register("comm_unknown_strategy_lists_registry__t2",
 
 
 # ---------------------------------------------------------------------------
+# third parallelism axis (PR 10): the token-routing alltoall behind
+# expert parallelism ("moe_route" — its own registry cells, alltoall
+# semantics) and the TP activation collectives, which run through a
+# DEGENERATE node_axes=() communicator whose lane axis is the mesh's
+# "model" axis (exactly how launch/steps builds tp_comm).
+# ---------------------------------------------------------------------------
+
+def _b_moe_route(mesh, topo, dt, seed, strategy="lane"):
+    n, N = topo.sizes(mesh)
+    comm = LaneComm(topo, mesh=mesh)
+    p = n * N
+    xs = _payload(p, 3 * p, 2, dt, seed)
+    out = _run(mesh, topo,
+               lambda x: comm.moe_route(x, strategy=strategy), xs, dt)
+    _check(out, _ref.oracle_alltoall(xs), dt)
+
+
+for _tk in ("t3", "het", "n1", "N1"):
+    _seed += 1
+    _add("moe_route", _tk, "f32", _seed, builder=_b_moe_route)
+for _dt in ("bf16", "int32"):
+    _seed += 1
+    _add("moe_route", "t3", _dt, _seed, builder=_b_moe_route)
+_add("moe_route", "t3", "f32", 231, suffix="_native",
+     builder=lambda m, t, dt, s: _b_moe_route(m, t, dt, s,
+                                              strategy="native"))
+_register("moe_route_indivisible_raises__t2",
+          lambda: _expect_value_error("t2", "moe_route", 12))       # p=8∤12
+
+
+_TP_ORACLES = {
+    "allgather": lambda xs: _ref.oracle_allgather(xs),
+    "reduce_scatter": lambda xs: _ref.oracle_reduce_scatter(xs),
+    "allreduce": lambda xs: _ref.oracle_allreduce(xs),
+}
+
+
+def _b_tp_activation(coll, dt, seed, strategy="lane"):
+    """mlp_tp's activation collectives on the tp_comm topology: a single
+    'model' lane axis, NO node level (n=1 by construction, not by a
+    size-1 axis) — the degenerate decomposition every TP cell rides."""
+    def run():
+        mesh, _ = _make("t3")
+        topo = LaneTopology(node_axes=(), lane_axis="model")
+        comm = LaneComm(topo, mesh=mesh)
+        n, N = topo.sizes(mesh)
+        p = n * N
+        xs = _payload(p, 3 * p, 2, dt, seed)
+        out = _run(mesh, topo,
+                   lambda x: getattr(comm, coll)(x, strategy=strategy),
+                   xs, dt)
+        _check(out, _TP_ORACLES[coll](xs), dt)
+    return run
+
+
+for _coll in ("allgather", "reduce_scatter", "allreduce"):
+    for _dt in ("f32", "bf16"):
+        _seed += 1
+        _register(f"tp_{_coll}_model_axis__{_dt}",
+                  _b_tp_activation(_coll, _dt, _seed))
+_register("tp_allgather_model_axis_native__f32",
+          _b_tp_activation("allgather", "f32", 232, strategy="native"))
+
+
+# ---------------------------------------------------------------------------
 # deprecation shims: every legacy entry point must stay BIT-identical to
 # the LaneComm path (they delegate to the same registered impl; these
 # cases pin that the delegation itself doesn't drift)

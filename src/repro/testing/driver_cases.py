@@ -247,6 +247,88 @@ def driver_cross_layout_restore_chain():
 
 
 @case
+def driver_tp2_restores_tp1_ckpt_bitident():
+    """Third-axis restore (PR-10 satellite): a TP=2 run restores from a
+    TP=1 lane_zero3 checkpoint through the canonical flat order and hits
+    the SAME losses as the TP=1 resume of the same checkpoint.  The mesh
+    reshapes (2,4,1) → (2,2,2), so p changes 8 → 4 under the resume as
+    well — geometry-elastic AND tensor-parallel at once; the TP step
+    itself being bitwise vs TP=1 is pinned in collective_cases."""
+    import contextlib
+    import io
+    import re
+    import shutil
+    from repro.checkpoint import latest_step
+
+    def run(ck, steps, tp):
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            _train(["--arch", "llama3.2-3b", "--smoke", "--batch", "8",
+                    "--seq", "32", "--ckpt", ck, "--log-every", "1",
+                    "--ckpt-every", "2", "--gradsync", "lane_zero3",
+                    "--pods", "2", "--steps", str(steps),
+                    "--model-parallel", str(tp)])
+        return buf.getvalue()
+
+    def losses(out):
+        got = re.findall(r"step\s+(\d+)\s+loss\s+([\d.]+)", out)
+        assert got, out
+        return {int(s): l for s, l in got}
+
+    with tempfile.TemporaryDirectory() as td:
+        ck = f"{td}/ck"
+        run(ck, 2, tp=1)
+        assert latest_step(ck) == 2
+        ck_ref = f"{td}/ck_ref"
+        shutil.copytree(ck, ck_ref)
+        ref = losses(run(ck_ref, 4, tp=1))          # TP=1 resume: ground truth
+        out = run(ck, 4, tp=2)                      # TP=2 resume, same ckpt
+        assert "resumed from step 2" in out, out
+        got = losses(out)
+        for s in (2, 3):                            # steps are 0-indexed
+            assert got[s] == ref[s], (s, got[s], ref[s])
+        assert latest_step(ck) == 4
+
+
+@case
+def driver_ep_moe_roundtrip():
+    """Expert-parallel driver round trip: the MoE smoke arch trains under
+    lane_zero3 + --expert-parallel (never-gathered (L, E/p) expert
+    master, moe_route alltoalls), checkpoints the ep-flavored layout,
+    resumes from it, and its losses match the gather-based zero3 run of
+    the same seed step for step (EP==gather bitwise is pinned in
+    collective_cases; here the pin is the driver+checkpoint plumbing)."""
+    import contextlib
+    import io
+    import re
+    from repro.checkpoint import latest_step
+
+    def run(ck, steps, *, ep, blocks=1):
+        buf = io.StringIO()
+        extra = ["--expert-parallel", "--ep-blocks", str(blocks)] \
+            if ep else []
+        with contextlib.redirect_stdout(buf):
+            _train(["--arch", "dbrx-132b", "--smoke", "--batch", "8",
+                    "--seq", "16", "--ckpt", ck, "--log-every", "1",
+                    "--ckpt-every", "2", "--gradsync", "lane_zero3",
+                    "--pods", "2", "--steps", str(steps), *extra])
+        return buf.getvalue()
+
+    def losses(out):
+        return {int(s): l for s, l in
+                re.findall(r"step\s+(\d+)\s+loss\s+([\d.]+)", out)}
+
+    with tempfile.TemporaryDirectory() as td:
+        ref = losses(run(f"{td}/ckg", 2, ep=False))
+        out1 = run(f"{td}/cke", 2, ep=True, blocks=2)
+        got = losses(out1)
+        assert got == ref, (got, ref)
+        out2 = run(f"{td}/cke", 4, ep=True, blocks=2)   # ep→ep resume
+        assert "resumed from step 2" in out2, out2
+        assert latest_step(f"{td}/cke") == 4
+
+
+@case
 def fault_ladder_degraded_restart_bitident():
     """THE acceptance ladder: pod 1 stops heartbeating at step 2 (injected
     pod_lost), the driver degrades (quorum-masked steps with pod 1's

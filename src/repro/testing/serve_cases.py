@@ -92,6 +92,31 @@ def _b_zero3_sampled_replay():
 _register("zero3_sampled_replay_llama3.2-3b", _b_zero3_sampled_replay)
 
 
+def _b_tp_serve_identity(arch="llama3.2-3b", kind="short_chat"):
+    """Tensor-parallel zero3 hosting (PR 10): the decode/prefill MLPs run
+    through mlp_tp over the mesh's 'model' axis — tokens must be
+    byte-identical to both plain zero3 hosting and replicated hosting
+    (mlp_tp's forward is bitwise vs the replicated MLP, so TP serving is
+    a pure latency knob, never an accuracy one)."""
+    from repro.configs import resolve
+    from repro.models import init_model
+    cfg = resolve(arch, smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rep, _ = _serve(cfg, params, _reqs(cfg, kind))
+    z3, _ = _serve(cfg, params, _reqs(cfg, kind),
+                   hosting="lane_zero3", mesh=_mesh())
+    tp, stats = _serve(cfg, params, _reqs(cfg, kind),
+                       hosting="lane_zero3", mesh=_mesh(),
+                       model_parallel=2)
+    assert stats["hosting"] == "lane_zero3"
+    assert tp == rep, {k: (rep[k], tp[k]) for k in rep if rep[k] != tp[k]}
+    assert tp == z3, {k: (z3[k], tp[k]) for k in z3 if z3[k] != tp[k]}
+
+
+_register("tp_serve_identity_llama3.2-3b__short_chat",
+          _b_tp_serve_identity)
+
+
 def _b_ckpt_roundtrip(gradsync, kind):
     """Real training checkpoint (written by the driver under layout
     ``kind``) -> load_serve_params -> serve: the restored weights must

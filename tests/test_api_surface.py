@@ -60,6 +60,7 @@ EXPECTED_LANECOMM_METHODS = {
     "allgather": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "bcast": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "alltoall": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
+    "moe_route": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "reduce": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "gather": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
     "scatter": "(self, x, *, strategy: 'Optional[str]' = None, **kw)",
@@ -83,6 +84,7 @@ EXPECTED_STRATEGIES = {
     "reduce_scatter": ("native", "lane"),
     "allgather": ("native", "lane"),
     "alltoall": ("native", "lane"),
+    "moe_route": ("native", "lane"),
     "scan": ("native", "lane"),
     "bcast": ("native", "lane", "lane_pipelined"),
     "reduce": ("native", "lane", "lane_pipelined"),

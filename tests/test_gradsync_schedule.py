@@ -445,7 +445,8 @@ def test_bench_schema_flags_missing_strategy():
     import sys, pathlib
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     from benchmarks.check_bench_schema import (check, REQUIRED_STRATEGIES,
-                                               REQUIRED_FAMILIES)
+                                               REQUIRED_FAMILIES,
+                                               REQUIRED_THIRD_AXIS)
     from repro.comm import strategies_for
     from repro.models.blockstack import block_stack_families
     # the requirements are DERIVED from the registries (satellite
@@ -453,6 +454,11 @@ def test_bench_schema_flags_missing_strategy():
     # list unnoticed
     assert REQUIRED_STRATEGIES == set(strategies_for("grad_sync")) | {"auto"}
     assert REQUIRED_FAMILIES == set(block_stack_families())
+    assert REQUIRED_THIRD_AXIS == (
+        {("moe_route", s)
+         for s in (*strategies_for("moe_route"), "auto")}
+        | {("tp_allgather", s)
+           for s in (*strategies_for("allgather"), "auto")})
     row = {"strategy": "native", "selected": "native", "num_buckets": 0,
            "avg_us": 1.0, "min_us": 1.0, "max_abs_err_vs_native": 0.0,
            "model_pred_us": 1.0, "predicted_us": None,
@@ -461,6 +467,12 @@ def test_bench_schema_flags_missing_strategy():
             "extra_elems": 1, "num_layers": 1, "num_blocks": 1,
             "avg_us": 1.0, "min_us": 1.0, "gather_exact": True,
             "hlo_concurrent": True}
+    trow = {"payload_bytes": 4, "avg_us": 1.0, "min_us": 1.0,
+            "predicted_us": 1.0, "max_abs_err_vs_native": 0.0}
+    wire = {"arch": "a", "num_experts": 8, "capacity": 8,
+            "alltoall_bytes_per_layer": 1,
+            "expert_gather_bytes_per_layer": 9, "ratio": 0.111,
+            "bound": 0.25, "ok": True}
     doc = {"mesh": "2x4", "payload_elems": 1, "payload_bytes": 4,
            "auto_num_buckets": 1, "cost_model": {}, "smoke": True,
            "reps": 1, "hlo_per_computation": {}, "structure_ok": True,
@@ -469,8 +481,24 @@ def test_bench_schema_flags_missing_strategy():
            "results": [dict(row, strategy=s) for s in REQUIRED_STRATEGIES],
            "families_registered": sorted(REQUIRED_FAMILIES),
            "family_results": [dict(frow, family=f)
-                              for f in REQUIRED_FAMILIES]}
+                              for f in REQUIRED_FAMILIES],
+           "third_axis_results": [dict(trow, cell=c, strategy=s,
+                                       selected=s)
+                                  for c, s in REQUIRED_THIRD_AXIS],
+           "ep_wire": wire}
     assert check(doc) == []
+    # dropping any third-axis (cell, strategy) row fails the build, and
+    # so does a wire-volume regression past the 2/E bound
+    for c, s in REQUIRED_THIRD_AXIS:
+        bad = dict(doc, third_axis_results=[
+            r for r in doc["third_axis_results"]
+            if (r["cell"], r["strategy"]) != (c, s)])
+        errs = check(bad)
+        assert errs and "third-axis" in errs[0], ((c, s), errs)
+    assert any("ep_wire ok is false" in e
+               for e in check(dict(doc, ep_wire=dict(wire, ok=False))))
+    assert any("ep_wire missing" in e
+               for e in check(dict(doc, ep_wire={})))
     # dropping any required strategy (incl. the auto row) fails the build
     for s in REQUIRED_STRATEGIES:
         bad = dict(doc, results=[r for r in doc["results"]

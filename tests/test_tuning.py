@@ -361,6 +361,48 @@ def test_fit_is_clamped_and_degenerate_safe():
         fit_hw(TimingTable())
 
 
+def test_tune_restore_adopts_fitted_hw(capsys):
+    """PR-10 satellite: on --tune restore the driver feeds fit_hw output
+    through core.costmodel.set_hw BEFORE step building, so a planted
+    timing cache reprices the closed-form costs for the whole run — and
+    the adoption (or its skip) is recorded in the run log."""
+    from repro.comm.costs import native_cost
+    from repro.launch.train import _adopt_fitted_hw
+    true = HW(alpha_ici=3e-6, ici_bw=40e9, alpha_dcn=25e-6, dcn_bw=5e9)
+    x = np.array([true.alpha_ici, 1 / true.ici_bw,
+                  true.alpha_dcn, 1 / true.dcn_bw])
+    sig = topology_signature(4, 2, platform="cpu", device_kind="cpu")
+    entries = [
+        _entry("grad_sync", strat, sig, payload,
+               float(design_row("grad_sync", strat, 4, 2, payload) @ x)
+               * 1e6)
+        for payload in (1 << 12, 1 << 15, 1 << 18)
+        for strat in ("native", "lane", "lane_pipelined")
+    ]
+    c = native_cost("allreduce")
+    base = c(4, 2, 1 << 20, CommConfig())
+    prev = get_hw()
+    try:
+        _adopt_fitted_hw(Tuner(TimingTable(entries), platform="cpu",
+                               device_kind="cpu"))
+        hw = get_hw()
+        assert hw.ici_bw == pytest.approx(40e9, rel=1e-3)
+        assert hw.dcn_bw == pytest.approx(5e9, rel=1e-3)
+        # the adopted constants reprice dispatch costs at CALL time
+        assert c(4, 2, 1 << 20, CommConfig()) != pytest.approx(base)
+        assert "cost-model HW adopted" in capsys.readouterr().out
+    finally:
+        set_hw(prev)
+    # no tuner (no --tune) and an unfittable cache are recorded no-ops:
+    # the shipped constants stay active
+    _adopt_fitted_hw(None)
+    assert get_hw() == prev
+    _adopt_fitted_hw(Tuner(TimingTable(), platform="cpu",
+                           device_kind="cpu"))
+    assert get_hw() == prev
+    assert "adoption skipped" in capsys.readouterr().out
+
+
 def test_active_hw_reprices_costs():
     """set_hw flows into the closed-form costs at CALL time (the fitted
     constants reprice every ranking without re-registering anything)."""
